@@ -1,0 +1,48 @@
+"""Table 3: template expressiveness — lines of TeShu template code per shuffle
+algorithm, plus a byte/time profile of each template on a common workload."""
+from __future__ import annotations
+
+from repro.core import SUM, TEMPLATES, TeShuService, datacenter, template_loc
+
+from .common import CsvOut, paper_topology, zipf_shards
+
+
+def table3() -> CsvOut:
+    out = CsvOut("table3_template_loc",
+                 ["algorithm", "pattern", "loc", "paper_loc"])
+    paper = {"vanilla_push": 5, "coordinated": 9, "bruck": 11,
+             "two_level": 18, "network_aware": 48}
+    for tid, ref_loc in paper.items():
+        t = TEMPLATES[tid]
+        out.add(algorithm=tid, pattern=t.mode, loc=t.loc(), paper_loc=ref_loc)
+    return out
+
+
+def template_profile() -> CsvOut:
+    """Same workload through every template: bytes per level + modelled time."""
+    out = CsvOut("template_profile",
+                 ["template", "total_mb", "global_mb", "modelled_ms"])
+    # 16 workers (square, for two_level) across 2 racks so the global
+    # boundary is actually exercised
+    topo = datacenter(4, 2, 2, oversubscription=4.0)
+    nw = topo.num_workers
+    for tid in ("vanilla_push", "vanilla_pull", "coordinated", "bruck",
+                "two_level", "network_aware"):
+        svc = TeShuService(topo)
+        bufs = zipf_shards(nw, 20_000, 20_000, seed=3)
+        svc.shuffle(tid, bufs, list(range(nw)), list(range(nw)),
+                    comb_fn=SUM, rate=0.01)
+        st = svc.stats()
+        out.add(template=tid, total_mb=st["total_bytes"] / 1e6,
+                global_mb=st["bytes_per_level"].get("global", 0) / 1e6,
+                modelled_ms=st["modelled_time_s"] * 1e3)
+    return out
+
+
+def run() -> list[CsvOut]:
+    return [table3(), template_profile()]
+
+
+if __name__ == "__main__":
+    for t in run():
+        t.emit()

@@ -1,0 +1,54 @@
+"""Shared benchmark infrastructure: workloads, topologies, CSV emission."""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+
+import numpy as np
+
+from repro.core import Msgs, TeShuService, datacenter
+
+
+def paper_topology(oversubscription: float = 10.0, *, workers_per_server=4,
+                   servers_per_rack=5, racks=2) -> "datacenter":
+    """Container-scale analogue of the paper's testbed: 2 racks x 10 servers
+    (4 workers each here instead of 16 cores), 10 Gbps fabric, parameterized
+    oversubscription (10:1 / 4:1 / 1:1 per Table 4)."""
+    return datacenter(workers_per_server, servers_per_rack, racks,
+                      intra_server_bw=12.5e9, intra_rack_bw=1.25e9,
+                      oversubscription=oversubscription)
+
+
+def zipf_shards(nw: int, n_per: int, keys: int, *, alpha: float = 0.9,
+                width: int = 1, seed: int = 0) -> dict[int, Msgs]:
+    """Power-law keyed message buffers (web/social-graph stand-in)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, keys + 1, dtype=np.float64)
+    w = ranks ** -alpha
+    cdf = np.cumsum(w) / np.sum(w)
+    return {
+        wid: Msgs(np.searchsorted(cdf, rng.random(n_per)).astype(np.int64),
+                  rng.random((n_per, width)))
+        for wid in range(nw)
+    }
+
+
+class CsvOut:
+    """Collects rows and prints one CSV block per benchmark."""
+
+    def __init__(self, name: str, fields: list[str]):
+        self.name = name
+        self.fields = fields
+        self.rows: list[dict] = []
+
+    def add(self, **row) -> None:
+        self.rows.append(row)
+
+    def emit(self, file=sys.stdout) -> None:
+        print(f"\n# === {self.name} ===", file=file)
+        w = csv.DictWriter(file, fieldnames=self.fields)
+        w.writeheader()
+        for r in self.rows:
+            w.writerow({k: (f"{v:.4g}" if isinstance(v, float) else v)
+                        for k, v in r.items()})

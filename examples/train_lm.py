@@ -1,0 +1,82 @@
+"""End-to-end LM training driver (deliverable b): ~100M-parameter model,
+a few hundred steps, full production loop — data pipeline with prefetch,
+AdamW + cosine schedule, grad accumulation, async atomic checkpoints,
+restart-on-relaunch, and shuffle-manager step records.
+
+Container defaults keep one CPU core busy for a few minutes; pass
+--d-model 768 --layers 12 --steps 300 for the full ~100M/300-step run.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--moe]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.launch.train import train
+from repro.models.config import ModelConfig, MoEConfig
+import repro.configs as configs
+
+
+def build_config(args) -> ModelConfig:
+    moe = None
+    if args.moe:
+        moe = MoEConfig(num_experts=8, num_shared=1, top_k=2,
+                        d_ff_expert=args.d_model * 2, capacity_factor=1.5,
+                        dispatch="teshu")
+    return ModelConfig(
+        name=f"example-{args.d_model}d{args.layers}L",
+        family="moe" if args.moe else "dense",
+        n_layers=args.layers,
+        d_model=args.d_model,
+        n_heads=max(4, args.d_model // 64),
+        n_kv_heads=max(2, args.d_model // 128),
+        d_head=64,
+        d_ff=args.d_model * 4,
+        vocab=32_768,
+        moe=moe,
+        dtype="float32",
+        remat=False,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--n-micro", type=int, default=2)
+    ap.add_argument("--moe", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/teshu_train_ckpt")
+    args = ap.parse_args()
+
+    cfg = build_config(args)
+    print(f"model: {cfg.name}, {cfg.num_params()/1e6:.1f}M params "
+          f"({cfg.num_active_params()/1e6:.1f}M active), "
+          f"{len(jax.devices())} device(s)")
+
+    # register as a one-off arch so the shared driver can look it up
+    module = type("cfgmod", (), {"CONFIG": cfg, "SMOKE": cfg})
+    configs._MODULES[cfg.name] = cfg.name
+    import sys
+    sys.modules[f"repro.configs.{cfg.name}"] = module
+
+    out = train(cfg.name, smoke=True, steps=args.steps,
+                global_batch=args.batch, seq_len=args.seq,
+                ckpt_dir=args.ckpt_dir, ckpt_every=25,
+                n_micro=args.n_micro, lr=6e-4, log_every=5)
+    losses = [h["loss"] for h in out["history"]]
+    if losses:
+        print(f"\nloss: first={losses[0]:.4f} min={min(losses):.4f} "
+              f"last={losses[-1]:.4f} over {len(losses)} steps")
+        print("training", "improved" if losses[-1] < losses[0] else
+              "did not improve", "(markov synthetic data)")
+    # straggler/progress records from the shuffle manager
+    mgr = out["manager"]
+    print(f"manager: {len(mgr.records())} step records journaled")
+
+
+if __name__ == "__main__":
+    main()

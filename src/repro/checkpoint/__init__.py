@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing: atomic sharded save/restore + elastic reshard."""
+from .checkpoint import (CheckpointManager, save_checkpoint, restore_checkpoint,
+                         latest_step, tree_paths)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "latest_step", "tree_paths"]

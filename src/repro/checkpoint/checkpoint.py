@@ -1,0 +1,204 @@
+"""Atomic, sharded, elastic checkpointing.
+
+Layout (one directory per step)::
+
+    <dir>/step_000042/
+        manifest.json          # leaf paths, shapes, dtypes, tree structure, metadata
+        arr_00000.npy ...      # one file per pytree leaf (np.save, fp32/bf16-as-u16)
+
+Guarantees:
+
+* **Atomicity** — writes go to ``step_XXXX.tmp-<pid>`` and are ``os.rename``d into
+  place only after ``manifest.json`` is fsynced; a crash mid-save never corrupts the
+  latest complete checkpoint (restart scans for complete dirs only).
+* **Elasticity** — restore takes the *target* mesh/shardings, not the save-time ones:
+  leaves are loaded on host and ``jax.device_put`` against the new sharding, so a
+  512-chip checkpoint restores onto a 256-chip mesh (or a reshaped one) unchanged.
+  This is the mesh-reshape restart path for node failures.
+* **Async** — ``CheckpointManager.save_async`` snapshots to host memory synchronously
+  (cheap) and writes to disk on a background thread (training continues).
+* **Retention** — keep-last-k garbage collection.
+
+bfloat16 has no numpy dtype in this container; leaves are stored as uint16 with the
+true dtype recorded in the manifest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_paths(tree: Pytree) -> list[str]:
+    paths = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                              for p in path))
+    return paths
+
+
+def _to_numpy(x) -> tuple[np.ndarray, str]:
+    arr = np.asarray(jax.device_get(x))
+    dtype = str(x.dtype)
+    if dtype == "bfloat16":
+        arr = arr.view(np.uint16)
+    return arr, dtype
+
+
+def _from_numpy(arr: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16":
+        return arr            # device_put will view-cast below
+    return arr
+
+
+def save_checkpoint(directory: str, step: int, tree: Pytree,
+                    metadata: dict | None = None) -> str:
+    """Write one atomic checkpoint; returns the final directory path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + f".tmp-{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    entries = []
+    for i, leaf in enumerate(leaves):
+        arr, dtype = _to_numpy(leaf)
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        entries.append({"file": fname, "shape": list(arr.shape), "dtype": dtype})
+    manifest = {
+        "step": step,
+        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex(),
+        "paths": tree_paths(tree),
+        "entries": entries,
+        "metadata": metadata or {},
+    }
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _complete_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and ".tmp" not in name and \
+                os.path.exists(os.path.join(directory, name, "manifest.json")):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = _complete_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, step: int | None, target: Pytree,
+                       shardings: Pytree | None = None) -> tuple[Pytree, dict]:
+    """Restore into the structure of ``target`` (shapes must match), resharding
+    onto ``shardings`` (a pytree of ``jax.sharding.Sharding`` or None leaves).
+
+    ``target`` may be a pytree of arrays or ShapeDtypeStructs — only its structure,
+    shapes and dtypes are used.  Returns (tree, metadata).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    t_leaves, treedef = jax.tree_util.tree_flatten(target)
+    if len(t_leaves) != len(manifest["entries"]):
+        raise ValueError(f"checkpoint has {len(manifest['entries'])} leaves, "
+                         f"target has {len(t_leaves)}")
+    s_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                if shardings is not None else [None] * len(t_leaves))
+    out = []
+    for leaf, entry, shard in zip(t_leaves, manifest["entries"], s_leaves):
+        arr = np.load(os.path.join(path, entry["file"]))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {entry['file']}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        dtype = entry["dtype"]
+        if dtype == "bfloat16":
+            val = jax.device_put(arr, shard) if shard is not None else arr
+            val = jax.lax.bitcast_convert_type(jnp.asarray(val), jnp.bfloat16)
+        else:
+            val = jax.device_put(arr.astype(dtype), shard) if shard is not None \
+                else jnp.asarray(arr.astype(dtype))
+        out.append(val)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]
+
+
+class CheckpointManager:
+    """Retention + async writes around save/restore."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree: Pytree, metadata: dict | None = None) -> str:
+        path = save_checkpoint(self.directory, step, tree, metadata)
+        self._gc()
+        return path
+
+    def save_async(self, step: int, tree: Pytree,
+                   metadata: dict | None = None) -> None:
+        """Snapshot to host now; write on a background thread."""
+        self.wait()
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x))
+                            if str(x.dtype) != "bfloat16"
+                            else np.asarray(jax.device_get(x)).view(np.uint16), tree)
+        dtypes = jax.tree.map(lambda x: str(x.dtype), tree)
+
+        def write():
+            # re-wrap so dtype info is preserved through _to_numpy
+            class _Typed:
+                def __init__(self, a, d):
+                    self._a, self.dtype = a, d
+                    self.shape = a.shape
+
+                def __array__(self):
+                    return self._a
+            typed = jax.tree.map(lambda a, d: _Typed(a, d), host, dtypes)
+            save_checkpoint(self.directory, step, typed, metadata)
+            self._gc()
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, target: Pytree, shardings: Pytree | None = None,
+                step: int | None = None) -> tuple[Pytree, dict]:
+        self.wait()
+        return restore_checkpoint(self.directory, step, target, shardings)
+
+    def latest(self) -> int | None:
+        return latest_step(self.directory)
+
+    def _gc(self) -> None:
+        steps = _complete_steps(self.directory)
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,28 @@
+"""TeShu core: the paper's contribution — templated, adaptive, sampled shuffles."""
+from .adaptive import EffCost, compute_eff_cost
+from .coscheduler import CoflowRequest, CoflowScheduler, ScheduleEntry
+from .manager import ShuffleManager, ShuffleRecord
+from .messages import (COMBINERS, HASH_PART, MAX, MIN, SUM, Combiner, Msgs, PartFn,
+                       partition, range_part, splitmix64)
+from .primitives import CostLedger, LocalCluster, ShuffleArgs, WorkerContext
+from .sampling import (estimate_reduction_ratio, group_of, num_groups_for_rate,
+                       partition_aware_sample, random_sample, reduction_ratio)
+from .service import TeShuService
+from .templates import (TEMPLATES, ShuffleResult, ShuffleTemplate, register_template,
+                        run_shuffle, template_loc)
+from .topology import (NetworkTopology, Level, datacenter, degrade_links,
+                       from_mesh_axes, roofline_times, dominant_term,
+                       roofline_fraction)
+
+__all__ = [
+    "EffCost", "compute_eff_cost", "CoflowRequest", "CoflowScheduler",
+    "ScheduleEntry", "ShuffleManager", "ShuffleRecord",
+    "COMBINERS", "HASH_PART", "MAX", "MIN", "SUM", "Combiner", "Msgs", "PartFn",
+    "partition", "range_part", "splitmix64", "CostLedger", "LocalCluster",
+    "ShuffleArgs", "WorkerContext", "estimate_reduction_ratio", "group_of",
+    "num_groups_for_rate", "partition_aware_sample", "random_sample",
+    "reduction_ratio", "TeShuService", "TEMPLATES", "ShuffleResult",
+    "ShuffleTemplate", "register_template", "run_shuffle", "template_loc",
+    "NetworkTopology", "Level", "datacenter", "degrade_links", "from_mesh_axes",
+    "roofline_times", "dominant_term", "roofline_fraction",
+]

@@ -1,0 +1,60 @@
+"""$COMPUTE_EFF_COST — the adaptive decision at the heart of network-aware shuffling.
+
+At each hierarchy level the template asks: *if the workers in this group shuffle and
+combine locally first, does the data reduction pay for the extra local transfer?*
+
+    EFF  = time saved on every boundary the removed bytes would still have crossed
+         = (1 - r̂) · B_group · Σ_{levels above} 1/bw
+    COST = time of the local exchange itself + the combine compute
+         = B_group/ bw_level · (1 - 1/g)  +  B_group / combine_throughput
+
+where ``r̂`` is the reduction ratio estimated from the partition-aware sample, ``B_group``
+the total bytes held by the group's workers, and ``g`` the group size (a ``1/g`` of the
+data stays local during the exchange).  The stage executes iff ``EFF > COST`` — the
+same rule as Figure 3, lines 5/15.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .messages import Combiner, Msgs
+from .sampling import estimate_reduction_ratio
+from .topology import NetworkTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class EffCost:
+    eff: float
+    cost: float
+    reduction_ratio: float
+
+    @property
+    def beneficial(self) -> bool:
+        return self.eff > self.cost
+
+
+def compute_eff_cost(
+    topology: NetworkTopology,
+    level_name: str,
+    samples: list[Msgs],
+    group_bytes: int,
+    group_size: int,
+    combiner: Combiner | None,
+) -> EffCost:
+    """Evaluate one hierarchical stage from pooled partition-aware samples.
+
+    ``samples`` come from every worker in the shuffle (the sampling server pools
+    them), so duplication *across* workers — exactly what the local combine will
+    remove — is visible in the estimate.
+    """
+    if combiner is None or group_size <= 1:
+        return EffCost(eff=0.0, cost=0.0, reduction_ratio=1.0)
+    r_hat = estimate_reduction_ratio(samples, combiner)
+    li = topology.level_index(level_name)
+    lv = topology.levels[li]
+    saved_per_byte = topology.cost_per_byte_above(li)
+    eff = (1.0 - r_hat) * group_bytes * saved_per_byte
+    exchange_frac = 1.0 - 1.0 / group_size
+    cost = (group_bytes * exchange_frac) / lv.bw_bytes_per_s \
+        + group_bytes / lv.combine_bytes_per_s + lv.latency_s
+    return EffCost(eff=eff, cost=cost, reduction_ratio=r_hat)

@@ -1,0 +1,157 @@
+"""The Shuffle Manager (paper §3.3): a central controller deployed as a service.
+
+Responsibilities implemented here, mapping 1:1 to the paper's description:
+
+* **store and serve templates** — operators ``install_template``; the first worker
+  request per (worker, template) is a synchronous RPC (simulated), later invocations
+  hit the worker-local cache and only fire an async record RPC.
+* **records** — every shuffle start/end at every worker allocates a record with
+  worker id, shuffle id, template id and timestamp.
+* **progress / stragglers** — records give per-worker durations; workers slower than
+  ``factor ×`` the median of completed peers (or started but unfinished long past it)
+  are flagged, enabling re-execution of a subset of participants (§6).
+* **fault tolerance** — records are journaled to an append-only JSONL log; the
+  manager state can be rebuilt from the journal (``recover``), and the journal can be
+  mirrored to replicas (``replicas=``), per the paper's replication note.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Iterable
+
+from .templates import TEMPLATES, ShuffleTemplate
+
+
+@dataclasses.dataclass
+class ShuffleRecord:
+    wid: int
+    shuffle_id: int
+    template_id: str
+    kind: str          # "start" | "end"
+    ts: float
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @staticmethod
+    def from_json(line: str) -> "ShuffleRecord":
+        return ShuffleRecord(**json.loads(line))
+
+
+class ShuffleManager:
+    """In-process stand-in for the manager service (RPCs become method calls)."""
+
+    def __init__(self, journal_path: str | None = None,
+                 replicas: Iterable[str] = (), clock=time.monotonic):
+        self._templates: dict[str, ShuffleTemplate] = dict(TEMPLATES)
+        self._records: list[ShuffleRecord] = []
+        self._worker_cache: set[tuple[int, str]] = set()
+        self._lock = threading.Lock()
+        self._clock = clock
+        self.rpc_count = {"sync": 0, "async": 0}
+        self._journal_paths = [p for p in ([journal_path] if journal_path else [])] \
+            + list(replicas)
+        self._journals = []
+        for p in self._journal_paths:
+            os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+            self._journals.append(open(p, "a", buffering=1))
+
+    # ---- template store ----------------------------------------------------
+    def install_template(self, template: ShuffleTemplate) -> None:
+        with self._lock:
+            self._templates[template.template_id] = template
+
+    def get_template(self, template_id: str, wid: int | None) -> ShuffleTemplate:
+        """Worker-side fetch.  First fetch per (worker, template) is a sync RPC;
+        subsequent calls are served from the worker-local cache (async record only)."""
+        with self._lock:
+            if wid is not None and (wid, template_id) not in self._worker_cache:
+                self.rpc_count["sync"] += 1
+                self._worker_cache.add((wid, template_id))
+            else:
+                self.rpc_count["async"] += 1
+            t = self._templates.get(template_id)
+        if t is None:
+            raise KeyError(f"template {template_id!r} not installed")
+        return t
+
+    @property
+    def templates(self) -> dict[str, ShuffleTemplate]:
+        return dict(self._templates)
+
+    # ---- records & journal ---------------------------------------------------
+    def _append(self, rec: ShuffleRecord) -> None:
+        with self._lock:
+            self._records.append(rec)
+            for j in self._journals:
+                j.write(rec.to_json() + "\n")
+
+    def record_start(self, wid: int, shuffle_id: int, template_id: str) -> None:
+        self._append(ShuffleRecord(wid, shuffle_id, template_id, "start", self._clock()))
+
+    def record_end(self, wid: int, shuffle_id: int, template_id: str) -> None:
+        self._append(ShuffleRecord(wid, shuffle_id, template_id, "end", self._clock()))
+
+    def records(self, shuffle_id: int | None = None) -> list[ShuffleRecord]:
+        with self._lock:
+            return [r for r in self._records
+                    if shuffle_id is None or r.shuffle_id == shuffle_id]
+
+    # ---- progress / stragglers -------------------------------------------------
+    def progress(self, shuffle_id: int) -> dict:
+        recs = self.records(shuffle_id)
+        started = {r.wid for r in recs if r.kind == "start"}
+        ended = {r.wid for r in recs if r.kind == "end"}
+        return {"started": sorted(started), "finished": sorted(ended),
+                "pending": sorted(started - ended)}
+
+    def durations(self, shuffle_id: int) -> dict[int, float]:
+        recs = self.records(shuffle_id)
+        t0 = {r.wid: r.ts for r in recs if r.kind == "start"}
+        t1 = {r.wid: r.ts for r in recs if r.kind == "end"}
+        return {w: t1[w] - t0[w] for w in t0 if w in t1}
+
+    def stragglers(self, shuffle_id: int, factor: float = 3.0,
+                   now: float | None = None) -> list[int]:
+        """Workers whose duration (or elapsed time if unfinished) exceeds
+        ``factor × median(finished durations)``."""
+        durs = self.durations(shuffle_id)
+        if not durs:
+            return []
+        med = sorted(durs.values())[len(durs) // 2]
+        threshold = max(factor * med, 1e-9)
+        out = [w for w, d in durs.items() if d > threshold]
+        now = self._clock() if now is None else now
+        prog = self.progress(shuffle_id)
+        recs = self.records(shuffle_id)
+        t0 = {r.wid: r.ts for r in recs if r.kind == "start"}
+        out += [w for w in prog["pending"] if now - t0[w] > threshold]
+        return sorted(set(out))
+
+    def incomplete_shuffles(self) -> list[int]:
+        """Shuffle ids with at least one started-but-unfinished worker — the restart
+        set after a failure (§6: restart the tasks of a subset of participants)."""
+        with self._lock:
+            ids = {r.shuffle_id for r in self._records}
+        return sorted(s for s in ids if self.progress(s)["pending"])
+
+    # ---- recovery -------------------------------------------------------------
+    @staticmethod
+    def recover(journal_path: str, **kwargs) -> "ShuffleManager":
+        """Rebuild manager state from a journal (or replica) after a crash."""
+        mgr = ShuffleManager(**kwargs)
+        if os.path.exists(journal_path):
+            with open(journal_path) as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        mgr._records.append(ShuffleRecord.from_json(line))
+        return mgr
+
+    def close(self) -> None:
+        for j in self._journals:
+            j.close()

@@ -1,0 +1,159 @@
+"""Message batches, partition functions and combiners — the data model of a shuffle.
+
+A shuffle moves *messages*: ``(key, value)`` records batched as flat arrays.  The key
+identifies the logical destination (a vertex id, a reduce key, an expert id); the value
+is an arbitrary fixed-width payload.  ``partFunc`` maps keys to destination workers;
+``combFunc`` is a commutative+associative reduction applied to values sharing a key.
+
+Everything here is NumPy (the local simulated-cluster backend); the JAX/mesh analogues
+of PART/COMB live in :mod:`repro.kernels` (Pallas) and :mod:`repro.core.meshops`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Deterministic 64-bit mixing hash (splitmix64) — identical in numpy and jax.
+# ---------------------------------------------------------------------------
+
+_SPLITMIX_C1 = np.uint64(0xBF58476D1CE4E5B9)
+_SPLITMIX_C2 = np.uint64(0x94D049BB133111EB)
+_SPLITMIX_INC = np.uint64(0x9E3779B97F4A7C15)
+
+
+def splitmix64(x: np.ndarray, seed: int = 0) -> np.ndarray:
+    """Vectorized splitmix64; uniform over uint64 for any integer input."""
+    seed_term = np.uint64((int(seed) * 0x9E3779B97F4A7C15 + 0x9E3779B97F4A7C15)
+                          & 0xFFFFFFFFFFFFFFFF)
+    with np.errstate(over="ignore"):
+        z = x.astype(np.uint64) + seed_term
+        z = (z ^ (z >> np.uint64(30))) * _SPLITMIX_C1
+        z = (z ^ (z >> np.uint64(27))) * _SPLITMIX_C2
+        return z ^ (z >> np.uint64(31))
+
+
+# ---------------------------------------------------------------------------
+# Message batches
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Msgs:
+    """A batch of (key, value) messages. ``vals`` is ``[n, d]`` (d = payload width)."""
+
+    keys: np.ndarray   # int64 [n]
+    vals: np.ndarray   # float64 [n, d]
+
+    def __post_init__(self) -> None:
+        self.keys = np.asarray(self.keys, dtype=np.int64)
+        self.vals = np.asarray(self.vals, dtype=np.float64)
+        if self.vals.ndim == 1:
+            self.vals = self.vals[:, None]
+        if self.keys.shape[0] != self.vals.shape[0]:
+            raise ValueError(f"keys/vals length mismatch: {self.keys.shape} {self.vals.shape}")
+
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def width(self) -> int:
+        return int(self.vals.shape[1])
+
+    @property
+    def nbytes(self) -> int:
+        # 8B key + 8B per payload column — the wire format the cost model charges.
+        return self.n * (8 + 8 * self.width)
+
+    @staticmethod
+    def empty(width: int = 1) -> "Msgs":
+        return Msgs(np.empty((0,), np.int64), np.empty((0, width), np.float64))
+
+    @staticmethod
+    def concat(batches: list["Msgs"]) -> "Msgs":
+        batches = [b for b in batches if b is not None and b.n > 0]
+        if not batches:
+            return Msgs.empty()
+        return Msgs(np.concatenate([b.keys for b in batches]),
+                    np.concatenate([b.vals for b in batches]))
+
+    def take(self, idx: np.ndarray) -> "Msgs":
+        return Msgs(self.keys[idx], self.vals[idx])
+
+
+# ---------------------------------------------------------------------------
+# Combiners (combFunc): commutative + associative reductions over equal keys
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Combiner:
+    """Named so both backends (numpy here, Pallas/jnp in kernels) agree on semantics."""
+
+    name: str
+    binary: Callable[[np.ndarray, np.ndarray], np.ndarray]
+    ufunc: np.ufunc
+
+    def __call__(self, msgs: Msgs) -> Msgs:
+        """Combine all messages sharing a key into one message (sort + segment reduce)."""
+        if msgs.n == 0:
+            return msgs
+        order = np.argsort(msgs.keys, kind="stable")
+        keys = msgs.keys[order]
+        vals = msgs.vals[order]
+        uniq, starts = np.unique(keys, return_index=True)
+        out = self.ufunc.reduceat(vals, starts, axis=0)
+        return Msgs(uniq, out)
+
+
+SUM = Combiner("sum", lambda a, b: a + b, np.add)
+MIN = Combiner("min", np.minimum, np.minimum)
+MAX = Combiner("max", np.maximum, np.maximum)
+
+COMBINERS = {c.name: c for c in (SUM, MIN, MAX)}
+
+
+# ---------------------------------------------------------------------------
+# Partition functions (partFunc): key -> destination slot
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PartFn:
+    """``assign(keys, ndst)`` returns the destination *slot* (0..ndst-1) per message."""
+
+    name: str
+    assign: Callable[[np.ndarray, int], np.ndarray]
+
+
+def _hash_assign(keys: np.ndarray, ndst: int) -> np.ndarray:
+    return (splitmix64(keys) % np.uint64(ndst)).astype(np.int64)
+
+
+def _range_assign_factory(key_space: int) -> Callable[[np.ndarray, int], np.ndarray]:
+    def assign(keys: np.ndarray, ndst: int) -> np.ndarray:
+        per = -(-key_space // ndst)
+        return np.minimum(keys // per, ndst - 1).astype(np.int64)
+    return assign
+
+
+HASH_PART = PartFn("hash", _hash_assign)   # the paper's default partFunc
+
+
+def range_part(key_space: int) -> PartFn:
+    return PartFn(f"range[{key_space}]", _range_assign_factory(key_space))
+
+
+def partition(msgs: Msgs, dsts: list[int], part_fn: PartFn) -> dict[int, Msgs]:
+    """PART: split ``msgs`` by destination worker id (the paper's Table-2 primitive)."""
+    if msgs.n == 0:
+        return {d: Msgs.empty(max(1, msgs.width)) for d in dsts}
+    slot = part_fn.assign(msgs.keys, len(dsts))
+    order = np.argsort(slot, kind="stable")
+    sorted_slot = slot[order]
+    bounds = np.searchsorted(sorted_slot, np.arange(len(dsts) + 1))
+    out: dict[int, Msgs] = {}
+    for i, d in enumerate(dsts):
+        sel = order[bounds[i]:bounds[i + 1]]
+        out[d] = msgs.take(sel)
+    return out

@@ -1,0 +1,314 @@
+"""The six TeShu template primitives (Table 2) on a simulated worker cluster.
+
+The paper's primitives — SEND, RECV, FETCH, PART, COMB, SAMP — are synchronous
+per-worker operations.  Here they run against :class:`LocalCluster`, a deterministic
+in-process cluster: each worker is a thread, mailboxes are FIFO queues per (src, dst)
+pair, and every byte that crosses a topology boundary is charged to a
+:class:`CostLedger` at the level it crosses.  The ledger is the measurement substrate
+for the paper's evaluation (communication saving is *exact*; execution time comes from
+the topology cost model, which is how we reproduce Table 4 on a single-host container).
+
+The JAX/mesh analogues of these primitives (used inside ``shard_map`` by the LM
+integrations) live in :mod:`repro.core.meshops`; the semantics here are the reference.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .messages import Combiner, Msgs, PartFn, partition
+from .sampling import partition_aware_sample
+from .topology import NetworkTopology
+
+
+# ---------------------------------------------------------------------------
+# Cost ledger: exact byte accounting + topology-model time
+# ---------------------------------------------------------------------------
+
+class CostLedger:
+    """Charges transfers/combines to (epoch, worker, level); computes modelled time.
+
+    Epochs are synchronization intervals (advanced at every cluster-wide rendezvous);
+    modelled execution time is the sum over epochs of the slowest worker's serialized
+    cost in that epoch — the standard BSP bound and how shuffle completion is gated on
+    the straggler (paper §1: "performance is often gated on tail completion time").
+    """
+
+    def __init__(self, topology: NetworkTopology):
+        self.topology = topology
+        self._lock = threading.Lock()
+        self.epoch = 0
+        # (epoch, wid, level) -> bytes ; level == -1 never charged (local move)
+        self.transfer: dict = collections.defaultdict(int)
+        self.combine: dict = collections.defaultdict(int)   # (epoch, wid) -> bytes
+        self.sample_bytes = 0                                # SAMP overhead, for Fig. 6
+
+    def charge_transfer(self, wid: int, level: int, nbytes: int, *, sample: bool = False) -> None:
+        if level < 0 or nbytes == 0:
+            return
+        with self._lock:
+            self.transfer[(self.epoch, wid, level)] += nbytes
+            if sample:
+                self.sample_bytes += nbytes
+
+    def charge_combine(self, wid: int, nbytes: int) -> None:
+        with self._lock:
+            self.combine[(self.epoch, wid)] += nbytes
+
+    def advance_epoch(self) -> None:
+        with self._lock:
+            self.epoch += 1
+
+    # ---- aggregation --------------------------------------------------------
+    def bytes_at_level(self, level: int) -> int:
+        return sum(v for (e, w, l), v in self.transfer.items() if l == level)
+
+    def total_bytes(self) -> int:
+        return sum(self.transfer.values())
+
+    def modelled_time(self) -> float:
+        topo = self.topology
+        epochs = set(e for (e, w, l) in self.transfer) | set(e for (e, w) in self.combine)
+        total = 0.0
+        for e in sorted(epochs):
+            worker_cost: dict[int, float] = collections.defaultdict(float)
+            levels_used: set[int] = set()
+            for (ee, w, l), b in self.transfer.items():
+                if ee == e:
+                    worker_cost[w] += b / topo.levels[l].bw_bytes_per_s
+                    levels_used.add(l)
+            for (ee, w), b in self.combine.items():
+                if ee == e:
+                    worker_cost[w] += b / topo.levels[0].combine_bytes_per_s
+            if worker_cost:
+                total += max(worker_cost.values())
+                total += max((topo.levels[l].latency_s for l in levels_used), default=0.0)
+        return total
+
+    def snapshot(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes(),
+            "bytes_per_level": {lv.name: self.bytes_at_level(i)
+                                for i, lv in enumerate(self.topology.levels)},
+            "sample_bytes": self.sample_bytes,
+            "modelled_time_s": self.modelled_time(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Rendezvous: the "sampling server" gather (Figure 4) and cluster barriers
+# ---------------------------------------------------------------------------
+
+class Rendezvous:
+    """All participants contribute a value; one computation runs; all get the result.
+
+    Reused sequentially (generation counter) — one use per adaptive level per shuffle.
+    """
+
+    def __init__(self, nparticipants: int):
+        self.n = nparticipants
+        self._cond = threading.Condition()
+        self._gen = 0
+        self._contrib: dict[int, object] = {}
+        self._result: object = None
+
+    def gather_compute(self, wid: int, value, fn: Callable[[dict], object]):
+        with self._cond:
+            gen = self._gen
+            self._contrib[wid] = value
+            if len(self._contrib) == self.n:
+                self._result = fn(dict(self._contrib))
+                self._contrib.clear()
+                self._gen += 1
+                self._cond.notify_all()
+                return self._result
+            waited = 0.0
+            while self._gen == gen:
+                if not self._cond.wait(timeout=5.0):
+                    waited += 5.0
+                    if waited >= 120.0:
+                        raise TimeoutError(f"rendezvous stuck at gen {gen} (worker {wid})")
+            return self._result
+
+
+# ---------------------------------------------------------------------------
+# The simulated cluster
+# ---------------------------------------------------------------------------
+
+class DeadWorker(Exception):
+    """Raised inside a worker thread when a fault is injected (failure testing)."""
+
+
+@dataclasses.dataclass
+class ShuffleArgs:
+    """Per-invocation arguments (Table 1)."""
+
+    template_id: str
+    shuffle_id: int
+    srcs: tuple[int, ...]
+    dsts: tuple[int, ...]
+    part_fn: PartFn
+    comb_fn: Combiner | None
+    rate: float = 0.01            # $RATE
+    seed: int = 0
+
+
+class LocalCluster:
+    """Deterministic in-process cluster of worker threads over a NetworkTopology."""
+
+    def __init__(self, topology: NetworkTopology, *, rpc_timeout: float = 120.0,
+                 run_timeout: float = 300.0):
+        self.topology = topology
+        self.rpc_timeout = rpc_timeout      # RECV/FETCH wait bound
+        self.run_timeout = run_timeout      # whole-cluster run bound
+        self.ledger = CostLedger(topology)
+        self._mail: dict[tuple[int, int], queue.Queue] = collections.defaultdict(queue.Queue)
+        # pull-mode publish board, keyed (shuffle_id, src) so invocations don't alias
+        self._published: dict[tuple[int, int], dict[int, Msgs]] = {}
+        self._published_ev: dict[tuple[int, int], threading.Event] = \
+            collections.defaultdict(threading.Event)
+        self._rendezvous: dict[tuple, Rendezvous] = {}
+        self._rv_lock = threading.Lock()
+        self.failed_workers: set[int] = set()
+        self.worker_delays: dict[int, float] = {}   # injected straggler delays (s)
+
+    # ---- infrastructure ------------------------------------------------------
+    def reset_ledger(self) -> None:
+        self.ledger = CostLedger(self.topology)
+
+    def rendezvous(self, key: tuple, nparticipants: int) -> Rendezvous:
+        with self._rv_lock:
+            rv = self._rendezvous.get(key)
+            if rv is None:
+                rv = self._rendezvous[key] = Rendezvous(nparticipants)
+            return rv
+
+    def run_workers(self, wids: Sequence[int], fn: Callable[[int], object],
+                    timeout: float | None = None) -> dict[int, object]:
+        """Run ``fn(wid)`` on a thread per worker; propagate the first exception."""
+        results: dict[int, object] = {}
+        errors: list[BaseException] = []
+
+        def body(w: int) -> None:
+            try:
+                if w in self.failed_workers:
+                    raise DeadWorker(f"worker {w} is failed")
+                results[w] = fn(w)
+            except DeadWorker:
+                pass                      # simulated crash: silently stops
+            except BaseException as e:    # noqa: BLE001 - rethrown below
+                errors.append(e)
+
+        timeout = self.run_timeout if timeout is None else timeout
+        threads = [threading.Thread(target=body, args=(w,), daemon=True) for w in wids]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout)
+        if any(t.is_alive() for t in threads):
+            raise TimeoutError("cluster run timed out (deadlock or straggler)")
+        if errors:
+            raise errors[0]
+        return results
+
+
+class WorkerContext:
+    """Per-worker view of the cluster inside one shuffle: the six primitives.
+
+    This is the object a template's code runs against; its method names follow
+    Table 2 of the paper.
+    """
+
+    def __init__(self, cluster: LocalCluster, wid: int, args: ShuffleArgs):
+        self.cluster = cluster
+        self.topology = cluster.topology
+        self.wid = wid
+        self.args = args
+        self.decisions: list = []    # (level, EffCost) pairs from adaptive templates
+
+    # ---- Table-2 primitives ---------------------------------------------------
+    def SEND(self, dst: int, msgs: Msgs, *, sample: bool = False) -> None:
+        if self.wid in self.cluster.failed_workers:
+            raise DeadWorker(self.wid)
+        level = self.topology.crossing_level(self.wid, dst)
+        self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes, sample=sample)
+        self.cluster._mail[(self.wid, dst)].put(msgs)
+
+    def RECV(self, src: int, timeout: float | None = None) -> Msgs:
+        timeout = self.cluster.rpc_timeout if timeout is None else timeout
+        try:
+            return self.cluster._mail[(src, self.wid)].get(timeout=timeout)
+        except queue.Empty as e:
+            raise TimeoutError(f"RECV({src} -> {self.wid}) timed out") from e
+
+    def FETCH(self, src: int, timeout: float | None = None) -> Msgs:
+        timeout = self.cluster.rpc_timeout if timeout is None else timeout
+        """Pull mode: wait until ``src`` PUBLISHed its partitions, take ours.
+
+        Data bytes are charged to the fetching worker (it pays the wait)."""
+        key = (self.args.shuffle_id, src)
+        ev = self.cluster._published_ev[key]
+        if not ev.wait(timeout):
+            raise TimeoutError(f"FETCH from {src} timed out")
+        msgs = self.cluster._published[key].get(self.wid, Msgs.empty())
+        level = self.topology.crossing_level(src, self.wid)
+        self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes)
+        return msgs
+
+    def PART(self, msgs: Msgs, dsts: Sequence[int], part_fn: PartFn | None = None,
+             *, publish: bool = False) -> dict[int, Msgs]:
+        parts = partition(msgs, list(dsts), part_fn or self.args.part_fn)
+        if publish:  # pull mode: make partitions visible to FETCHers
+            key = (self.args.shuffle_id, self.wid)
+            self.cluster._published[key] = parts
+            self.cluster._published_ev[key].set()
+        return parts
+
+    def COMB(self, msgs: Msgs | Sequence[Msgs], comb_fn: Combiner | None = None) -> Msgs:
+        comb = comb_fn or self.args.comb_fn
+        batch = Msgs.concat(list(msgs)) if not isinstance(msgs, Msgs) else msgs
+        if comb is None:
+            return batch
+        self.cluster.ledger.charge_combine(self.wid, batch.nbytes)
+        return comb(batch)
+
+    def SAMP(self, msgs: Msgs, rate: float | None = None,
+             part_fn: PartFn | None = None) -> Msgs:
+        rate = self.args.rate if rate is None else rate
+        return partition_aware_sample(msgs, rate, part_fn or self.args.part_fn,
+                                      seed=self.args.seed + self.args.shuffle_id)
+
+    # ---- $-parameters (instantiated from topology) ------------------------------
+    def FIND_NBRS(self, level_name: str, peers: Sequence[int]) -> list[int]:
+        return self.topology.neighbors(self.wid, peers, level_name)
+
+    def local_level_names(self) -> list[str]:
+        """Hierarchy levels below 'global'/'pod' where local shuffles can combine."""
+        return [lv.name for lv in self.topology.levels[:-1]]
+
+    # ---- sampling-server rendezvous ($COMPUTE_EFF_COST, Figure 4) --------------
+    def GATHER_SAMPLES(self, tag: str, sample: Msgs, full_bytes: int,
+                       compute: Callable[[list[Msgs], list[int]], object]):
+        """Ship this worker's sample group to the sampling server (srcs[0]); one
+        evaluation runs there; every worker receives the result.  Sample transfer
+        bytes are charged (this is the overhead Figure 6 measures), and the epoch
+        advances afterwards (a cluster-wide synchronization point)."""
+        srcs = self.args.srcs
+        server = srcs[0]
+        level = self.topology.crossing_level(self.wid, server)
+        self.cluster.ledger.charge_transfer(self.wid, level, sample.nbytes, sample=True)
+        rv = self.cluster.rendezvous((self.args.shuffle_id, tag), len(srcs))
+
+        def fn(contrib: dict):
+            samples = [contrib[w][0] for w in sorted(contrib)]
+            sizes = [contrib[w][1] for w in sorted(contrib)]
+            out = compute(samples, sizes)
+            self.cluster.ledger.advance_epoch()
+            return out
+
+        return rv.gather_compute(self.wid, (sample, full_bytes), fn)

@@ -1,0 +1,64 @@
+"""The TeShu service facade: the ``shuffle(...)`` call of Table 1.
+
+An infrastructure provider deploys one :class:`TeShuService` per cluster (here, per
+simulated :class:`LocalCluster`); applications invoke :meth:`shuffle` exactly as in
+the paper — worker set, template id, shuffle id, buffers, partFunc, combFunc.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Sequence
+
+from .manager import ShuffleManager
+from .messages import Combiner, Msgs, PartFn, HASH_PART
+from .primitives import LocalCluster, ShuffleArgs
+from .templates import ShuffleResult, run_shuffle
+from .topology import NetworkTopology
+
+
+class TeShuService:
+    def __init__(self, topology: NetworkTopology, *, journal_path: str | None = None,
+                 replicas: Sequence[str] = ()):
+        self.topology = topology
+        self.cluster = LocalCluster(topology)
+        self.manager = ShuffleManager(journal_path=journal_path, replicas=replicas)
+        self._ids = itertools.count(1)
+
+    def next_shuffle_id(self) -> int:
+        return next(self._ids)
+
+    def shuffle(
+        self,
+        template_id: str,
+        bufs: dict[int, Msgs],
+        srcs: Sequence[int],
+        dsts: Sequence[int],
+        *,
+        part_fn: PartFn = HASH_PART,
+        comb_fn: Combiner | None = None,
+        rate: float = 0.01,
+        shuffle_id: int | None = None,
+        seed: int = 0,
+    ) -> ShuffleResult:
+        args = ShuffleArgs(
+            template_id=template_id,
+            shuffle_id=self.next_shuffle_id() if shuffle_id is None else shuffle_id,
+            srcs=tuple(srcs), dsts=tuple(dsts),
+            part_fn=part_fn, comb_fn=comb_fn, rate=rate, seed=seed)
+        return run_shuffle(self.cluster, args, bufs, manager=self.manager)
+
+    # ---- ops hooks -----------------------------------------------------------
+    def stats(self) -> dict:
+        return self.cluster.ledger.snapshot()
+
+    def reset_stats(self) -> None:
+        self.cluster.reset_ledger()
+
+    def fail_worker(self, wid: int) -> None:
+        self.cluster.failed_workers.add(wid)
+
+    def heal_worker(self, wid: int) -> None:
+        self.cluster.failed_workers.discard(wid)
+
+    def delay_worker(self, wid: int, seconds: float) -> None:
+        self.cluster.worker_delays[wid] = seconds

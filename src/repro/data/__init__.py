@@ -1,0 +1,7 @@
+"""Data pipeline: synthetic sharded token streams + host-side shuffle/prefetch."""
+from .pipeline import (DataConfig, SyntheticLMDataset, DataPipeline,
+                       make_global_batch, batch_specs)
+from .tokens import zipf_tokens, markov_tokens
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "DataPipeline", "make_global_batch",
+           "batch_specs", "zipf_tokens", "markov_tokens"]

@@ -1,0 +1,152 @@
+"""Sharded training data pipeline with host prefetch.
+
+Production layout: each host generates (or in real deployments, reads) only the rows
+of the global batch that land on its local devices — the host-level shard of the
+``('pod','data')`` batch axes.  The pipeline is:
+
+  1. **generate/read** the host's row shard for step ``n+1`` on a prefetch thread
+     while step ``n`` computes (compute/IO overlap);
+  2. **reshard** to devices with ``jax.device_put`` against the batch
+     ``NamedSharding`` — on a real multi-host TPU this is
+     ``jax.make_array_from_process_local_data``; the single-process fallback keeps
+     identical shapes/semantics;
+  3. hand the framework a pytree ``{"tokens": [B,S], "labels": [B,S]}`` (or
+     ``{"embeds": [B,S,D], ...}`` for vlm/audio stub frontends).
+
+Determinism: batch ``n`` depends only on ``(seed, n)`` — a restart from a step-``k``
+checkpoint replays exactly the batches ``k+1, ...`` it would have seen (this is the
+replay half of the fault-tolerance story; see ``repro.checkpoint``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .tokens import markov_tokens, zipf_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    kind: str = "markov"          # markov | zipf
+    modality: str = "text"        # text | vlm | audio (embeds stub input)
+    d_model: int = 0              # required for embeds modalities
+    prefetch: int = 2
+
+
+class SyntheticLMDataset:
+    """Deterministic per-step batch generator (step -> numpy batch)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step]))
+        shape = (cfg.global_batch, cfg.seq_len + 1)
+        if cfg.kind == "zipf":
+            toks = zipf_tokens(rng, shape, cfg.vocab)
+        else:
+            toks = markov_tokens(rng, shape, cfg.vocab)
+        out: dict[str, np.ndarray] = {"labels": toks[:, 1:].astype(np.int32)}
+        if cfg.modality == "text":
+            out["tokens"] = toks[:, :-1].astype(np.int32)
+        else:
+            # stub frontend: precomputed frame/patch embeddings derived from ids
+            ids = toks[:, :-1].astype(np.int64)
+            emb = rng.standard_normal((cfg.vocab, cfg.d_model)).astype(np.float32)
+            out["embeds"] = emb[ids % cfg.vocab] * 0.02
+        return out
+
+
+def make_global_batch(batch_np: dict[str, np.ndarray], mesh: jax.sharding.Mesh,
+                      batch_axes=("pod", "data")) -> dict[str, jax.Array]:
+    """Reshard a host batch onto the mesh (batch dim over the DP axes)."""
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+    spec = P(axes if axes else None)
+
+    def put(x: np.ndarray) -> jax.Array:
+        s = NamedSharding(mesh, P(*(spec + (None,) * (x.ndim - 1))))
+        return jax.device_put(x, s)
+
+    return {k: put(v) for k, v in batch_np.items()}
+
+
+def batch_specs(cfg: DataConfig, mesh: jax.sharding.Mesh,
+                batch_axes=("pod", "data")) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for a batch (dry-run lowering; no allocation)."""
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+    b_axis = axes if axes else None
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    b, s = cfg.global_batch, cfg.seq_len
+    out = {"labels": sds((b, s), jnp.int32, P(b_axis, None))}
+    if cfg.modality == "text":
+        out["tokens"] = sds((b, s), jnp.int32, P(b_axis, None))
+    else:
+        out["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16, P(b_axis, None, None))
+    return out
+
+
+class DataPipeline:
+    """Background-thread prefetch over :class:`SyntheticLMDataset`.
+
+    ``iter(pipeline)`` yields device-resident global batches; generation of batch
+    ``n+prefetch`` overlaps with compute on batch ``n``.
+    """
+
+    def __init__(self, cfg: DataConfig, mesh: jax.sharding.Mesh,
+                 start_step: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dataset = SyntheticLMDataset(cfg)
+        self.start_step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, cfg.prefetch))
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def _producer(self) -> None:
+        step = self.start_step
+        while not self._stop.is_set():
+            batch = self.dataset.batch_at(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator[tuple[int, dict[str, jax.Array]]]:
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+        try:
+            while True:
+                step, batch_np = self._q.get()
+                yield step, make_global_batch(batch_np, self.mesh)
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            while not self._q.empty():       # unblock the producer
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    break
+            self._thread.join(timeout=5.0)
+            self._thread = None

@@ -1,0 +1,61 @@
+"""Jitted public wrappers for the Pallas kernels, with platform dispatch.
+
+On TPU the real kernels run compiled; elsewhere (this CPU container) they execute in
+``interpret=True`` mode, which runs the kernel body in Python for correctness.  The
+``use_kernels`` flag lets the model stack swap between Pallas kernels and the ref
+oracles (dry-run lowering for the 512-chip mesh uses the XLA paths so that
+cost_analysis reflects the fused HLO; kernels are validated against refs in tests).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .combine import segment_combine
+from .decode_attention import decode_attention as decode_attention_kernel
+from .flash_attention import flash_attention
+from .gmm import gmm, route_and_pad
+from .partition import partition_permute
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, scale=None, use_kernel=True):
+    if use_kernel:
+        return flash_attention(q, k, v, causal=causal, scale=scale,
+                               interpret=not on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def combine(seg_ids, vals, *, num_segments, use_kernel=True):
+    if use_kernel:
+        return segment_combine(seg_ids, vals, num_segments=num_segments,
+                               interpret=not on_tpu())
+    return ref.segment_combine_ref(seg_ids, vals, num_segments=num_segments)
+
+
+def grouped_matmul(x, w, tile_group_ids, *, block_n=128, use_kernel=True):
+    if use_kernel:
+        return gmm(x, w, tile_group_ids, block_n=block_n, interpret=not on_tpu())
+    return ref.gmm_ref(x, w, tile_group_ids, block_n=block_n)
+
+
+def part(slots, vals, *, num_out, use_kernel=True):
+    if use_kernel:
+        return partition_permute(slots, vals, num_out=num_out,
+                                 interpret=not on_tpu())
+    return ref.partition_permute_ref(slots, vals, num_out=num_out)
+
+
+def decode_attention(q, k, v, valid_len, *, use_kernel=True):
+    if use_kernel:
+        return decode_attention_kernel(q, k, v, valid_len,
+                                       interpret=not on_tpu())
+    return ref.decode_attention_ref(q, k, v, valid_len)
+
+
+__all__ = ["attention", "combine", "grouped_matmul", "part", "decode_attention",
+           "route_and_pad", "on_tpu", "flash_attention", "segment_combine",
+           "gmm", "partition_permute"]

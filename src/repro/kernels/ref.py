@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: float | None = None, causal: bool = True) -> jax.Array:
+    """[BHq, Sq, D] x [BHkv, Skv, D] -> [BHq, Sq, D]; GQA by head repetition."""
+    bhq, sq, d = q.shape
+    bhkv, skv, _ = k.shape
+    group = bhq // bhkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def segment_combine_ref(seg_ids: jax.Array, vals: jax.Array, *,
+                        num_segments: int) -> jax.Array:
+    """[n] ids + [n, d] vals -> [S, d] per-segment sums; id -1 rows dropped."""
+    ok = seg_ids >= 0
+    ids = jnp.where(ok, seg_ids, 0)
+    contrib = jnp.where(ok[:, None], vals.astype(jnp.float32), 0.0)
+    return jax.ops.segment_sum(contrib, ids, num_segments=num_segments).astype(vals.dtype)
+
+
+def gmm_ref(x: jax.Array, w: jax.Array, tile_group_ids: jax.Array, *,
+            block_n: int) -> jax.Array:
+    """Row-tile i of x multiplies w[tile_group_ids[i]]."""
+    n, d = x.shape
+    tiles = x.reshape(n // block_n, block_n, d)
+    out = jnp.einsum("tbd,tdf->tbf", tiles.astype(jnp.float32),
+                     w[tile_group_ids].astype(jnp.float32))
+    return out.reshape(n, -1).astype(x.dtype)
+
+
+def partition_permute_ref(slots: jax.Array, vals: jax.Array, *,
+                          num_out: int) -> jax.Array:
+    """Scatter rows by slot id (PART); -1 rows dropped; collisions sum."""
+    ok = (slots >= 0) & (slots < num_out)
+    ids = jnp.where(ok, slots, 0)
+    contrib = jnp.where(ok[:, None], vals.astype(jnp.float32), 0.0)
+    return jax.ops.segment_sum(contrib, ids,
+                               num_segments=num_out).astype(vals.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid_len, *, scale: float | None = None) -> jax.Array:
+    """[B,H,d] x [B,T,KVH,d] single-token attention with cache-length mask."""
+    b, h, d = q.shape
+    _, t, kvh, _ = k.shape
+    g = h // kvh
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, kvh, g, d)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(t) < valid_len
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,226 @@
+"""Sharding rules: parameter / optimizer / cache / batch PartitionSpecs.
+
+The 2-D strategy (single pod) is FSDP('data') x TP('model'):
+
+* input-projection matrices ``[.., d_in, d_out]`` -> ``P(.., 'data', 'model')``
+  (weights FSDP-gathered over ``data`` just-in-time, column-parallel over
+  ``model``),
+* output-projection matrices (``wo``/``w_down``/``w_out``) ->
+  ``P(.., 'model', 'data')`` (row-parallel, XLA inserts the reduce),
+* embedding ``[V, D] -> P('model', 'data')`` (vocab-parallel),
+* routed experts ``[.., E, d, f]`` -> experts over the EP axes (``model``, plus
+  ``pod`` when multi-pod — exactly the axes the two-level dispatch template
+  shuffles over), ``f`` over ``data``,
+* KV caches: batch over ``('pod','data')`` when divisible, else sequence over
+  ``data`` (long-context B=1 decode); heads over ``model`` when divisible.
+
+Multi-pod: parameters are *replicated* across pods (DCN all-gathers per layer
+would dominate), gradients cross the DCN once per step through the network-aware
+hierarchical all-reduce — except experts, which are genuinely sharded over
+``pod`` (EP is the paper-representative cross-pod shuffle).
+
+Every axis assignment is divisibility-checked and dropped (-> replicated on that
+dim) when it does not divide — e.g. hymba's vocab 32001 on the embed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Pytree = Any
+
+# FSDP axes for parameters: ("data",) keeps parameters replicated across pods
+# (gradients cross the DCN once per step); ("pod", "data") extends ZeRO-3
+# across pods — per-chip parameter/optimizer state halves, at the price of
+# per-layer DCN all-gathers (overlappable).  The §Perf fit iterations flip this.
+_FSDP_AXES: tuple = ("data",)
+
+
+def set_fsdp_axes(axes: tuple) -> None:
+    global _FSDP_AXES
+    _FSDP_AXES = tuple(axes)
+
+
+def fsdp_axes() -> tuple:
+    return _FSDP_AXES
+
+
+_IN_PROJ = ("wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b", "w_gate", "w_up",
+            "w_in", "w_rec", "w_bcdt", "w_ifo", "proj")
+_OUT_PROJ = ("wo", "w_down", "w_out")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _fit(axes, dim: int, mesh) -> Any:
+    """Return ``axes`` if its total size divides ``dim``, else None (replicate)."""
+    if axes is None:
+        return None
+    tup = axes if isinstance(axes, tuple) else (axes,)
+    size = 1
+    for a in tup:
+        if a not in mesh.shape:
+            return None
+        size *= mesh.shape[a]
+    if size == 0 or dim % size:
+        return None
+    return axes
+
+
+def _spec(shape, trailing, mesh) -> P:
+    """Build a spec: ``trailing`` covers the last dims, leading dims replicate."""
+    trailing = list(trailing)[-len(shape):] if shape else []
+    lead = len(shape) - len(trailing)
+    parts = [None] * lead + [
+        _fit(a, shape[lead + i], mesh) for i, a in enumerate(trailing)]
+    return P(*parts)
+
+
+def ep_axes_for(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "model") if a in mesh.shape)
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh,
+               cfg: ModelConfig) -> P:
+    name = path.rsplit("/", 1)[-1]
+    if len(shape) <= 1:
+        return P()                                        # norms, biases, scalars
+    fa = _FSDP_AXES if all(a in mesh.shape for a in _FSDP_AXES) else ("data",)
+    if "experts/" in path or path.endswith("experts"):
+        ep = ep_axes_for(mesh)
+        if name in ("w_gate", "w_up"):                    # [.., E, d, f]
+            return _spec(shape, (ep, None, "data"), mesh)
+        if name == "w_down":                              # [.., E, f, d]
+            return _spec(shape, (ep, "data", None), mesh)
+    if "shared/" in path:                                 # few shared experts
+        if name in ("w_gate", "w_up"):
+            return _spec(shape, (None, fa, "model"), mesh)
+        if name == "w_down":
+            return _spec(shape, (None, "model", fa), mesh)
+    if name == "embed":
+        # d_model (not vocab) over `model`: a vocab-sharded table turns the token
+        # gather into an SPMD full-rematerialization (replicate + repartition).
+        return _spec(shape, (None, "model"), mesh)
+    if name == "unembed":
+        return _spec(shape, (fa, "model"), mesh)
+    if name == "router":
+        return P()
+    if name == "conv":                                    # [K, di]
+        return _spec(shape, (None, "model"), mesh)
+    if name == "log_a":                                   # [di, n]
+        return _spec(shape, ("model", None), mesh)
+    if name in _OUT_PROJ:
+        return _spec(shape, ("model", fa), mesh)
+    if name in _IN_PROJ:
+        return _spec(shape, (fa, "model"), mesh)
+    # default: FSDP x TP on the trailing two dims
+    return _spec(shape, (fa, "model"), mesh)
+
+
+def param_specs(params_shape: Pytree, mesh, cfg: ModelConfig) -> Pytree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_path_str(path), leaf.shape, mesh, cfg),
+        params_shape)
+
+
+def batch_spec(shape: tuple[int, ...], mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    b_axes = _fit(axes, shape[0], mesh)
+    return P(*([b_axes] + [None] * (len(shape) - 1)))
+
+
+def batch_specs(batch_shape: Pytree, mesh) -> Pytree:
+    return jax.tree.map(lambda leaf: batch_spec(leaf.shape, mesh), batch_shape)
+
+
+def cache_spec(path: str, shape: tuple[int, ...], mesh,
+               cfg: ModelConfig) -> P:
+    name = path.rsplit("/", 1)[-1]
+    if len(shape) == 0:
+        return P()
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    lead = 1 if path.startswith("blocks") else 0          # scan-stacked caches
+    body = shape[lead:]
+
+    def with_lead(trailing) -> P:
+        return _spec(shape, ([None] * lead) + list(trailing), mesh)
+
+    b_ok = body and _fit(dp, body[0], mesh) is not None
+    if name in ("k", "v"):                                # [B, T, kvh, dh]
+        kvh_ok = len(body) > 2 and _fit("model", body[2], mesh) is not None
+        if b_ok and kvh_ok:
+            return with_lead([dp, None, "model", None])
+        if b_ok:                                          # few kv heads (GQA):
+            return with_lead([dp, "model", None, None])   # shard T over model
+        if kvh_ok:
+            return with_lead([None, "data", "model", None])
+        return with_lead([None, ("data", "model"), None, None])
+    if name == "latent":                                  # [B, T, r]
+        if b_ok:
+            return with_lead([dp, None, "model"])
+        return with_lead([None, "data", "model"])
+    if name == "k_rope":                                  # [B, T, dr]
+        if b_ok:
+            return with_lead([dp, "model", None])
+        return with_lead([None, "data", None])
+    if name == "C":                                       # mLSTM [B, h, dh, dh]
+        return with_lead([dp, None, "model", None] if b_ok
+                         else [None, None, "model", None])
+    if name in ("n", "conv"):                             # [B,h,dh] / [B,K-1,di]
+        return with_lead([dp, None, "model"] if b_ok
+                         else [None, None, "model"])
+    if name == "ssm":                                     # mamba [B, di, n]
+        return with_lead([dp, "model", None] if b_ok
+                         else [None, "model", None])
+    if name in ("m", "c", "h"):                           # [B, h] / sLSTM [B, D]
+        return with_lead([dp, "model"] if b_ok else [None, "model"])
+    if name in ("len", "pos", "step"):
+        return P()
+    # sLSTM n is [B, D]; anything else: batch-first best effort
+    if body:
+        return with_lead([dp if b_ok else None] + [None] * (len(body) - 1))
+    return P()
+
+
+def cache_specs(cache_shape: Pytree, mesh, cfg: ModelConfig) -> Pytree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec(_path_str(path), leaf.shape, mesh, cfg),
+        cache_shape)
+
+
+def opt_v_specs(param_specs_tree: Pytree, params_shape: Pytree,
+                factored: bool) -> Pytree:
+    """Specs for the second moment: mirrors params, or factored {r, c}."""
+    if not factored:
+        return param_specs_tree
+
+    def one(spec: P, leaf) -> Any:
+        shape = leaf.shape
+        if len(shape) < 2 or shape[-1] <= 1 or shape[-2] <= 1:
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        return {"r": P(*parts[:-1]), "c": P(*(parts[:-2] + [parts[-1]]))}
+
+    return jax.tree.map(one, param_specs_tree, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(spec_tree: Pytree, mesh) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_shardings(sds_tree: Pytree, spec_tree: Pytree, mesh) -> Pytree:
+    """Attach NamedShardings to a ShapeDtypeStruct pytree (dry-run stand-ins)."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        sds_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))

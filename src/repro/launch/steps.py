@@ -1,0 +1,254 @@
+"""Step builders: train / prefill / serve, with shardings and dry-run stand-ins.
+
+``build_cell(arch, shape, mesh, recipe)`` is the single entry the dry-run, the
+trainer and the server all use: it returns the jitted step callable plus
+ShapeDtypeStruct stand-ins (``input_specs``) for every input, so
+
+    jax.jit(fn, in_shardings=..., out_shardings=..., donate_argnums=...)
+        .lower(*cell.args).compile()
+
+is the whole multi-pod dry-run for one (architecture x input-shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+from repro.models import lm
+from repro.optim import (AdamWConfig, adamw_update, init_opt_state,
+                         microbatch_grads)
+
+from .mesh import batch_axes as mesh_batch_axes
+from .shardings import (batch_specs, cache_specs, ep_axes_for, param_specs,
+                        to_named, with_shardings)
+
+
+# ---------------------------------------------------------------------------
+# Recipes: per-(arch, shape) execution knobs — the perf-hillclimb surface
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Recipe:
+    n_micro: int = 1
+    moment_dtype: str = "float32"
+    accum_dtype: str = "float32"
+    factored_v: bool = False           # Adafactor-style second moment
+    remat: bool | None = None          # None = keep cfg.remat
+    dispatch: str | None = None        # override cfg.moe.dispatch
+    lr: float = 3e-4
+
+
+# Memory-driven defaults for the big configs (v5e has 16 GB HBM/chip):
+# bf16 moments + bf16 grad accumulation + microbatching keep 405B-class training
+# inside budget on 256 chips.  See EXPERIMENTS.md §Dry-run for the arithmetic.
+_TRAIN_RECIPES: dict[str, Recipe] = {
+    "llama3-405b": Recipe(n_micro=16, moment_dtype="bfloat16",
+                          accum_dtype="bfloat16"),
+    "qwen1.5-110b": Recipe(n_micro=8, moment_dtype="bfloat16"),
+    "deepseek-v2-236b": Recipe(n_micro=8, moment_dtype="bfloat16",
+                               accum_dtype="bfloat16"),
+    "qwen3-moe-235b-a22b": Recipe(n_micro=8, moment_dtype="bfloat16",
+                                  accum_dtype="bfloat16"),
+    "granite-34b": Recipe(n_micro=4),
+    "qwen2.5-14b": Recipe(n_micro=2),
+    "pixtral-12b": Recipe(n_micro=2),
+    "musicgen-large": Recipe(n_micro=2),
+    # §Perf hymba_it2: unrolled 32-layer hybrid needs microbatching to fit
+    # (2.3 TB -> 123 GB/chip measured); xlstm similarly at batch 1M tokens.
+    "hymba-1.5b": Recipe(n_micro=16),
+    "xlstm-350m": Recipe(n_micro=8),
+}
+
+
+def recipe_for(arch: str, shape: ShapeConfig) -> Recipe:
+    if shape.kind == "train":
+        return _TRAIN_RECIPES.get(arch, Recipe())
+    return Recipe()
+
+
+def clamp_n_micro(recipe: Recipe, shape: ShapeConfig, mesh) -> Recipe:
+    """Keep microbatches shardable: global_batch/n_micro must divide by the
+    batch shards, else the batch spec drops sharding and every chip replays
+    the full microbatch (a 20x step-time cliff, found by the dry-run)."""
+    shards = 1
+    for a in ("pod", "data"):
+        shards *= mesh.shape.get(a, 1)
+    n = max(1, min(recipe.n_micro, shape.global_batch // shards))
+    while n > 1 and (shape.global_batch % n or
+                     (shape.global_batch // n) % shards):
+        n -= 1
+    if n != recipe.n_micro:
+        recipe = dataclasses.replace(recipe, n_micro=n)
+    return recipe
+
+
+def _with_recipe(cfg: ModelConfig, recipe: Recipe) -> ModelConfig:
+    changes: dict = {}
+    if recipe.remat is not None and recipe.remat != cfg.remat:
+        changes["remat"] = recipe.remat
+    if recipe.dispatch and cfg.moe is not None and \
+            recipe.dispatch != cfg.moe.dispatch:
+        changes["moe"] = dataclasses.replace(cfg.moe, dispatch=recipe.dispatch)
+    return dataclasses.replace(cfg, **changes) if changes else cfg
+
+
+# ---------------------------------------------------------------------------
+# Step functions (pure; jitted by build_cell)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, ocfg: AdamWConfig, ep: tuple[str, ...],
+                    recipe: Recipe) -> Callable:
+    def loss_fn(p, b):
+        return lm.train_loss(p, cfg, b, ep_axes=ep)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = microbatch_grads(loss_fn, params, batch, recipe.n_micro,
+                                       accum_dtype=recipe.accum_dtype)
+        params, opt_state, metrics = adamw_update(ocfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                      ep: tuple[str, ...]) -> Callable:
+    def prefill_step(params, batch):
+        cache = lm.init_cache(cfg, shape.global_batch, shape.seq_len)
+        logits, new_cache, _ = lm.forward(
+            params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            cache=cache, ep_axes=ep)
+        return logits[:, -1:], new_cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ep: tuple[str, ...]) -> Callable:
+    def serve_step(params, cache, batch):
+        logits, new_cache = lm.serve_step(
+            params, cfg, cache, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), ep_axes=ep)
+        return logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Dry-run cell assembly
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    fn: Callable                       # un-jitted step
+    args: tuple                        # ShapeDtypeStructs with shardings
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    cfg: ModelConfig
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def _params_sds(cfg: ModelConfig, mesh):
+    sds = jax.eval_shape(functools.partial(lm.init_lm, cfg=cfg),
+                         jax.random.key(0))
+    specs = param_specs(sds, mesh, cfg)
+    return with_shardings(sds, specs, mesh), specs
+
+
+def _batch_sds(cfg: ModelConfig, shape: ShapeConfig, mesh, *, decode: bool):
+    s = 1 if decode else shape.seq_len
+    b = shape.global_batch
+    out = {}
+    if cfg.modality == "text":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                             jnp.dtype(cfg.dtype))
+    if not decode:
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs = batch_specs(out, mesh)
+    return with_shardings(out, specs, mesh), specs
+
+
+def _cache_sds(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    sds = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, shape.global_batch, shape.seq_len))
+    specs = cache_specs(sds, mesh, cfg)
+    return with_shardings(sds, specs, mesh), specs
+
+
+def input_specs(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+                recipe: Recipe | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step function."""
+    cell = build_cell(arch, shape_name, mesh, smoke=smoke, recipe=recipe)
+    names = {"train": ("params", "opt_state", "batch"),
+             "prefill": ("params", "batch"),
+             "decode": ("params", "cache", "batch")}[cell.shape.kind]
+    return dict(zip(names, cell.args))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+               recipe: Recipe | None = None) -> Cell:
+    shape = SHAPES[shape_name] if isinstance(shape_name, str) else shape_name
+    cfg = get_config(arch, smoke=smoke)
+    recipe = recipe or recipe_for(arch, shape)
+    if shape.kind == "train":
+        recipe = clamp_n_micro(recipe, shape, mesh)
+    cfg = _with_recipe(cfg, recipe)
+    ep = ep_axes_for(mesh) if cfg.family == "moe" else ()
+
+    p_sds, p_specs = _params_sds(cfg, mesh)
+    p_sh = to_named(p_specs, mesh)
+
+    if shape.kind == "train":
+        from .shardings import opt_v_specs
+        ocfg = AdamWConfig(lr=recipe.lr, moment_dtype=recipe.moment_dtype,
+                           factored_v=recipe.factored_v)
+        o_sds = jax.eval_shape(
+            functools.partial(init_opt_state, moment_dtype=recipe.moment_dtype,
+                              factored_v=recipe.factored_v),
+            p_sds)
+        o_specs = {"m": p_specs,
+                   "v": opt_v_specs(p_specs, p_sds, recipe.factored_v),
+                   "step": P()}
+        o_sds = with_shardings(o_sds, o_specs, mesh)
+        o_sh = to_named(o_specs, mesh)
+        b_sds, b_specs = _batch_sds(cfg, shape, mesh, decode=False)
+        b_sh = to_named(b_specs, mesh)
+        fn = make_train_step(cfg, ocfg, ep, recipe)
+        return Cell(arch, shape, fn, (p_sds, o_sds, b_sds),
+                    (p_sh, o_sh, b_sh), (p_sh, o_sh, None), (0, 1), cfg)
+
+    if shape.kind == "prefill":
+        b_sds, b_specs = _batch_sds(cfg, shape, mesh, decode=False)
+        b_sh = to_named(b_specs, mesh)
+        _, c_specs = _cache_sds(cfg, shape, mesh)
+        c_sh = to_named(c_specs, mesh)
+        fn = make_prefill_step(cfg, shape, ep)
+        return Cell(arch, shape, fn, (p_sds, b_sds),
+                    (p_sh, b_sh), (None, c_sh), (), cfg)
+
+    # decode: one new token against a seq_len-deep cache
+    c_sds, c_specs = _cache_sds(cfg, shape, mesh)
+    c_sh = to_named(c_specs, mesh)
+    b_sds, b_specs = _batch_sds(cfg, shape, mesh, decode=True)
+    b_sh = to_named(b_specs, mesh)
+    fn = make_serve_step(cfg, ep)
+    return Cell(arch, shape, fn, (p_sds, c_sds, b_sds),
+                (p_sh, c_sh, b_sh), (None, c_sh), (1,), cfg)

@@ -1,0 +1,162 @@
+"""Flash-style blocked attention in pure JAX (the XLA lowering path).
+
+The fused-einsum attention materializes ``[B, H, Sq, Skv]`` f32 logits — at 32k
+context that is terabytes.  This module computes attention with an outer
+``lax.map`` over query blocks and an inner ``lax.scan`` over kv blocks carrying the
+online-softmax state ``(m, l, acc)``, so live memory is
+``O(B · H · block_q · block_kv)`` logits + the output — the same tiling idea as the
+Pallas kernel (kernels/flash_attention.py) expressed in XLA ops, which is what the
+512-chip dry-run lowers (cost_analysis then reflects the fused HLO).
+
+Differences vs the Pallas kernel (documented for the roofline):
+
+* no causal tile *skipping* — masked tiles are computed then discarded (XLA control
+  flow inside scan would serialize); the kernel skips them on real TPU.  Causal
+  attention therefore costs ~2x its minimal FLOPs on this path.
+* supports GQA (kv-head broadcast in the einsum), MLA (dk != dv), sliding windows,
+  KV-cache validity masking, and query offsets — one implementation for every
+  attention variant in the model zoo.
+
+Shapes: q [B,S,H,dk], k [B,T,KVH,dk], v [B,T,KVH,dv] -> [B,S,H,dv].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_NEG = -1e30
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# Default tile sizes; overridable per-lowering (the §Perf hillclimb surface —
+# carry/logits HBM traffic on the XLA path scales as S^2/block_kv).
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_KV = 1024
+_block_overrides: dict = {}
+
+
+def set_block_defaults(block_q: int | None = None,
+                       block_kv: int | None = None) -> None:
+    """Override attention tile sizes for subsequent tracings (perf knob)."""
+    if block_q is None:
+        _block_overrides.pop("q", None)
+    else:
+        _block_overrides["q"] = block_q
+    if block_kv is None:
+        _block_overrides.pop("kv", None)
+    else:
+        _block_overrides["kv"] = block_kv
+
+
+def blocked_attention(
+    q: jax.Array,                # [B, S, H, dk]
+    k: jax.Array,                # [B, T, KVH, dk]
+    v: jax.Array,                # [B, T, KVH, dv]
+    *,
+    causal: bool = True,
+    window: int = 0,             # sliding window size; 0 = global
+    q_offset=0,                  # row index of q[0] relative to k[0] (decode/prefill)
+    valid_len=None,              # number of valid kv positions (cache masking)
+    block_q: int | None = None,
+    block_kv: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    block_q = block_q or _block_overrides.get("q", DEFAULT_BLOCK_Q)
+    block_kv = block_kv or _block_overrides.get("kv", DEFAULT_BLOCK_KV)
+    b, s, h, dk = q.shape
+    _, t, kvh, _ = k.shape
+    dv = v.shape[-1]
+    group = h // kvh
+    scale = (dk ** -0.5) if scale is None else scale
+
+    bq = min(block_q, _ceil_to(s, 8))
+    bk = min(block_kv, _ceil_to(t, 8))
+    s_p, t_p = _ceil_to(s, bq), _ceil_to(t, bk)
+    if s_p != s:
+        q = jnp.pad(q, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+    if t_p != t:
+        k = jnp.pad(k, ((0, 0), (0, t_p - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_p - t), (0, 0), (0, 0)))
+    nq, nk = s_p // bq, t_p // bk
+
+    # [nq, B, bq, KVH, group, dk] query blocks; kv stays [nk, B, bk, KVH, d]
+    qb = q.reshape(b, nq, bq, kvh, group, dk).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(b, nk, bk, kvh, dk).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, bk, kvh, dv).transpose(1, 0, 2, 3, 4)
+
+    t_valid = jnp.asarray(t if valid_len is None else valid_len, jnp.int32)
+
+    # Sliding-window kv restriction: a q block only attends to kv positions in
+    # [q_start - window + 1, q_start + bq - 1], i.e. a STATIC number of kv
+    # blocks — slice just those from the block-stacked cache instead of
+    # scanning (and masking) the whole sequence.  Turns SWA layers from
+    # O(S^2) traffic/FLOPs into O(S x window) (hymba's 29/32 layers).
+    nwb = nk
+    if window and causal:
+        span = window + bq - 1                        # cols a q block can see
+        nwb = min(nk, -(-span // bk) + 1)
+
+    def q_block(args):
+        qi, qblk = args                               # [], [B,bq,KVH,g,dk]
+        q_start = q_offset + qi * bq
+        rows = q_start + jnp.arange(bq)               # absolute causal row ids
+        if nwb < nk:
+            first = jnp.clip((q_start - (window - 1)) // bk, 0, nk - nwb)
+            ksel = lax.dynamic_slice_in_dim(kb, first, nwb, axis=0)
+            vsel = lax.dynamic_slice_in_dim(vb, first, nwb, axis=0)
+            kidx = first + jnp.arange(nwb)
+        else:
+            ksel, vsel, kidx = kb, vb, jnp.arange(nk)
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            kj, kblk, vblk = kv
+            cols = kj * bk + jnp.arange(bk)
+            logits = jnp.einsum("bqkgd,bckd->bkgqc", qblk.astype(jnp.float32),
+                                kblk.astype(jnp.float32)) * scale
+            mask = (cols[None, :] < t_valid)
+            if causal:
+                mask &= rows[:, None] >= cols[None, :]
+            if window:
+                mask &= (rows[:, None] - cols[None, :]) < window
+            logits = jnp.where(mask[None, None, None], logits, _NEG)
+            m_cur = jnp.max(logits, axis=-1)                      # [B,KVH,g,bq]
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p, vblk.astype(jnp.float32))
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, group, bq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, kvh, group, bq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, group, bq, dv), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kidx, ksel, vsel))
+        out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]        # [B,KVH,g,bq,dv]
+        return out.transpose(0, 3, 1, 2, 4)                       # [B,bq,KVH,g,dv]
+
+    # The named scope tags every HLO instruction in this region (metadata
+    # op_name contains "flash_xla"), letting the roofline analyzer report a
+    # kernel-adjusted memory term: on TPU the Pallas flash kernel keeps the
+    # (m, l, acc) state and the logits tile in VMEM, so this region's
+    # elementwise HBM traffic does not exist there.
+    with jax.named_scope("flash_xla"):
+        blocks = lax.map(q_block, (jnp.arange(nq), qb))           # [nq,B,bq,KVH,g,dv]
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s_p, h, dv)
+    return out[:, :s].astype(q.dtype)
+
+
+# Below this many logit elements the fused-einsum path is cheaper than the scan
+# machinery (smoke tests, decode steps).
+_FUSED_LOGITS_BUDGET = 1 << 27          # 128M f32 logits ~ 512 MB
+
+
+def use_blocked(b: int, s: int, t: int, h: int) -> bool:
+    return b * s * t * h > _FUSED_LOGITS_BUDGET

@@ -1,0 +1,43 @@
+"""Modality frontends — STUBS by assignment.
+
+``[vlm]`` (pixtral) and ``[audio]`` (musicgen) specify the transformer *backbone*
+only; the assignment's ``input_specs()`` provides precomputed patch/frame embeddings.
+These helpers exist so the smoke tests and examples can produce those embeddings
+from raw-ish inputs with realistic shapes, and so the embedding contract
+([B, S, d_model], bf16) is written down in exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def init_patch_frontend(key, cfg: ModelConfig, patch_dim: int = 768):
+    """ViT-patch stub: one linear projection patch_dim -> d_model."""
+    return {"proj": dense_init(key, patch_dim, cfg.d_model, jnp.dtype(cfg.dtype))}
+
+
+def patch_embed(p, patches: jax.Array) -> jax.Array:
+    """patches: [B, S, patch_dim] (pre-extracted, e.g. 16x16x3 flattened)."""
+    return patches @ p["proj"]
+
+
+def init_frame_frontend(key, cfg: ModelConfig, codebooks: int = 4):
+    """EnCodec-frame stub: per-codebook embedding tables, summed (delay pattern
+    and the acoustic tokenizer itself are out of scope)."""
+    ks = jax.random.split(key, codebooks)
+    dt = jnp.dtype(cfg.dtype)
+    tables = [(jax.random.normal(k, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+               ).astype(dt) for k in ks]
+    return {"tables": tables}
+
+
+def frame_embed(p, codes: jax.Array) -> jax.Array:
+    """codes: [B, S, codebooks] int32 -> [B, S, d_model]."""
+    out = 0
+    for i, table in enumerate(p["tables"]):
+        out = out + table[codes[..., i]]
+    return out

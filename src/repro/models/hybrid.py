@@ -1,0 +1,157 @@
+"""Hymba-style hybrid block: parallel attention + Mamba(S6) heads in every layer.
+
+The two paths read the same normed input; their (normalized) outputs are mean-fused
+with learnable per-path scales — the Hymba fusion.  Most layers use sliding-window
+attention; ``cfg.global_attn_layers`` use global attention.  The SSM path trains
+with an associative scan (sub-quadratic) and decodes with O(1)/token carried state,
+which is what qualifies the hybrid for ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import (Params, _dtype, attention, dense_init, init_attention,
+                     rms_norm)
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ss = cfg.ssm
+    di = d * ss.expand
+    n = ss.state_dim
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, dt),
+        "conv": (jax.random.normal(ks[1], (ss.conv_dim, di), jnp.float32) * 0.1
+                 ).astype(dt),
+        "w_bcdt": dense_init(ks[2], di, 2 * n + 1, dt),   # B, C, dt per token
+        "log_a": jnp.log(jnp.linspace(1.0, float(n), n, dtype=jnp.float32)
+                         )[None, :].repeat(di, 0),        # [di, n] (S4D-real init)
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[3], di, d, dt),
+        "dt_bias": jnp.full((1,), -4.6, dt),              # softplus^-1(0.01)
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None):
+    """x: [B,S,di]; w: [K,di] depthwise; state: [B,K-1,di] tail from the past."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return out, new_state
+
+
+MAMBA_CHUNK = 128
+
+
+def mamba_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                  state: Params | None = None, *, chunk: int = MAMBA_CHUNK
+                  ) -> tuple[jax.Array, Params]:
+    """S6 selective scan.  state = {"conv": [B,K-1,di], "ssm": [B,di,n]}.
+
+    The decay/input tensors are ``[B,S,di,n]`` — hundreds of GB at 32k context — so
+    the scan is chunked: an outer ``lax.scan`` over chunks carries the [B,di,n]
+    state exactly; within a chunk the associative scan runs on [B,L,di,n] blocks.
+    """
+    b, s, d = x.shape
+    ss = cfg.ssm
+    n = ss.state_dim
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                     # [B,S,di]
+    di = xi.shape[-1]
+    xi, conv_state = _causal_conv(xi, p["conv"], None if state is None
+                                  else state["conv"])
+    xi = jax.nn.silu(xi)
+    bcdt = (xi @ p["w_bcdt"]).astype(jnp.float32)
+    bmat, cmat, dt_raw = jnp.split(bcdt, [n, 2 * n], axis=-1)   # [B,S,n],[B,S,n],[B,S,1]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"].astype(jnp.float32))  # [B,S,1]
+    a = -jnp.exp(p["log_a"])                              # [di, n], negative real
+
+    prev = (jnp.zeros((b, di, n), jnp.float32) if state is None
+            else state["ssm"].astype(jnp.float32))       # [B,di,n]
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    if s == 1 and state is not None:                      # decode fast path
+        da = jnp.exp(dt[..., None] * a)                   # [B,1,di,n]
+        dbx = (dt * xi.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+        h = prev * da[:, 0] + dbx[:, 0]                   # [B,di,n]
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None] \
+            + xi.astype(jnp.float32) * p["d_skip"]
+        new_ssm = h
+    else:
+        L = min(chunk, s)
+        pad = (-s) % L
+        xif = xi.astype(jnp.float32)
+        dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0))) if pad else dt
+        xip = jnp.pad(xif, ((0, 0), (0, pad), (0, 0))) if pad else xif
+        bp = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0))) if pad else bmat
+        cp = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0))) if pad else cmat
+        nc = (s + pad) // L
+
+        def to_chunks(t):
+            return t.reshape(b, nc, L, t.shape[-1]).transpose(1, 0, 2, 3)
+
+        def body(h_in, inp):
+            dtc, xic, bc, cc = inp                        # [B,L,*]
+            dta = dtc[..., None] * a                      # [B,L,di,n]
+            da = jnp.exp(dta)
+            dbx = (dtc * xic)[..., None] * bc[:, :, None, :]
+            _, hs = lax.associative_scan(assoc, (da, dbx), axis=1)
+            # add the carried state propagated by the cumulative decay
+            cum = jnp.exp(jnp.cumsum(dta, axis=1))        # prod of da up to t
+            hs = hs + cum * h_in[:, None]
+            yc = jnp.einsum("bldn,bln->bld", hs, cc)
+            return hs[:, -1], yc
+
+        h_out, ys = lax.scan(body, prev, (to_chunks(dtp), to_chunks(xip),
+                                          to_chunks(bp), to_chunks(cp)))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, nc * L, di)[:, :s]
+        y = y + xif * p["d_skip"]
+        new_ssm = h_out
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["w_out"]
+    new_state = {"conv": conv_state, "ssm": new_ssm.astype(jnp.float32)}
+    return out, new_state
+
+
+def init_hymba_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    return {
+        "attn": init_attention(ks[0], cfg),
+        "mamba": init_mamba(ks[1], cfg),
+        "attn_scale": jnp.ones((cfg.d_model,), dt),
+        "mamba_scale": jnp.ones((cfg.d_model,), dt),
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "mamba_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def hymba_mixer(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+                *, window: int, cache: Params | None = None
+                ) -> tuple[jax.Array, Params | None]:
+    """Parallel attn+SSM heads reading the same input; normalized mean fusion."""
+    attn_cache = None if cache is None else cache["attn"]
+    ssm_state = None if cache is None else cache["ssm"]
+    ao, new_attn = attention(p["attn"], cfg, x, positions, cache=attn_cache,
+                             window=window)
+    mo, new_ssm = mamba_forward(p["mamba"], cfg, x, state=ssm_state)
+    fused = 0.5 * (rms_norm(ao, p["attn_norm"], cfg.norm_eps) * p["attn_scale"]
+                   + rms_norm(mo, p["mamba_norm"], cfg.norm_eps) * p["mamba_scale"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"attn": new_attn, "ssm": new_ssm}
+    return fused, new_cache

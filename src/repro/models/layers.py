@@ -1,0 +1,298 @@
+"""Shared neural layers: norms, RoPE, attention variants (GQA / MLA / SWA), MLP.
+
+Everything is a pure function over param pytrees (nested dicts), initialized with
+explicit ``jax.random`` keys.  Attention dispatches to the Pallas flash kernel on TPU
+(``cfg.use_pallas``) or the fused-einsum XLA path for dry-run lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+from .blocked_attention import blocked_attention, use_blocked
+from .config import ModelConfig
+
+Params = dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, scale: float | None = None):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: [..., S]."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # [Dh/2]
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # [..., S, 1, Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window), XLA path + Pallas dispatch
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    qh, kvh = cfg.attn_dims
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, qh, dt),
+        "wk": dense_init(ks[1], cfg.d_model, kvh, dt),
+        "wv": dense_init(ks[2], cfg.d_model, kvh, dt),
+        "wo": dense_init(ks[3], qh, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qh,), dt)
+        p["bk"] = jnp.zeros((kvh,), dt)
+        p["bv"] = jnp.zeros((kvh,), dt)
+    return p
+
+
+def _sdpa_fused(q, k, v, *, causal: bool, window: int, q_offset, valid_len,
+                scale: float | None = None) -> jax.Array:
+    """[B,S,H,dk] x [B,T,KVH,dk/dv]; fused-einsum attention (small shapes only)."""
+    b, s, h, dk = q.shape
+    _, t, kvh, _ = k.shape
+    dv = v.shape[-1]
+    group = h // kvh
+    scale = (dk ** -0.5) if scale is None else scale
+    qg = q.reshape(b, s, kvh, group, dk)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    rows = jnp.arange(s)[:, None] + q_offset
+    cols = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= rows >= cols
+    if window:
+        mask &= (rows - cols) < window
+    if valid_len is not None:
+        mask &= cols < valid_len
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dv).astype(q.dtype)
+
+
+def _attend(q, k, v, *, causal: bool = True, window: int = 0, q_offset=0,
+            valid_len=None, scale: float | None = None) -> jax.Array:
+    """Dispatch: fused einsum for small logits, blocked flash-style scan for big.
+
+    One entry point for every attention variant (GQA, MQA, MLA dk!=dv, SWA,
+    KV-cache decode/prefill-append).  Single-token decode always takes the
+    fused path: the q/kv-block machinery would re-slice (and under GSPMD
+    re-gather) the sequence-sharded cache per block; the fused einsum
+    contracts over the sharded T dim with one clean psum — and on real TPU
+    this is the decode_attention Pallas kernel's slot anyway."""
+    b, s, h, _ = q.shape
+    t = k.shape[1]
+    if s > 1 and use_blocked(b, s, t, h):
+        return blocked_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, valid_len=valid_len,
+                                 scale=scale)
+    return _sdpa_fused(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                       valid_len=valid_len, scale=scale)
+
+
+def attention(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+              *, cache: Params | None = None, window: int = 0) -> tuple[jax.Array, Params | None]:
+    """x: [B, S, D].  With ``cache`` (decode/prefill-append): returns updated cache."""
+    b, s, d = x.shape
+    qh, kvh = cfg.attn_dims
+    q = x @ p["wq"] + (p.get("bq", 0))
+    k = x @ p["wk"] + (p.get("bk", 0))
+    v = x @ p["wv"] + (p.get("bv", 0))
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # ring-buffer append at cache["len"] (static-shape dynamic_update_slice)
+        kc, vc, ln = cache["k"], cache["v"], cache["len"]
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, ln, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, ln, 0, 0))
+        new_cache = {"k": kc, "v": vc, "len": ln + s}
+        out = _attend(q, kc, vc, causal=True, window=window, q_offset=ln,
+                      valid_len=ln + s)
+        out = out.reshape(b, s, qh)
+        return (out @ p["wo"]).astype(x.dtype), new_cache
+
+    if cfg.use_pallas and s > 1:
+        qf = q.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, s, cfg.d_head)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * cfg.n_kv_heads, s, cfg.d_head)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * cfg.n_kv_heads, s, cfg.d_head)
+        of = kops.attention(qf, kf, vf, causal=True)
+        out = of.reshape(b, cfg.n_heads, s, cfg.d_head).transpose(0, 2, 1, 3)
+    else:
+        out = _attend(q, k, v, causal=True, window=window)
+    out = out.reshape(b, s, qh)
+    return (out @ p["wo"]).astype(x.dtype), None
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         dtype=jnp.bfloat16) -> Params:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    m = cfg.mla
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 7)
+    qk_head = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], cfg.d_model, m.q_lora_rank, dt),
+        "q_a_norm": jnp.ones((m.q_lora_rank,), dt),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, cfg.n_heads * qk_head, dt),
+        "wkv_a": dense_init(ks[2], cfg.d_model, m.kv_lora_rank + m.rope_head_dim, dt),
+        "kv_a_norm": jnp.ones((m.kv_lora_rank,), dt),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                            cfg.n_heads * (m.nope_head_dim + m.v_head_dim), dt),
+        "wo": dense_init(ks[4], cfg.n_heads * m.v_head_dim, cfg.d_model, dt),
+    }
+
+
+def mla_attention(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+                  *, cache: Params | None = None) -> tuple[jax.Array, Params | None]:
+    """Latent attention: caches only the compressed kv latent + shared rope key."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, s, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]                                       # [B,S,r+rope]
+    latent, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    latent = rms_norm(latent, p["kv_a_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,dr]
+
+    new_cache = None
+    if cache is not None:
+        lc, rc, ln = cache["latent"], cache["k_rope"], cache["len"]
+        lc = jax.lax.dynamic_update_slice(lc, latent.astype(lc.dtype), (0, ln, 0))
+        rc = jax.lax.dynamic_update_slice(rc, k_rope[:, :, 0, :].astype(rc.dtype),
+                                          (0, ln, 0))
+        new_cache = {"latent": lc, "k_rope": rc, "len": ln + s}
+        latent_full, k_rope_full, valid = lc, rc[:, :, None, :], ln + s
+    else:
+        latent_full, k_rope_full, valid = latent, k_rope, None
+
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+
+    if cache is not None and s == 1:
+        # Absorbed decode (DeepSeek-V2 §2.1.3): fold wkv_b into the query and
+        # the output so attention runs directly in the latent space — no
+        # [B,T,h,d] per-head key/value rematerialization (which at 32k cache
+        # is the decode memory hot-spot; see EXPERIMENTS §Perf).
+        t = latent_full.shape[1]
+        w_abs = p["wkv_b"].reshape(m.kv_lora_rank, h,
+                                   m.nope_head_dim + m.v_head_dim)
+        wk_abs = w_abs[..., :m.nope_head_dim]                 # [r, h, dn]
+        wv_abs = w_abs[..., m.nope_head_dim:]                 # [r, h, dv]
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                           wk_abs.astype(jnp.float32))        # [B,1,h,r]
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat,
+                             latent_full.astype(jnp.float32))
+                  + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                               k_rope_full[:, :, 0].astype(jnp.float32))
+                  ) * scale                                   # [B,h,1,T]
+        cols = jnp.arange(t)
+        scores = jnp.where(cols[None, None, None] < valid, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", probs,
+                         latent_full.astype(jnp.float32))     # [B,1,h,r]
+        out = jnp.einsum("bshr,rhd->bshd", ctx, wv_abs.astype(jnp.float32))
+        out = out.reshape(b, s, h * m.v_head_dim).astype(x.dtype)
+        return out @ p["wo"], new_cache
+
+    kv = latent_full @ p["wkv_b"]
+    kv = kv.reshape(b, -1, h, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.nope_head_dim], axis=-1)
+    t = k_nope.shape[1]
+
+    # One dot per (nope ++ rope) concat; the shared rope key broadcasts over heads.
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)            # [B,S,h,dn+dr]
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_full, (b, t, h, m.rope_head_dim)
+                                  ).astype(k_nope.dtype)], axis=-1)
+    q_off = (valid - s) if valid is not None else 0
+    out = _attend(q_cat, k_cat, v, causal=True, q_offset=q_off,
+                  valid_len=valid, scale=scale)
+    out = out.reshape(b, s, h * m.v_head_dim).astype(x.dtype)
+    return out @ p["wo"], new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Params:
+    m = cfg.mla
+    return {"latent": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[1], cfg.d_model, d_ff, dt),
+         "w_down": dense_init(ks[2], d_ff, cfg.d_model, dt)}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[0], cfg.d_model, d_ff, dt)
+    return p
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    if "w_gate" in p:
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]

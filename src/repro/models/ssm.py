@@ -1,0 +1,252 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel trainable) + sLSTM (scalar memory).
+
+Training uses the exact parallel (masked linear-attention) form of mLSTM; decoding
+uses the O(1)/token recurrent form with carried state — this is what makes
+``long_500k`` runnable for the SSM archs (no KV cache growth).  sLSTM is inherently
+sequential (recurrent mixing) and runs as a ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import Params, _dtype, dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    di = d * 2                               # expansion 2 (xLSTM paper)
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * di, dt),       # [x_inner, gate branch]
+        "wq": dense_init(ks[1], di, di, dt),
+        "wk": dense_init(ks[2], di, di, dt),
+        "wv": dense_init(ks[3], di, di, dt),
+        "w_ifo": dense_init(ks[4], di, 3 * h, dt),      # input/forget/out gates per head
+        "b_ifo": jnp.zeros((3 * h,), dt),
+        "w_down": dense_init(ks[5], di, d, dt),
+        "norm": jnp.ones((di,), dt),
+    }
+
+
+def mlstm_parallel(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Exact parallel form for training: decay-masked linear attention."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    up = x @ p["w_up"]
+    xi, zg = jnp.split(up, 2, axis=-1)                   # [B,S,di] each
+    di = xi.shape[-1]
+    dh = di // h
+    q = (xi @ p["wq"]).reshape(b, s, h, dh)
+    k = (xi @ p["wk"]).reshape(b, s, h, dh) / (dh ** 0.5)
+    v = (xi @ p["wv"]).reshape(b, s, h, dh)
+    gates = (xi @ p["w_ifo"] + p["b_ifo"]).reshape(b, s, 3, h).astype(jnp.float32)
+    log_i = -jax.nn.softplus(-gates[:, :, 0])            # log sigmoid-ish input gate
+    log_f = -jax.nn.softplus(-gates[:, :, 1])            # log forget gate
+    o = jax.nn.sigmoid(gates[:, :, 2])                   # output gate [B,S,h]
+    a = jnp.cumsum(log_f, axis=1)                        # [B,S,h] cumulative decay
+    # D_ij = exp(a_i - a_j + log_i_j) for j <= i  (stabilized per query row)
+    dmat = a[:, :, None, :] - a[:, None, :, :] + log_i[:, None, :, :]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+    dmax = jnp.max(dmat, axis=2, keepdims=True)
+    dmat = jnp.exp(dmat - jnp.maximum(dmax, 0.0))        # xLSTM max-stabilizer
+    logits = jnp.einsum("bihd,bjhd->bijh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * dmat
+    norm = jnp.maximum(jnp.abs(jnp.sum(logits, axis=2)),
+                       jnp.exp(-jnp.maximum(dmax[:, :, 0], 0.0)))  # [B,S,h]
+    out = jnp.einsum("bijh,bjhd->bihd", logits, v.astype(jnp.float32))
+    out = (out / (norm[..., None] + 1e-6)) * o[..., None]
+    out = out.reshape(b, s, di).astype(x.dtype)
+    out = rms_norm(out, p["norm"], cfg.norm_eps) * jax.nn.silu(zg)
+    return out @ p["w_down"]
+
+
+def mlstm_chunked(p: Params, cfg: ModelConfig, x: jax.Array,
+                  state: Params | None = None, *, chunk: int = 256
+                  ) -> tuple[jax.Array, Params]:
+    """Chunkwise-parallel mLSTM: exact recurrence semantics, O(S·L) memory.
+
+    The full parallel form materializes an S x S decay matrix — terabytes at 32k.
+    This is the standard chunked linear-attention factorization adapted to the
+    stabilized mLSTM: within a chunk of length L the decay matrix is L x L; across
+    chunks the (C, n, m) state is carried exactly as in :func:`mlstm_step`, so
+    ``mlstm_chunked == scan(mlstm_step)`` to float tolerance (tested).  This is
+    also what makes train_4k / prefill_32k / long-context prefill lowerable, and
+    prefill now *returns* the decode state for free.
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    up = x @ p["w_up"]
+    xi, zg = jnp.split(up, 2, axis=-1)                   # [B,S,di]
+    di = xi.shape[-1]
+    dh = di // h
+    q = (xi @ p["wq"]).reshape(b, s, h, dh).astype(jnp.float32)
+    k = ((xi @ p["wk"]) / (dh ** 0.5)).reshape(b, s, h, dh).astype(jnp.float32)
+    v = (xi @ p["wv"]).reshape(b, s, h, dh).astype(jnp.float32)
+    gates = (xi @ p["w_ifo"] + p["b_ifo"]).reshape(b, s, 3, h).astype(jnp.float32)
+    log_i = -jax.nn.softplus(-gates[:, :, 0])            # [B,S,h]
+    log_f = -jax.nn.softplus(-gates[:, :, 1])
+    o = jax.nn.sigmoid(gates[:, :, 2])
+
+    L = min(chunk, s)
+    pad = (-s) % L
+    if pad:
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v = padf(q), padf(k), padf(v)
+        # padding: i-gate -> -inf (contributes nothing), f-gate -> 0 (keeps state)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // L
+
+    def to_chunks(t):                                    # [B,S,...] -> [nc,B,L,...]
+        return t.reshape(b, nc, L, *t.shape[2:]).transpose(1, 0, 2,
+                                                           *range(3, t.ndim + 1))
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)
+
+    st = state or init_mlstm_state(cfg, b)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(carry, inp):
+        C, n, m_in = carry                               # [B,h,dh,dh],[B,h,dh],[B,h]
+        qb, kb, vb, li, lf = inp                         # [B,L,h,*]
+        a = jnp.cumsum(lf, axis=1)                       # [B,L,h] inclusive decay
+        # D[t,s] = a_t - a_s + li_s for s<=t
+        D = a[:, :, None, :] - a[:, None, :, :] + li[:, None, :, :]
+        D = jnp.where(tri[None, :, :, None], D, -jnp.inf)
+        m_intra = jnp.max(D, axis=2)                     # [B,L,h]
+        m_row = jnp.maximum(m_intra, a + m_in[:, None, :])
+        # intra-chunk scores and inter-chunk read of the carried state
+        w = jnp.exp(D - m_row[:, :, None, :])            # [B,L,L,h]
+        scores = jnp.einsum("bthd,bshd->btsh", qb, kb) * w
+        inter_w = jnp.exp(a + m_in[:, None, :] - m_row)  # [B,L,h]
+        num = jnp.einsum("btsh,bshd->bthd", scores, vb) \
+            + inter_w[..., None] * jnp.einsum("bhkv,bthk->bthv", C, qb)
+        den = jnp.sum(scores, axis=2) \
+            + inter_w * jnp.einsum("bhk,bthk->bth", n, qb)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_row))
+        out = num / (den[..., None] + 1e-6)              # [B,L,h,dh]
+        # state to end of chunk (row t = L-1 of the same factorization)
+        aL = a[:, -1:, :]                                # [B,1,h]
+        m_out = jnp.maximum(jnp.max(aL - a + li, axis=1),
+                            aL[:, 0] + m_in)             # [B,h]
+        kw = jnp.exp(aL - a + li - m_out[:, None, :])    # [B,L,h]
+        C_new = jnp.exp(aL[:, 0] + m_in - m_out)[..., None, None] * C \
+            + jnp.einsum("blh,blhk,blhv->bhkv", kw, kb, vb)
+        n_new = jnp.exp(aL[:, 0] + m_in - m_out)[..., None] * n \
+            + jnp.einsum("blh,blhk->bhk", kw, kb)
+        return (C_new, n_new, m_out), out
+
+    (C, n, m), outs = lax.scan(body, (st["C"], st["n"], st["m"]),
+                               (qc, kc, vc, lic, lfc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nc * L, h, dh)[:, :s]
+    out = (out * o[..., None]).reshape(b, s, di).astype(x.dtype)
+    out = rms_norm(out, p["norm"], cfg.norm_eps) * jax.nn.silu(zg)
+    return out @ p["w_down"], {"C": C, "n": n, "m": m}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    h = cfg.n_heads
+    di = cfg.d_model * 2
+    dh = di // h
+    return {"C": jnp.zeros((batch, h, dh, dh), dtype),
+            "n": jnp.zeros((batch, h, dh), dtype),
+            "m": jnp.full((batch, h), -1e30, dtype)}
+
+
+def mlstm_step(p: Params, cfg: ModelConfig, x: jax.Array, state: Params
+               ) -> tuple[jax.Array, Params]:
+    """Recurrent form, one token: x [B,1,D] -> (out [B,1,D], new state)."""
+    b, s, d = x.shape
+    assert s == 1
+    h = cfg.n_heads
+    up = x[:, 0] @ p["w_up"]
+    xi, zg = jnp.split(up, 2, axis=-1)
+    di = xi.shape[-1]
+    dh = di // h
+    q = (xi @ p["wq"]).reshape(b, h, dh).astype(jnp.float32)
+    k = ((xi @ p["wk"]) / (dh ** 0.5)).reshape(b, h, dh).astype(jnp.float32)
+    v = (xi @ p["wv"]).reshape(b, h, dh).astype(jnp.float32)
+    gates = (xi @ p["w_ifo"] + p["b_ifo"]).reshape(b, 3, h).astype(jnp.float32)
+    log_i = -jax.nn.softplus(-gates[:, 0])
+    log_f = -jax.nn.softplus(-gates[:, 1])
+    o = jax.nn.sigmoid(gates[:, 2])
+    m_new = jnp.maximum(log_f + state["m"], log_i)       # [B,h] stabilizer
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    C = f_s[..., None, None] * state["C"] + i_s[..., None, None] * \
+        jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), jnp.exp(-m_new))
+    out = (num / (den[..., None] + 1e-6)) * o[..., None]
+    out = out.reshape(b, di).astype(x.dtype)
+    out = rms_norm(out, p["norm"], cfg.norm_eps) * jax.nn.silu(zg)
+    return (out @ p["w_down"])[:, None], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, dt),         # z, i, f, o pre-activations
+        "w_rec": dense_init(ks[1], d, 4 * d, dt, scale=0.02),  # recurrent (block-diag ok)
+        "b": jnp.zeros((4 * d,), dt),
+        "w_down": dense_init(ks[2], d, d, dt),
+        "norm": jnp.ones((d,), dt),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), dtype), "n": jnp.zeros((batch, d), dtype),
+            "h": jnp.zeros((batch, d), dtype), "m": jnp.full((batch, d), -1e30, dtype)}
+
+
+def _slstm_cell(p: Params, x_t: jax.Array, st: Params) -> tuple[Params, jax.Array]:
+    pre = (x_t @ p["w_in"] + st["h"].astype(x_t.dtype) @ p["w_rec"] + p["b"]
+           ).astype(jnp.float32)
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    log_i = -jax.nn.softplus(-i)
+    log_f = -jax.nn.softplus(-f)
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + st["m"] - m_new)
+    c = f_s * st["c"] + i_s * z
+    n = jnp.maximum(f_s * st["n"] + i_s, 1e-6)
+    hh = o * (c / n)
+    return {"c": c, "n": n, "h": hh, "m": m_new}, hh
+
+
+def slstm_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                  state: Params | None = None) -> tuple[jax.Array, Params]:
+    """x: [B,S,D]; sequential scan over time (sLSTM has recurrent mixing)."""
+    b, s, d = x.shape
+    st = state or init_slstm_state(cfg, b)
+
+    def step(carry, x_t):
+        carry, h = _slstm_cell(p, x_t, carry)
+        return carry, h
+
+    st, hs = lax.scan(step, st, x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)
+    hs = rms_norm(hs, p["norm"], cfg.norm_eps)
+    return hs @ p["w_down"], st

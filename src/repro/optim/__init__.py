@@ -1,0 +1,8 @@
+"""Optimizer substrate: AdamW + schedules + clipping + gradient accumulation."""
+from .adamw import (AdamWConfig, init_opt_state, adamw_update, global_norm,
+                    clip_by_global_norm, cosine_schedule, opt_state_specs)
+from .accumulate import microbatch_grads
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "opt_state_specs",
+           "microbatch_grads"]

@@ -1,0 +1,143 @@
+"""AdamW with decoupled weight decay, cosine schedule and global-norm clipping.
+
+Pure pytree functions (no framework dependency) so the same code runs under pjit
+(optimizer states inherit the parameter shardings — ZeRO-style, every chip updates
+only its shard) and in the CPU examples.  Moments are fp32 regardless of the param
+dtype; params can be bf16 (the update is computed in fp32 and cast back).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # bf16 moments halve optimizer HBM — required to fit 405B on 256 v5e chips;
+    # the update math stays fp32 (cast on store only).
+    moment_dtype: str = "float32"
+    # Adafactor-style factored second moment for >=2-D leaves: v ~ r (x) c / mean(r)
+    # stores O(d_in + d_out) instead of O(d_in * d_out) — removes ~half the
+    # remaining optimizer HBM at 405B scale (see EXPERIMENTS §Perf).
+    factored_v: bool = False
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to ``min_lr_frac * lr``."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1.0, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def _can_factor(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def init_opt_state(params: Pytree, moment_dtype: str = "float32",
+                   factored_v: bool = False) -> Pytree:
+    dt = jnp.dtype(moment_dtype)
+
+    def v_for(p):
+        if factored_v and _can_factor(p.shape):
+            # factors kept fp32 (they are tiny); m keeps moment_dtype
+            return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return jnp.zeros(p.shape, dt)
+
+    return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+            "v": jax.tree.map(v_for, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_specs(param_specs: Pytree) -> Pytree:
+    """Moment shardings = parameter shardings; step is replicated."""
+    from jax.sharding import PartitionSpec as P
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+_NO_DECAY_SUBSTRINGS = ("norm", "ln1", "ln2", "bias", "b_ifo", "bq", "bk", "bv",
+                        "scale", "dt_bias", "d_skip")
+
+
+def _decay_mask(params: Pytree) -> Pytree:
+    def mask(path, leaf) -> jnp.ndarray:
+        name = "/".join(str(getattr(p, "key", p)) for p in path).lower()
+        nd = any(s in name for s in _NO_DECAY_SUBSTRINGS) or leaf.ndim <= 1
+        return jnp.asarray(0.0 if nd else 1.0, jnp.float32)
+    return jax.tree_util.tree_map_with_path(mask, params)
+
+
+def adamw_update(cfg: AdamWConfig, params: Pytree, grads: Pytree,
+                 state: Pytree) -> tuple[Pytree, Pytree, dict]:
+    """One AdamW step.  Returns (new params, new state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    decay = _decay_mask(params)
+
+    def upd(p, g, m, v, dmask):
+        g32 = g.astype(jnp.float32)
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        mh = m2 / b1t
+        if isinstance(v, dict):                       # factored second moment
+            g2 = jnp.square(g32)
+            r2 = cfg.b2 * v["r"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            c2 = cfg.b2 * v["c"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            r_mean = jnp.mean(r2, axis=-1, keepdims=True)
+            vh = (r2[..., :, None] * c2[..., None, :] /
+                  jnp.maximum(r_mean[..., None], 1e-30)) / b2t
+            v_new = {"r": r2, "c": c2}
+        else:
+            v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * \
+                jnp.square(g32)
+            vh = v2 / b2t
+            v_new = v2.astype(v.dtype)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * dmask * \
+            p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m2.astype(m.dtype), v_new)
+
+    # NB tree_map flattens the later trees "up to" params' structure, so a
+    # factored v subtree {"r","c"} arrives at upd as a dict.
+    flat = jax.tree.map(upd, params, grads, state["m"], state["v"], decay)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

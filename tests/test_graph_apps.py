@@ -1,0 +1,105 @@
+"""Graph engine (the paper's evaluation vehicle): PageRank/SSSP correctness and
+the end-to-end adaptive-shuffle integration."""
+import numpy as np
+import pytest
+
+from repro.apps.graph.engine import Graph, PregelEngine, rmat_graph
+from repro.apps.graph.programs import PageRank, SSSP
+from repro.core import TeShuService, datacenter
+
+
+def line_graph(n=16):
+    src = np.arange(n - 1, dtype=np.int64)
+    return Graph(n, src, src + 1)
+
+
+def star_graph(n=32):
+    """Vertex 0 points at everyone (hub)."""
+    return Graph(n, np.zeros(n - 1, dtype=np.int64),
+                 np.arange(1, n, dtype=np.int64))
+
+
+@pytest.fixture
+def svc():
+    return TeShuService(datacenter(2, 2, 2, oversubscription=4.0))
+
+
+def _pagerank_dense(graph, iters=10, damping=0.85):
+    """Dense numpy oracle."""
+    n = graph.num_vertices
+    pr = np.full(n, 1.0 / n)
+    outdeg = np.maximum(graph.out_degree(), 1)
+    for _ in range(iters):
+        contrib = np.zeros(n)
+        np.add.at(contrib, graph.dst, pr[graph.src] / outdeg[graph.src])
+        pr = (1 - damping) / n + damping * contrib
+    return pr
+
+
+def _sssp_dense(graph, source=0):
+    n = graph.num_vertices
+    dist = np.full(n, np.inf)
+    dist[source] = 0
+    for _ in range(n):
+        nd = np.minimum.reduceat if False else None
+        updated = False
+        cand = dist[graph.src] + 1.0
+        for s, d, c in zip(graph.src, graph.dst, cand):
+            if c < dist[d]:
+                dist[d] = c
+                updated = True
+        if not updated:
+            break
+    return dist
+
+
+@pytest.mark.parametrize("template", ["vanilla_push", "network_aware"])
+def test_pagerank_matches_oracle(svc, template):
+    g = rmat_graph(256, 2000, seed=1)
+    engine = PregelEngine(g, svc, template_id=template, rate=0.05)
+    pr = engine.run(PageRank(supersteps=10))
+    expect = _pagerank_dense(g, iters=10)
+    np.testing.assert_allclose(pr, expect, rtol=1e-8, atol=1e-12)
+
+
+@pytest.mark.parametrize("template", ["vanilla_push", "network_aware"])
+def test_sssp_matches_oracle(svc, template):
+    g = rmat_graph(128, 1200, seed=2)
+    engine = PregelEngine(g, svc, template_id=template, rate=0.05)
+    dist = engine.run(SSSP(source=0, supersteps=16))
+    expect = _sssp_dense(g, source=0)
+    got = np.where(dist > 1e29, np.inf, dist)
+    np.testing.assert_allclose(got, expect)
+
+
+def test_sssp_line_graph_exact(svc):
+    g = line_graph(10)
+    engine = PregelEngine(g, svc, template_id="vanilla_push")
+    dist = engine.run(SSSP(source=0, supersteps=12))
+    np.testing.assert_allclose(dist, np.arange(10, dtype=float))
+
+
+def test_network_aware_saves_bytes_on_graph(svc):
+    """The paper's headline: adaptive shuffling cuts cross-boundary traffic on
+    power-law graphs (hub vertices receive many combinable messages)."""
+    g = rmat_graph(512, 8000, seed=3)
+    svc.reset_stats()
+    e1 = PregelEngine(g, svc, template_id="vanilla_push")
+    e1.run(PageRank(supersteps=3))
+    vanilla = svc.stats()
+    svc.reset_stats()
+    e2 = PregelEngine(g, svc, template_id="network_aware", rate=0.02)
+    pr = e2.run(PageRank(supersteps=3))
+    aware = svc.stats()
+    assert aware["bytes_per_level"]["global"] < \
+        vanilla["bytes_per_level"]["global"]
+    # and the answer is still right
+    np.testing.assert_allclose(pr, _pagerank_dense(g, iters=3), rtol=1e-8)
+
+
+def test_star_graph_hub_combining(svc):
+    """All messages target the hub's neighbours -> max combiner benefit."""
+    g = star_graph(64)
+    engine = PregelEngine(g, svc, template_id="network_aware", rate=0.5)
+    pr = engine.run(PageRank(supersteps=2))
+    np.testing.assert_allclose(pr, _pagerank_dense(g, iters=2), rtol=1e-8)

@@ -1,0 +1,169 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp ref oracles.
+
+All kernels run in interpret mode on CPU (the kernel body executes in Python);
+on TPU the same pallas_call compiles natively.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.combine import segment_combine
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gmm import gmm, route_and_pad
+from repro.kernels.partition import partition_permute
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,s,d,group", [
+    (4, 128, 64, 1),       # exact tile fit
+    (4, 200, 64, 2),       # ragged seq -> padding path
+    (8, 64, 128, 4),       # GQA group 4, small seq
+    (2, 384, 32, 1),       # multi kv-tile
+])
+def test_flash_attention_sweep(bh, s, d, group, dtype):
+    kq, kk, kv = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(kq, (bh, s, d), dtype)
+    k = jax.random.normal(kk, (bh // group, s, d), dtype)
+    v = jax.random.normal(kv, (bh // group, s, d), dtype)
+    out = flash_attention(q, k, v, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_noncausal():
+    q = jax.random.normal(jax.random.key(1), (2, 96, 64))
+    k = jax.random.normal(jax.random.key(2), (2, 96, 64))
+    v = jax.random.normal(jax.random.key(3), (2, 96, 64))
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# segment combine (COMB)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,segs", [(300, 64, 16), (1024, 130, 7),
+                                      (64, 512, 33)])
+def test_segment_combine_sweep(n, d, segs, dtype):
+    ids = jax.random.randint(jax.random.key(4), (n,), -1, segs)
+    vals = jax.random.normal(jax.random.key(5), (n, d), dtype)
+    out = segment_combine(ids, vals, num_segments=segs, interpret=True)
+    expect = ref.segment_combine_ref(ids, vals, num_segments=segs)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@given(n=st.integers(1, 400), segs=st.integers(1, 40),
+       seed=st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_segment_combine_property(n, segs, seed):
+    """Property: per-segment sums preserve the total of non-dropped rows."""
+    ids = jax.random.randint(jax.random.key(seed), (n,), -1, segs)
+    vals = jnp.ones((n, 8), jnp.float32)
+    out = segment_combine(ids, vals, num_segments=segs, interpret=True)
+    kept = int(jnp.sum(ids >= 0))
+    assert float(jnp.sum(out[:, 0])) == pytest.approx(kept)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul (MoE expert compute)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("groups,tiles,d,f", [(4, 8, 128, 256), (7, 7, 256, 128)])
+def test_gmm_sweep(groups, tiles, d, f, dtype):
+    block_n = 128
+    x = jax.random.normal(jax.random.key(6), (tiles * block_n, d), dtype)
+    w = jax.random.normal(jax.random.key(7), (groups, d, f), dtype)
+    tg = jax.random.randint(jax.random.key(8), (tiles,), 0, groups)
+    out = gmm(x, w, tg, block_n=block_n, interpret=True)
+    expect = ref.gmm_ref(x, w, tg, block_n=block_n)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_route_and_pad_roundtrip():
+    eids = jnp.asarray(np.random.default_rng(0).integers(0, 4, 500), jnp.int32)
+    rows, tg, valid = route_and_pad(eids, 4, block_n=128, capacity_tiles=2)
+    assert rows.shape == (4 * 2 * 128,)
+    assert tg.shape == (4 * 2,)
+    # every kept row's expert matches its tile's expert
+    kept = np.asarray(rows[valid])
+    tile_of = np.repeat(np.asarray(tg), 128)[np.asarray(valid)]
+    np.testing.assert_array_equal(np.asarray(eids)[kept], tile_of)
+
+
+# ---------------------------------------------------------------------------
+# partition permute (PART)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,out", [(300, 64, 300), (128, 100, 520),
+                                     (700, 256, 64)])
+def test_partition_permute_sweep(n, d, out, dtype):
+    rng = np.random.default_rng(1)
+    slots = jnp.asarray(rng.choice(out, size=min(n, out), replace=False)
+                        if n <= out else rng.integers(-1, out, n), jnp.int32)
+    if n <= out:
+        pass
+    vals = jax.random.normal(jax.random.key(9), (n, d), dtype)
+    got = partition_permute(slots[:n], vals, num_out=out, interpret=True)
+    expect = ref.partition_permute_ref(slots[:n], vals, num_out=out)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_partition_permute_is_permutation():
+    """Unique slots: output rows are exactly the permuted inputs."""
+    n = 64
+    perm = np.random.default_rng(2).permutation(n).astype(np.int32)
+    vals = jnp.arange(n * 8, dtype=jnp.float32).reshape(n, 8)
+    out = partition_permute(jnp.asarray(perm), vals, num_out=n, interpret=True)
+    np.testing.assert_allclose(np.asarray(out)[perm], np.asarray(vals))
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kvh,t,d,valid", [
+    (2, 8, 2, 512, 64, 512),     # exact tiles, full cache
+    (2, 8, 8, 700, 64, 650),     # MHA, ragged cache with masked tail
+    (1, 48, 1, 1024, 128, 333),  # MQA (granite-style), partial cache
+])
+def test_decode_attention_sweep(b, h, kvh, t, d, valid, dtype):
+    kq, kk, kv = jax.random.split(jax.random.key(10), 3)
+    q = jax.random.normal(kq, (b, h, d), dtype)
+    k = jax.random.normal(kk, (b, t, kvh, d), dtype)
+    v = jax.random.normal(kv, (b, t, kvh, d), dtype)
+    out = decode_attention(q, k, v, jnp.int32(valid), interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_ops_dispatch_matches_refs():
+    """ops.* wrappers agree with refs on CPU (interpret vs oracle)."""
+    q = jax.random.normal(jax.random.key(11), (2, 130, 64))
+    k = jax.random.normal(jax.random.key(12), (1, 130, 64))
+    v = jax.random.normal(jax.random.key(13), (1, 130, 64))
+    np.testing.assert_allclose(
+        ops.attention(q, k, v), ops.attention(q, k, v, use_kernel=False),
+        rtol=2e-5, atol=2e-5)

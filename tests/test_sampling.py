@@ -1,0 +1,114 @@
+"""Sampling tests: partition-aware vs random (the Figure-5 phenomenon) plus
+hypothesis property tests on the estimator's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SUM, Msgs, estimate_reduction_ratio, group_of,
+                        num_groups_for_rate, partition_aware_sample,
+                        random_sample, reduction_ratio)
+
+
+def zipf_msgs(n=20000, keys=200, alpha=0.9, seed=0, workers=8):
+    """Heavy-duplication workload split over workers.
+
+    alpha ~0.9 is the rank exponent of web-graph in-degree (scale-free gamma
+    ~2.1 -> rank exponent 1/(gamma-1) ~0.9) — the paper's PageRank-message
+    regime, where no single destination dominates total traffic."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, keys + 1, dtype=np.float64)
+    cdf = np.cumsum(ranks ** -alpha) / np.sum(ranks ** -alpha)
+    ks = np.searchsorted(cdf, rng.random(n)).astype(np.int64)
+    per = n // workers
+    return [Msgs(ks[i * per:(i + 1) * per],
+                 np.ones((per, 1))) for i in range(workers)]
+
+
+def test_partition_aware_beats_random_at_low_rate():
+    """Figure 5: at low rates, partition-aware stays near truth while random
+    collapses to ~1.0 (a sparse sample almost never contains duplicates).
+
+    The key space must be large relative to 1/rate so sampled groups hold
+    enough keys to be traffic-representative (the paper's graphs have ~1e8
+    keys; its 1e-4-rate groups still hold ~1e4 keys)."""
+    shards = zipf_msgs(n=200000, keys=20000, workers=8)
+    pooled = Msgs.concat(shards)
+    truth = reduction_ratio(pooled, SUM)
+    assert truth < 0.25                       # heavy-duplication regime
+
+    for rate in (0.01, 0.002):
+        pa = [partition_aware_sample(m, rate, seed=5) for m in shards]
+        est_pa = estimate_reduction_ratio(pa, SUM)
+        rnd = Msgs.concat([random_sample(m, rate, seed=5) for m in shards])
+        est_rand = reduction_ratio(rnd, SUM)
+        assert abs(est_pa - truth) < 0.15, (rate, est_pa, truth)
+        assert est_rand > truth + 0.3, (rate, est_rand, truth)
+
+
+def test_sample_overhead_scales_with_rate():
+    shards = zipf_msgs()
+    for rate in (0.1, 0.01):
+        samp = [partition_aware_sample(m, rate, seed=1) for m in shards]
+        frac = sum(s.n for s in samp) / sum(m.n for m in shards)
+        assert frac < 4 * rate + 0.02, (rate, frac)
+
+
+def test_group_of_consistency():
+    """Same key -> same group (consistent hashing, Figure 4), groups cover."""
+    keys = np.arange(5000, dtype=np.int64)
+    g = group_of(keys, 100)
+    g2 = group_of(keys, 100)
+    assert np.array_equal(g, g2)
+    assert np.unique(g).size == 100
+
+
+# ---------------------------------------------------------------------------
+# property-based tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+@given(rate=st.floats(0.0001, 1.0))
+def test_num_groups_positive(rate):
+    s = num_groups_for_rate(rate)
+    assert s >= 1
+    assert abs(1.0 / s - rate) <= rate        # rate ~ 1/s up to rounding
+
+
+@given(keys=st.lists(st.integers(-2**40, 2**40), min_size=1, max_size=300),
+       rate=st.sampled_from([1.0, 0.5, 0.1, 0.03]),
+       seed=st.integers(0, 10))
+@settings(max_examples=60, deadline=None)
+def test_sample_is_destination_closed(keys, rate, seed):
+    """Property: the sample contains EVERY message of the chosen group and
+    NONE of any other group — the closure partition-aware sampling is built on."""
+    ks = np.asarray(keys, np.int64)
+    msgs = Msgs(ks, np.ones((len(keys), 1)))
+    samp = partition_aware_sample(msgs, rate, seed=seed)
+    s = num_groups_for_rate(rate)
+    groups = group_of(ks, s)
+    sampled_groups = np.unique(group_of(samp.keys, s)) if samp.n else []
+    assert len(sampled_groups) <= 1
+    if samp.n:
+        j = sampled_groups[0]
+        assert samp.n == int(np.sum(groups == j))
+
+
+@given(keys=st.lists(st.integers(0, 50), min_size=1, max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_reduction_ratio_bounds(keys):
+    """Property: ratio in (0, 1]; equals |unique|/|keys| for SUM."""
+    msgs = Msgs(np.asarray(keys, np.int64), np.ones((len(keys), 1)))
+    r = reduction_ratio(msgs, SUM)
+    assert 0 < r <= 1.0
+    assert r == pytest.approx(np.unique(keys).size / len(keys))
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_estimator_unbiased_over_seeds(seed):
+    """Pooled-shard estimation sees cross-worker duplicates; accuracy holds
+    across group choices when groups hold >=100 keys."""
+    shards = zipf_msgs(n=20000, keys=2000, seed=seed % 5, workers=4)
+    est = estimate_reduction_ratio(
+        [partition_aware_sample(m, 0.05, seed=seed) for m in shards], SUM)
+    truth = reduction_ratio(Msgs.concat(shards), SUM)
+    assert abs(est - truth) < 0.25

@@ -1,0 +1,148 @@
+"""Unit tests for the TeShu core: messages, primitives, templates, semantics.
+
+The central invariant (paper §3.2): every template — vanilla push/pull,
+coordinated, bruck, two-level, network-aware — delivers the SAME combined
+multiset of messages; they differ only in where bytes flow.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (COMBINERS, HASH_PART, MAX, MIN, SUM, Msgs, TEMPLATES,
+                        TeShuService, datacenter, partition, range_part,
+                        splitmix64, template_loc)
+
+from conftest import total_payload
+
+
+# ---------------------------------------------------------------------------
+# messages / partition / combiners
+# ---------------------------------------------------------------------------
+
+def test_partition_covers_and_respects_partfunc():
+    rng = np.random.default_rng(0)
+    msgs = Msgs(rng.integers(0, 1000, 500), rng.random((500, 2)))
+    dsts = [3, 7, 11, 19]
+    parts = partition(msgs, dsts, HASH_PART)
+    assert sum(p.n for p in parts.values()) == msgs.n
+    for i, d in enumerate(dsts):
+        if parts[d].n:
+            assert np.all(HASH_PART.assign(parts[d].keys, len(dsts)) == i)
+
+
+def test_partition_range():
+    msgs = Msgs(np.arange(100), np.ones((100, 1)))
+    parts = partition(msgs, [0, 1, 2, 3], range_part(100))
+    assert [parts[d].n for d in range(4)] == [25, 25, 25, 25]
+    assert np.all(parts[0].keys < 25)
+
+
+def test_combiner_sum_min_max():
+    msgs = Msgs(np.array([5, 3, 5, 3, 5]), np.array([1.0, 2.0, 3.0, 4.0, 5.0]))
+    out = SUM(msgs)
+    assert out.n == 2
+    np.testing.assert_allclose(sorted(out.vals[:, 0]), [6.0, 9.0])
+    assert MIN(msgs).vals.min() == 1.0
+    assert MAX(msgs).vals.max() == 5.0
+
+
+def test_combiner_preserves_total_for_sum():
+    rng = np.random.default_rng(1)
+    msgs = Msgs(rng.integers(0, 10, 200), rng.random((200, 3)))
+    np.testing.assert_allclose(SUM(msgs).vals.sum(), msgs.vals.sum())
+
+
+def test_splitmix64_deterministic_and_mixing():
+    x = np.arange(1000, dtype=np.int64)
+    h1, h2 = splitmix64(x), splitmix64(x)
+    assert np.array_equal(h1, h2)
+    assert np.unique(h1 % np.uint64(16)).size == 16     # all buckets hit
+    assert not np.array_equal(splitmix64(x, seed=1), h1)
+
+
+# ---------------------------------------------------------------------------
+# template semantic equivalence (the Table-3 suite)
+# ---------------------------------------------------------------------------
+
+SQUARE_TEMPLATES = ["two_level"]            # needs a square worker grid
+ALL_TEMPLATES = ["vanilla_push", "vanilla_pull", "coordinated", "bruck",
+                 "network_aware"]
+
+
+def _run(service, template, bufs, comb=SUM, rate=0.05):
+    nw = service.topology.num_workers
+    copy = {w: Msgs(m.keys.copy(), m.vals.copy()) for w, m in bufs.items()}
+    return service.shuffle(template, copy, list(range(nw)), list(range(nw)),
+                           comb_fn=comb, rate=rate)
+
+
+@pytest.mark.parametrize("template", ALL_TEMPLATES)
+def test_template_equivalence_sum(service, skewed_bufs, template):
+    ref = _run(service, "vanilla_push", skewed_bufs)
+    res = _run(service, template, skewed_bufs)
+    assert set(res.bufs) == set(ref.bufs)
+    for w in ref.bufs:
+        a, b = ref.bufs[w], res.bufs[w]
+        order_a, order_b = np.argsort(a.keys), np.argsort(b.keys)
+        np.testing.assert_array_equal(a.keys[order_a], b.keys[order_b])
+        np.testing.assert_allclose(a.vals[order_a], b.vals[order_b], rtol=1e-9)
+
+
+def test_two_level_equivalence_square():
+    topo = datacenter(2, 2, 4)               # 16 workers: square
+    svc = TeShuService(topo)
+    rng = np.random.default_rng(3)
+    bufs = {w: Msgs(rng.integers(0, 64, 200), rng.random((200, 1)))
+            for w in range(16)}
+    ref = _run(svc, "vanilla_push", bufs)
+    res = _run(svc, "two_level", bufs)
+    for w in ref.bufs:
+        a, b = ref.bufs[w], res.bufs[w]
+        np.testing.assert_allclose(sorted(a.vals.sum(axis=0)),
+                                   sorted(b.vals.sum(axis=0)), rtol=1e-9)
+
+
+@pytest.mark.parametrize("template", ALL_TEMPLATES)
+def test_template_equivalence_min(service, skewed_bufs, template):
+    ref = _run(service, "vanilla_push", skewed_bufs, comb=MIN)
+    res = _run(service, template, skewed_bufs, comb=MIN)
+    for w in ref.bufs:
+        a, b = MIN(ref.bufs[w]), MIN(res.bufs[w])
+        np.testing.assert_allclose(np.sort(a.vals[:, 0]), np.sort(b.vals[:, 0]))
+
+
+def test_network_aware_reduces_global_bytes(service, skewed_bufs):
+    service.reset_stats()
+    _run(service, "vanilla_push", skewed_bufs)
+    vanilla = service.stats()["bytes_per_level"]
+    service.reset_stats()
+    res = _run(service, "network_aware", skewed_bufs)
+    aware = service.stats()["bytes_per_level"]
+    # bytes crossing the oversubscribed (global) boundary must drop
+    assert aware["global"] < vanilla["global"]
+    assert res.decisions, "adaptive template must record EFF/COST decisions"
+
+
+def test_template_loc_counts_match_paper_scale():
+    """Table 3: vanilla ~5, coordinated ~9, bruck ~11, two-level ~18 LoC."""
+    locs = {tid: TEMPLATES[tid].loc() for tid in TEMPLATES}
+    assert locs["vanilla_push"] <= 8
+    assert locs["coordinated"] <= 12
+    assert locs["bruck"] <= 20
+    assert locs["two_level"] <= 25
+    assert locs["network_aware"] <= 55
+    # relative ordering as in the paper
+    assert locs["vanilla_push"] < locs["coordinated"] <= locs["bruck"] \
+        < locs["two_level"] < locs["network_aware"]
+
+
+def test_empty_buffers_ok(service):
+    nw = service.topology.num_workers
+    bufs = {w: Msgs.empty() for w in range(nw)}
+    res = _run(service, "vanilla_push", bufs)
+    assert all(m.n == 0 for m in res.bufs.values())
+
+
+def test_pull_mode_charges_receiver(service, skewed_bufs):
+    service.reset_stats()
+    _run(service, "vanilla_pull", skewed_bufs)
+    assert service.stats()["total_bytes"] > 0
