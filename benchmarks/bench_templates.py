@@ -1,8 +1,15 @@
 """Table 3: template expressiveness — lines of TeShu template code per shuffle
-algorithm, plus a byte/time profile of each template on a common workload."""
+algorithm, plus a byte/time profile of each template on a common workload, plus
+the plan-cache / vectorization benchmark (beyond-paper: repeated shuffles)."""
 from __future__ import annotations
 
-from repro.core import SUM, TEMPLATES, TeShuService, datacenter, template_loc
+import time
+
+import numpy as np
+
+from repro.core import (HASH_PART, SUM, TEMPLATES, Msgs, ShuffleArgs,
+                        TeShuService, datacenter, fat_tree, multipod_dcn,
+                        run_shuffle, template_loc)
 
 from .common import CsvOut, paper_topology, zipf_shards
 
@@ -39,8 +46,84 @@ def template_profile() -> CsvOut:
     return out
 
 
+def plan_cache_profile(iters: int = 8) -> CsvOut:
+    """Plan-cache hit/miss + vectorization speedup on repeated shuffles.
+
+    Three executions of the *same* (template, topology, workload) key:
+
+    * ``fresh``   — paper-faithful: re-instantiate every call (cache bypassed);
+    * ``cached``  — plan-cache hit, thread-per-worker reference executor;
+    * ``vector``  — plan-cache hit, batched-numpy data plane.
+
+    ``setup`` speedup isolates the control-plane saving (instantiation skipped),
+    ``vector`` speedup adds the data-plane win; ``samp_kb`` is the per-shuffle
+    sampling traffic the cache eliminates (0 on every hit).  Outputs are asserted
+    identical across all three paths before timing is reported.
+    """
+    out = CsvOut("plan_cache_profile",
+                 ["topology", "template", "workers", "fresh_ms", "cached_ms",
+                  "vector_ms", "setup_speedup", "vector_speedup", "samp_kb",
+                  "hits"])
+    topologies = {
+        "paper_2rack": paper_topology(oversubscription=10.0),
+        "fat_tree": fat_tree(2, 2, 2, 2, edge_oversubscription=4.0,
+                             core_oversubscription=4.0),
+        "multipod_dcn": multipod_dcn(4, 2, 2),
+    }
+    for topo_name, topo in topologies.items():
+        nw = topo.num_workers
+        base = zipf_shards(nw, 10_000, 5_000, seed=11)
+        workers = list(range(nw))
+        for tid in ("vanilla_push", "network_aware"):
+            svc = TeShuService(topo)
+
+            def copy_bufs():
+                return {w: m.copy() for w, m in base.items()}
+
+            def one_fresh():
+                # paper-faithful baseline: the raw driver, no signature/compile/
+                # cache work inside the timed region
+                bufs = copy_bufs()
+                args = ShuffleArgs(tid, svc.next_shuffle_id(), tuple(workers),
+                                   tuple(workers), part_fn=HASH_PART,
+                                   comb_fn=SUM, rate=0.01)
+                t0 = time.perf_counter()
+                res = run_shuffle(svc.cluster, args, bufs, manager=svc.manager)
+                return time.perf_counter() - t0, res
+
+            def one(execution: str):
+                bufs = copy_bufs()
+                t0 = time.perf_counter()
+                res = svc.shuffle(tid, bufs, workers, workers, comb_fn=SUM,
+                                  rate=0.01, execution=execution)
+                return time.perf_counter() - t0, res
+
+            _, ref = one("auto")                  # warm: compiles the plan
+            svc.reset_stats()
+            fresh = [one_fresh() for _ in range(iters)]
+            samp_kb = svc.stats()["sample_bytes"] / len(fresh) / 1e3
+            cached = [one("threaded") for _ in range(iters)]
+            vector = [one("auto") for _ in range(iters)]
+            for _, res in cached + vector:        # identical outputs, all paths
+                for w in ref.bufs:
+                    a, b = ref.bufs[w], res.bufs[w]
+                    oa, ob = np.argsort(a.keys), np.argsort(b.keys)
+                    assert np.array_equal(a.keys[oa], b.keys[ob])
+                    assert np.array_equal(a.vals[oa], b.vals[ob])
+            st = svc.cache_stats()
+            f = float(np.median([t for t, _ in fresh]))
+            c = float(np.median([t for t, _ in cached]))
+            v = float(np.median([t for t, _ in vector]))
+            out.add(topology=topo_name, template=tid, workers=nw,
+                    fresh_ms=f * 1e3, cached_ms=c * 1e3, vector_ms=v * 1e3,
+                    setup_speedup=f / max(c, 1e-12),
+                    vector_speedup=f / max(v, 1e-12),
+                    samp_kb=samp_kb, hits=st["hits"])
+    return out
+
+
 def run() -> list[CsvOut]:
-    return [table3(), template_profile()]
+    return [table3(), template_profile(), plan_cache_profile()]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""jax API compatibility: names that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and ``PartitionSpec`` grew the ``jax.P`` alias in newer jax; the code is written
+against the new names and imports them from here so both generations work.
+"""
+import jax
+
+P = getattr(jax, "P", None) or jax.sharding.PartitionSpec
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(name):
+        # old jax: jax.core.axis_frame returns the concrete mapped-axis size
+        if isinstance(name, (tuple, list)):
+            out = 1
+            for n in name:
+                out *= int(jax.core.axis_frame(n))
+            return out
+        return int(jax.core.axis_frame(name))
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, **kwargs):
+        # the replication-check kwarg was renamed check_rep -> check_vma
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, **kwargs)

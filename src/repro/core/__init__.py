@@ -1,28 +1,36 @@
 """TeShu core: the paper's contribution — templated, adaptive, sampled shuffles."""
-from .adaptive import EffCost, compute_eff_cost
+from .adaptive import EffCost, compute_eff_cost, reduction_drift
 from .coscheduler import CoflowRequest, CoflowScheduler, ScheduleEntry
 from .manager import ShuffleManager, ShuffleRecord
 from .messages import (COMBINERS, HASH_PART, MAX, MIN, SUM, Combiner, Msgs, PartFn,
                        partition, range_part, splitmix64)
+from .plancache import (CompiledPlan, LevelDecision, PlanCache, compile_plan,
+                        plan_key, stats_signature)
 from .primitives import CostLedger, LocalCluster, ShuffleArgs, WorkerContext
 from .sampling import (estimate_reduction_ratio, group_of, num_groups_for_rate,
                        partition_aware_sample, random_sample, reduction_ratio)
 from .service import TeShuService
 from .templates import (TEMPLATES, ShuffleResult, ShuffleTemplate, register_template,
                         run_shuffle, template_loc)
-from .topology import (NetworkTopology, Level, datacenter, degrade_links,
-                       from_mesh_axes, roofline_times, dominant_term,
+from .topology import (NetworkTopology, Level, datacenter, degrade_links, fat_tree,
+                       from_mesh_axes, multipod_dcn, roofline_times, dominant_term,
                        roofline_fraction)
+from .vectorized import (can_vectorize, combine_msgs, run_shuffle_vectorized,
+                         set_comb_backend)
 
 __all__ = [
-    "EffCost", "compute_eff_cost", "CoflowRequest", "CoflowScheduler",
-    "ScheduleEntry", "ShuffleManager", "ShuffleRecord",
+    "EffCost", "compute_eff_cost", "reduction_drift", "CoflowRequest",
+    "CoflowScheduler", "ScheduleEntry", "ShuffleManager", "ShuffleRecord",
     "COMBINERS", "HASH_PART", "MAX", "MIN", "SUM", "Combiner", "Msgs", "PartFn",
-    "partition", "range_part", "splitmix64", "CostLedger", "LocalCluster",
+    "partition", "range_part", "splitmix64",
+    "CompiledPlan", "LevelDecision", "PlanCache", "compile_plan", "plan_key",
+    "stats_signature", "CostLedger", "LocalCluster",
     "ShuffleArgs", "WorkerContext", "estimate_reduction_ratio", "group_of",
     "num_groups_for_rate", "partition_aware_sample", "random_sample",
     "reduction_ratio", "TeShuService", "TEMPLATES", "ShuffleResult",
     "ShuffleTemplate", "register_template", "run_shuffle", "template_loc",
-    "NetworkTopology", "Level", "datacenter", "degrade_links", "from_mesh_axes",
-    "roofline_times", "dominant_term", "roofline_fraction",
+    "NetworkTopology", "Level", "datacenter", "degrade_links", "fat_tree",
+    "from_mesh_axes", "multipod_dcn", "roofline_times", "dominant_term",
+    "roofline_fraction", "can_vectorize", "combine_msgs",
+    "run_shuffle_vectorized", "set_comb_backend",
 ]

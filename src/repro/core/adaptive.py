@@ -33,6 +33,20 @@ class EffCost:
         return self.eff > self.cost
 
 
+def reduction_drift(baseline: float, observed: float, *,
+                    tolerance: float = 0.15) -> bool:
+    """Has the data's reduction ratio drifted from what the plan was compiled on?
+
+    The plan cache replays EFF/COST verdicts frozen from sampled statistics; those
+    verdicts are only as good as r̂.  Every cached execution measures the *actual*
+    ratio of each beneficial stage (combined bytes / exchanged bytes) for free —
+    the combine ran anyway — and a deviation beyond ``tolerance`` (absolute, on a
+    quantity in [0, 1]) means the workload changed underneath the plan: the entry
+    must be invalidated and the next shuffle re-sampled.
+    """
+    return abs(baseline - observed) > tolerance
+
+
 def compute_eff_cost(
     topology: NetworkTopology,
     level_name: str,

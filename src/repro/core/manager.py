@@ -13,6 +13,9 @@ Responsibilities implemented here, mapping 1:1 to the paper's description:
 * **fault tolerance** — records are journaled to an append-only JSONL log; the
   manager state can be rebuilt from the journal (``recover``), and the journal can be
   mirrored to replicas (``replicas=``), per the paper's replication note.
+* **compiled plans** — the manager owns the :class:`repro.core.plancache.PlanCache`:
+  instantiated plans are control-plane state, stored and invalidated centrally just
+  like templates and records (the service consults it on every ``shuffle()``).
 """
 from __future__ import annotations
 
@@ -23,6 +26,7 @@ import threading
 import time
 from typing import Iterable
 
+from .plancache import PlanCache
 from .templates import TEMPLATES, ShuffleTemplate
 
 
@@ -46,8 +50,10 @@ class ShuffleManager:
     """In-process stand-in for the manager service (RPCs become method calls)."""
 
     def __init__(self, journal_path: str | None = None,
-                 replicas: Iterable[str] = (), clock=time.monotonic):
+                 replicas: Iterable[str] = (), clock=time.monotonic,
+                 plan_cache: PlanCache | None = None):
         self._templates: dict[str, ShuffleTemplate] = dict(TEMPLATES)
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
         self._records: list[ShuffleRecord] = []
         self._worker_cache: set[tuple[int, str]] = set()
         self._lock = threading.Lock()

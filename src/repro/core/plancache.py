@@ -1,0 +1,283 @@
+"""Plan compilation and caching: reuse instantiated shuffle plans across calls.
+
+Instantiating a template is control-plane work — neighbor discovery
+(``$FIND_NBRS_PER_*``), partition-aware sampling (``SAMP``), and the sampling-server
+EFF/COST rendezvous (``$COMPUTE_EFF_COST``) — that the paper's templates repeat on
+*every* shuffle.  For iterative workloads (PageRank supersteps, MoE dispatch every
+layer, gradient buckets every step) the decision inputs barely change between calls,
+so the instantiated plan can be compiled once and replayed.
+
+A :class:`CompiledPlan` freezes everything instantiation produced:
+
+* the neighbor list of every worker at every hierarchy level, and
+* the EFF/COST verdict (with its estimated reduction ratio r̂) per level.
+
+Plans are keyed by ``(template_id, topology fingerprint, stats signature)``.  The
+*stats signature* (:func:`stats_signature`) is a coarse, cheap-to-compute sketch of
+the workload — participant sets, partFunc/combFunc identity, sampling rate, and
+log2-bucketed message counts — so shuffles whose statistics merely jitter still hit,
+while a workload that changes shape (different key space, different skew bucket,
+different worker set) misses and re-instantiates.
+
+Invalidation is *observational*: every cached execution measures the actual data
+reduction each beneficial stage achieved, and the cache compares it against the
+plan's baseline ratio (:func:`repro.core.adaptive.reduction_drift`).  A drifted
+ratio means the sampled statistics no longer describe the data: the entry is
+dropped and the next shuffle re-instantiates from fresh samples.  A ``refresh_every``
+knob additionally forces periodic re-instantiation so a stage that was *rejected*
+(and therefore produces no observations) can be reconsidered.
+
+The cache itself lives on the Shuffle Manager (paper §3.3 — the manager "stores"
+control-plane state); :class:`repro.core.service.TeShuService` consults it on every
+``shuffle()`` call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Sequence
+
+import numpy as np
+
+from .adaptive import EffCost, reduction_drift
+from .messages import Combiner, Msgs, PartFn
+from .topology import NetworkTopology
+
+# Levels whose observed reduction drifts by more than this (absolute) from the
+# plan's baseline invalidate the plan (see adaptive.reduction_drift).
+DRIFT_TOLERANCE = 0.15
+
+
+# ---------------------------------------------------------------------------
+# Stats signature
+# ---------------------------------------------------------------------------
+
+def _log2_bucket(n: int) -> int:
+    """Quantize a count to its log2 bucket (0 for empty) — jitter-stable."""
+    return int(n).bit_length()
+
+
+def stats_signature(
+    bufs: dict[int, Msgs],
+    part_fn: PartFn,
+    comb_fn: Combiner | None,
+    rate: float,
+) -> tuple:
+    """Coarse sketch of a shuffle's decision inputs; equal sketch => reusable plan.
+
+    Components (all O(total messages) numpy scans, no hashing of payloads):
+
+    * partFunc / combFunc identity and the sampling rate — different functions
+      partition or reduce differently, so their plans never alias;
+    * per-worker message-count log2 buckets — captures data placement and skew at
+      the granularity the EFF/COST model is sensitive to;
+    * a key-space bucket (log2 of the max key) — a workload that suddenly spans a
+      different key universe has different duplication structure;
+    * the payload width — the wire format the cost model charges.
+    """
+    widths = {m.width for m in bufs.values() if m.n} or {1}
+    max_key = 0
+    for m in bufs.values():
+        if m.n:
+            mk = int(m.keys.max())
+            if mk > max_key:
+                max_key = mk
+    counts = tuple((int(w), _log2_bucket(m.n)) for w, m in sorted(bufs.items()))
+    return (
+        part_fn.name,
+        comb_fn.name if comb_fn is not None else None,
+        float(rate),
+        tuple(sorted(widths)),
+        _log2_bucket(max_key),
+        counts,
+    )
+
+
+def plan_key(template_id: str, topology: NetworkTopology,
+             srcs: Sequence[int], dsts: Sequence[int], signature: tuple) -> tuple:
+    """Full cache key: plans never alias across participant sets or topologies."""
+    return (template_id, topology.fingerprint(), tuple(srcs), tuple(dsts), signature)
+
+
+# ---------------------------------------------------------------------------
+# Compiled plans
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LevelDecision:
+    """One instantiated hierarchical stage of an adaptive template."""
+
+    level: str                             # topology level name
+    eff_cost: EffCost                      # the frozen $COMPUTE_EFF_COST verdict
+    nbrs: dict[int, tuple[int, ...]]       # wid -> neighbors (incl. wid), frozen
+    baseline_r: float                      # reduction ratio the plan was built on
+
+    @property
+    def beneficial(self) -> bool:
+        return self.eff_cost.beneficial
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPlan:
+    """A fully instantiated (template x topology x stats) shuffle plan.
+
+    Replaying a plan skips neighbor discovery, sampling, and EFF/COST estimation;
+    the executor (threaded or vectorized) only moves and combines data.
+    """
+
+    key: tuple
+    template_id: str
+    srcs: tuple[int, ...]
+    dsts: tuple[int, ...]
+    levels: tuple[LevelDecision, ...]      # innermost-first; empty for static templates
+
+    def level(self, name: str) -> LevelDecision | None:
+        for ld in self.levels:
+            if ld.level == name:
+                return ld
+        return None
+
+    @property
+    def decisions(self) -> list[tuple[str, EffCost]]:
+        return [(ld.level, ld.eff_cost) for ld in self.levels]
+
+
+def compile_plan(
+    key: tuple,
+    template_id: str,
+    topology: NetworkTopology,
+    srcs: Sequence[int],
+    dsts: Sequence[int],
+    decisions: Sequence[tuple[str, EffCost]],
+    observed: dict[str, float] | None = None,
+) -> CompiledPlan:
+    """Freeze a fresh run's instantiation into a replayable plan.
+
+    ``decisions`` are the (level, EffCost) pairs the adaptive template recorded
+    (identical across workers: the sampling server broadcasts one verdict).
+    ``observed`` maps level -> measured reduction ratio from the fresh run's actual
+    exchanges; when present it becomes the drift baseline (ground truth beats the
+    sample estimate it validated).  Neighbor lists are materialized per worker with
+    one vectorized group computation per level.
+    """
+    srcs = tuple(srcs)
+    observed = observed or {}
+    wids = np.asarray(srcs, dtype=np.int64)
+    levels = []
+    for level_name, ec in decisions:
+        lv = topology.level(level_name)
+        groups = wids // lv.group_size                   # vectorized $FIND_NBRS
+        nbrs: dict[int, tuple[int, ...]] = {}
+        for g in np.unique(groups):
+            members = tuple(int(w) for w in wids[groups == g])
+            for w in members:
+                nbrs[w] = members
+        baseline = observed.get(level_name, ec.reduction_ratio)
+        levels.append(LevelDecision(level=level_name, eff_cost=ec, nbrs=nbrs,
+                                    baseline_r=baseline))
+    return CompiledPlan(key=key, template_id=template_id, srcs=srcs,
+                        dsts=tuple(dsts), levels=tuple(levels))
+
+
+# ---------------------------------------------------------------------------
+# The cache
+# ---------------------------------------------------------------------------
+
+class PlanCache:
+    """LRU cache of :class:`CompiledPlan` with drift-based invalidation.
+
+    Thread-safe: the manager serving multiple application threads shares one
+    instance.  ``stats()`` exposes hit/miss/invalidation counters (surfaced by the
+    service, the launch drivers, and the benchmarks).
+    """
+
+    def __init__(self, capacity: int = 256, *,
+                 drift_tolerance: float = DRIFT_TOLERANCE,
+                 refresh_every: int = 0):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1: {capacity}")
+        self.capacity = capacity
+        self.drift_tolerance = drift_tolerance
+        self.refresh_every = refresh_every          # 0 = never force re-instantiation
+        self._plans: OrderedDict[tuple, CompiledPlan] = OrderedDict()
+        self._hits_by_key: dict[tuple, int] = {}
+        self._lock = threading.Lock()
+        self._stats = {"hits": 0, "misses": 0, "invalidations": 0, "refreshes": 0,
+                       "evictions": 0}
+
+    # ---- lookup --------------------------------------------------------------
+    def get(self, key: tuple) -> CompiledPlan | None:
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is None:
+                self._stats["misses"] += 1
+                return None
+            hits = self._hits_by_key.get(key, 0) + 1
+            if self.refresh_every and hits > self.refresh_every:
+                # Periodic refresh: drop the entry so rejected stages (which emit
+                # no drift observations) get re-evaluated from fresh samples.
+                del self._plans[key]
+                del self._hits_by_key[key]
+                self._stats["refreshes"] += 1
+                self._stats["misses"] += 1
+                return None
+            self._hits_by_key[key] = hits
+            self._plans.move_to_end(key)
+            self._stats["hits"] += 1
+            return plan
+
+    def put(self, key: tuple, plan: CompiledPlan) -> None:
+        with self._lock:
+            self._plans[key] = plan
+            self._plans.move_to_end(key)
+            self._hits_by_key.setdefault(key, 0)
+            while len(self._plans) > self.capacity:
+                old, _ = self._plans.popitem(last=False)
+                self._hits_by_key.pop(old, None)
+                self._stats["evictions"] += 1
+
+    def invalidate(self, key: tuple) -> bool:
+        with self._lock:
+            if key in self._plans:
+                del self._plans[key]
+                self._hits_by_key.pop(key, None)
+                self._stats["invalidations"] += 1
+                return True
+            return False
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self._hits_by_key.clear()
+
+    # ---- drift ---------------------------------------------------------------
+    def observe(self, key: tuple, observed: dict[str, float]) -> bool:
+        """Feed measured per-level reduction ratios from a cached execution.
+
+        Returns True (and drops the entry) if any level's observation drifted
+        beyond ``drift_tolerance`` from the plan's baseline.
+        """
+        with self._lock:
+            plan = self._plans.get(key)
+        if plan is None:
+            return False
+        for level_name, r_obs in observed.items():
+            ld = plan.level(level_name)
+            if ld is not None and reduction_drift(ld.baseline_r, r_obs,
+                                                  tolerance=self.drift_tolerance):
+                return self.invalidate(key)
+        return False
+
+    # ---- introspection -------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(self._stats, size=len(self._plans))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._plans)
+
+    def __contains__(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._plans

@@ -37,66 +37,115 @@ class CostLedger:
     modelled execution time is the sum over epochs of the slowest worker's serialized
     cost in that epoch — the standard BSP bound and how shuffle completion is gated on
     the straggler (paper §1: "performance is often gated on tail completion time").
+
+    Accounting is incremental: charges update per-level byte totals and the current
+    epoch's per-worker cost as they arrive, and closed epochs fold into a running
+    time sum at ``advance_epoch``.  ``snapshot()`` is therefore O(levels) no matter
+    how many shuffles ran — it used to rescan the whole charge history, which made
+    repeated shuffles (exactly what the plan cache optimizes) quadratic.
     """
 
     def __init__(self, topology: NetworkTopology):
         self.topology = topology
         self._lock = threading.Lock()
         self.epoch = 0
-        # (epoch, wid, level) -> bytes ; level == -1 never charged (local move)
-        self.transfer: dict = collections.defaultdict(int)
-        self.combine: dict = collections.defaultdict(int)   # (epoch, wid) -> bytes
         self.sample_bytes = 0                                # SAMP overhead, for Fig. 6
+        self._bws = np.array([lv.bw_bytes_per_s for lv in topology.levels])
+        self._bytes_per_level = np.zeros(len(topology.levels), dtype=np.int64)
+        self._total_bytes = 0
+        # current (open) epoch: per-worker serialized cost + levels crossed
+        self._cur_cost: dict[int, float] = collections.defaultdict(float)
+        self._cur_levels: set[int] = set()
+        self._closed_time = 0.0                              # folded epochs
 
     def charge_transfer(self, wid: int, level: int, nbytes: int, *, sample: bool = False) -> None:
         if level < 0 or nbytes == 0:
             return
         with self._lock:
-            self.transfer[(self.epoch, wid, level)] += nbytes
+            self._bytes_per_level[level] += nbytes
+            self._total_bytes += nbytes
+            self._cur_cost[wid] += nbytes / self.topology.levels[level].bw_bytes_per_s
+            self._cur_levels.add(level)
             if sample:
                 self.sample_bytes += nbytes
 
+    def charge_transfers(self, wid: int, levels: np.ndarray, nbytes: np.ndarray,
+                         *, sample: bool = False) -> None:
+        """Batched charge for one worker: vectorized aggregation, one lock pass.
+
+        The vectorized executor produces per-destination (level, bytes) arrays in
+        one shot; folding them here instead of per-destination calls removes the
+        per-message/per-peer Python round trips from the data plane's hot loop.
+        """
+        levels = np.asarray(levels)
+        nbytes = np.asarray(nbytes)
+        keep = (levels >= 0) & (nbytes > 0)
+        if not np.any(keep):
+            return
+        levels, nbytes = levels[keep], nbytes[keep]
+        per_level = np.bincount(levels, weights=nbytes,
+                                minlength=len(self.topology.levels)).astype(np.int64)
+        cost = float(np.sum(per_level / self._bws))
+        total = int(per_level.sum())
+        with self._lock:
+            self._bytes_per_level += per_level
+            self._total_bytes += total
+            self._cur_cost[wid] += cost
+            self._cur_levels.update(int(l) for l in np.nonzero(per_level)[0])
+            if sample:
+                self.sample_bytes += total
+
     def charge_combine(self, wid: int, nbytes: int) -> None:
         with self._lock:
-            self.combine[(self.epoch, wid)] += nbytes
+            self._cur_cost[wid] += nbytes / self.topology.levels[0].combine_bytes_per_s
+
+    def _open_epoch_time(self) -> float:
+        if not self._cur_cost:
+            return 0.0
+        lat = max((self.topology.levels[l].latency_s for l in self._cur_levels),
+                  default=0.0)
+        return max(self._cur_cost.values()) + lat
 
     def advance_epoch(self) -> None:
         with self._lock:
+            self._closed_time += self._open_epoch_time()
+            self._cur_cost.clear()
+            self._cur_levels.clear()
             self.epoch += 1
 
     # ---- aggregation --------------------------------------------------------
     def bytes_at_level(self, level: int) -> int:
-        return sum(v for (e, w, l), v in self.transfer.items() if l == level)
+        with self._lock:
+            return int(self._bytes_per_level[level])
 
     def total_bytes(self) -> int:
-        return sum(self.transfer.values())
+        with self._lock:
+            return self._total_bytes
 
     def modelled_time(self) -> float:
-        topo = self.topology
-        epochs = set(e for (e, w, l) in self.transfer) | set(e for (e, w) in self.combine)
-        total = 0.0
-        for e in sorted(epochs):
-            worker_cost: dict[int, float] = collections.defaultdict(float)
-            levels_used: set[int] = set()
-            for (ee, w, l), b in self.transfer.items():
-                if ee == e:
-                    worker_cost[w] += b / topo.levels[l].bw_bytes_per_s
-                    levels_used.add(l)
-            for (ee, w), b in self.combine.items():
-                if ee == e:
-                    worker_cost[w] += b / topo.levels[0].combine_bytes_per_s
-            if worker_cost:
-                total += max(worker_cost.values())
-                total += max((topo.levels[l].latency_s for l in levels_used), default=0.0)
-        return total
+        with self._lock:
+            return self._closed_time + self._open_epoch_time()
 
     def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "total_bytes": self._total_bytes,
+                "bytes_per_level": {lv.name: int(self._bytes_per_level[i])
+                                    for i, lv in enumerate(self.topology.levels)},
+                "sample_bytes": self.sample_bytes,
+                "modelled_time_s": self._closed_time + self._open_epoch_time(),
+            }
+
+    @staticmethod
+    def delta(before: dict, after: dict) -> dict:
+        """Difference of two snapshots — the per-shuffle stats block."""
         return {
-            "total_bytes": self.total_bytes(),
-            "bytes_per_level": {lv.name: self.bytes_at_level(i)
-                                for i, lv in enumerate(self.topology.levels)},
-            "sample_bytes": self.sample_bytes,
-            "modelled_time_s": self.modelled_time(),
+            "total_bytes": after["total_bytes"] - before["total_bytes"],
+            "sample_bytes": after["sample_bytes"] - before["sample_bytes"],
+            "modelled_time_s": after["modelled_time_s"] - before["modelled_time_s"],
+            "bytes_per_level": {k: after["bytes_per_level"][k]
+                                - before["bytes_per_level"][k]
+                                for k in after["bytes_per_level"]},
         }
 
 
@@ -146,7 +195,12 @@ class DeadWorker(Exception):
 
 @dataclasses.dataclass
 class ShuffleArgs:
-    """Per-invocation arguments (Table 1)."""
+    """Per-invocation arguments (Table 1).
+
+    ``plan`` carries a :class:`repro.core.plancache.CompiledPlan` when the service
+    found one for this (template, topology, stats-signature) key; templates consult
+    it through ``WorkerContext.PLAN_STAGE`` to skip re-instantiation.
+    """
 
     template_id: str
     shuffle_id: int
@@ -156,6 +210,7 @@ class ShuffleArgs:
     comb_fn: Combiner | None
     rate: float = 0.01            # $RATE
     seed: int = 0
+    plan: "object | None" = None  # CompiledPlan (kept untyped: no core cycle)
 
 
 class LocalCluster:
@@ -167,11 +222,14 @@ class LocalCluster:
         self.rpc_timeout = rpc_timeout      # RECV/FETCH wait bound
         self.run_timeout = run_timeout      # whole-cluster run bound
         self.ledger = CostLedger(topology)
-        self._mail: dict[tuple[int, int], queue.Queue] = collections.defaultdict(queue.Queue)
+        # NOT defaultdicts: two threads hitting a missing key concurrently would
+        # each run the factory and use *different* objects (defaultdict.__missing__
+        # does not re-check after the factory call, which can release the GIL), so
+        # a SEND could land in an orphaned queue.  Plain dict + atomic setdefault.
+        self._mail: dict[tuple[int, int], queue.Queue] = {}
         # pull-mode publish board, keyed (shuffle_id, src) so invocations don't alias
         self._published: dict[tuple[int, int], dict[int, Msgs]] = {}
-        self._published_ev: dict[tuple[int, int], threading.Event] = \
-            collections.defaultdict(threading.Event)
+        self._published_ev: dict[tuple[int, int], threading.Event] = {}
         self._rendezvous: dict[tuple, Rendezvous] = {}
         self._rv_lock = threading.Lock()
         self.failed_workers: set[int] = set()
@@ -181,12 +239,46 @@ class LocalCluster:
     def reset_ledger(self) -> None:
         self.ledger = CostLedger(self.topology)
 
+    def _mailbox(self, src: int, dst: int) -> queue.Queue:
+        q = self._mail.get((src, dst))
+        if q is None:                       # setdefault returns the winner on a race
+            q = self._mail.setdefault((src, dst), queue.Queue())
+        return q
+
+    def _publish_event(self, key: tuple[int, int]) -> threading.Event:
+        ev = self._published_ev.get(key)
+        if ev is None:
+            ev = self._published_ev.setdefault(key, threading.Event())
+        return ev
+
     def rendezvous(self, key: tuple, nparticipants: int) -> Rendezvous:
         with self._rv_lock:
             rv = self._rendezvous.get(key)
             if rv is None:
                 rv = self._rendezvous[key] = Rendezvous(nparticipants)
             return rv
+
+    def end_shuffle(self, shuffle_id: int, *, aborted: bool = False) -> None:
+        """Free per-invocation control state (rendezvous, publish boards).
+
+        All such state is keyed ``(shuffle_id, ...)``; without this, a long-lived
+        service running one shuffle per superstep/step — exactly the regime the
+        plan cache targets — grows memory linearly with shuffle count.
+
+        ``aborted=True`` (failure/timeout path) additionally discards all
+        mailboxes: they are keyed ``(src, dst)`` with no shuffle id, so undelivered
+        messages from the aborted run would otherwise be RECV'd by a retry and
+        silently corrupt its output.
+        """
+        with self._rv_lock:
+            for k in [k for k in self._rendezvous if k[0] == shuffle_id]:
+                del self._rendezvous[k]
+        for k in [k for k in self._published if k[0] == shuffle_id]:
+            self._published.pop(k, None)
+        for k in [k for k in self._published_ev if k[0] == shuffle_id]:
+            self._published_ev.pop(k, None)
+        if aborted:
+            self._mail = {}   # orphan old queues; lingering workers can't pollute
 
     def run_workers(self, wids: Sequence[int], fn: Callable[[int], object],
                     timeout: float | None = None) -> dict[int, object]:
@@ -230,6 +322,7 @@ class WorkerContext:
         self.wid = wid
         self.args = args
         self.decisions: list = []    # (level, EffCost) pairs from adaptive templates
+        self.observed: list = []     # (level, pre_bytes, post_bytes) per exchange
 
     # ---- Table-2 primitives ---------------------------------------------------
     def SEND(self, dst: int, msgs: Msgs, *, sample: bool = False) -> None:
@@ -237,12 +330,12 @@ class WorkerContext:
             raise DeadWorker(self.wid)
         level = self.topology.crossing_level(self.wid, dst)
         self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes, sample=sample)
-        self.cluster._mail[(self.wid, dst)].put(msgs)
+        self.cluster._mailbox(self.wid, dst).put(msgs)
 
     def RECV(self, src: int, timeout: float | None = None) -> Msgs:
         timeout = self.cluster.rpc_timeout if timeout is None else timeout
         try:
-            return self.cluster._mail[(src, self.wid)].get(timeout=timeout)
+            return self.cluster._mailbox(src, self.wid).get(timeout=timeout)
         except queue.Empty as e:
             raise TimeoutError(f"RECV({src} -> {self.wid}) timed out") from e
 
@@ -252,7 +345,7 @@ class WorkerContext:
 
         Data bytes are charged to the fetching worker (it pays the wait)."""
         key = (self.args.shuffle_id, src)
-        ev = self.cluster._published_ev[key]
+        ev = self.cluster._publish_event(key)
         if not ev.wait(timeout):
             raise TimeoutError(f"FETCH from {src} timed out")
         msgs = self.cluster._published[key].get(self.wid, Msgs.empty())
@@ -266,7 +359,7 @@ class WorkerContext:
         if publish:  # pull mode: make partitions visible to FETCHers
             key = (self.args.shuffle_id, self.wid)
             self.cluster._published[key] = parts
-            self.cluster._published_ev[key].set()
+            self.cluster._publish_event(key).set()
         return parts
 
     def COMB(self, msgs: Msgs | Sequence[Msgs], comb_fn: Combiner | None = None) -> Msgs:
@@ -286,6 +379,36 @@ class WorkerContext:
     # ---- $-parameters (instantiated from topology) ------------------------------
     def FIND_NBRS(self, level_name: str, peers: Sequence[int]) -> list[int]:
         return self.topology.neighbors(self.wid, peers, level_name)
+
+    # ---- compiled-plan fast path (plancache) ------------------------------------
+    def PLAN_STAGE(self, level_name: str):
+        """Cached (neighbors, EffCost) for this level, or (None, None) on miss.
+
+        A hit replays the frozen instantiation: no FIND_NBRS scan, no SAMP pass
+        over the keys, no sampling-server rendezvous.  For stages the plan deems
+        beneficial a cluster-wide barrier still advances the cost-model epoch —
+        the exchange is a synchronization point whether or not it was re-sampled —
+        so cached and fresh runs keep comparable BSP accounting.
+        """
+        plan = self.args.plan
+        if plan is None:
+            return None, None
+        ld = plan.level(level_name)
+        if ld is None:
+            return None, None
+        nbrs = list(ld.nbrs.get(self.wid, (self.wid,)))
+        if ld.beneficial:
+            # Every src joins the barrier (participation must be uniform even for
+            # a worker alone in its group, or the rendezvous would never fill).
+            rv = self.cluster.rendezvous(
+                (self.args.shuffle_id, "plan-epoch", level_name), len(self.args.srcs))
+            rv.gather_compute(self.wid, None,
+                              lambda _: self.cluster.ledger.advance_epoch())
+        return nbrs, ld.eff_cost
+
+    def OBSERVE(self, level_name: str, pre_bytes: int, post_bytes: int) -> None:
+        """Record a stage's actual data reduction (drift detection input)."""
+        self.observed.append((level_name, pre_bytes, post_bytes))
 
     def local_level_names(self) -> list[str]:
         """Hierarchy levels below 'global'/'pod' where local shuffles can combine."""

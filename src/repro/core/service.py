@@ -3,6 +3,22 @@
 An infrastructure provider deploys one :class:`TeShuService` per cluster (here, per
 simulated :class:`LocalCluster`); applications invoke :meth:`shuffle` exactly as in
 the paper — worker set, template id, shuffle id, buffers, partFunc, combFunc.
+
+On top of the paper's flow the service runs the plan-compilation cache
+(:mod:`repro.core.plancache`): every call computes the plan key (template x
+topology x stats signature); a miss executes the template fresh — full neighbor
+discovery, sampling, EFF/COST rendezvous — and compiles the instantiation into a
+:class:`CompiledPlan`; a hit replays the plan, skipping that control-plane work
+entirely, and (when the cluster has no injected faults/stragglers and the template
+is supported) executes on the batched data plane (:mod:`repro.core.vectorized`).
+Observed reduction ratios from cached runs feed drift invalidation.
+
+Execution modes (constructor default, overridable per call):
+
+* ``"auto"``    — cache + vectorized execution where valid (the fast path);
+* ``"threaded"``— cache, but always the thread-per-worker reference executor;
+* ``"fresh"``   — paper-faithful: re-instantiate every call, never consult the
+  cache (plans are still compiled and stored, so switching back to ``auto`` hits).
 """
 from __future__ import annotations
 
@@ -11,21 +27,34 @@ from typing import Sequence
 
 from .manager import ShuffleManager
 from .messages import Combiner, Msgs, PartFn, HASH_PART
+from .plancache import PlanCache, compile_plan, plan_key, stats_signature
 from .primitives import LocalCluster, ShuffleArgs
 from .templates import ShuffleResult, run_shuffle
 from .topology import NetworkTopology
+from .vectorized import can_vectorize, run_shuffle_vectorized
+
+EXECUTION_MODES = ("auto", "threaded", "fresh")
 
 
 class TeShuService:
     def __init__(self, topology: NetworkTopology, *, journal_path: str | None = None,
-                 replicas: Sequence[str] = ()):
+                 replicas: Sequence[str] = (), plan_cache: PlanCache | None = None,
+                 execution: str = "auto"):
+        if execution not in EXECUTION_MODES:
+            raise ValueError(f"execution must be one of {EXECUTION_MODES}: {execution}")
         self.topology = topology
         self.cluster = LocalCluster(topology)
-        self.manager = ShuffleManager(journal_path=journal_path, replicas=replicas)
+        self.manager = ShuffleManager(journal_path=journal_path, replicas=replicas,
+                                      plan_cache=plan_cache)
+        self.execution = execution
         self._ids = itertools.count(1)
 
     def next_shuffle_id(self) -> int:
         return next(self._ids)
+
+    @property
+    def plan_cache(self) -> PlanCache:
+        return self.manager.plan_cache
 
     def shuffle(
         self,
@@ -39,17 +68,45 @@ class TeShuService:
         rate: float = 0.01,
         shuffle_id: int | None = None,
         seed: int = 0,
+        execution: str | None = None,
     ) -> ShuffleResult:
+        execution = self.execution if execution is None else execution
+        if execution not in EXECUTION_MODES:
+            raise ValueError(f"execution must be one of {EXECUTION_MODES}: {execution}")
         args = ShuffleArgs(
             template_id=template_id,
             shuffle_id=self.next_shuffle_id() if shuffle_id is None else shuffle_id,
             srcs=tuple(srcs), dsts=tuple(dsts),
             part_fn=part_fn, comb_fn=comb_fn, rate=rate, seed=seed)
-        return run_shuffle(self.cluster, args, bufs, manager=self.manager)
+
+        key = plan_key(template_id, self.topology, args.srcs, args.dsts,
+                       stats_signature(bufs, part_fn, comb_fn, rate))
+        plan = self.plan_cache.get(key) if execution != "fresh" else None
+
+        if plan is None:
+            res = run_shuffle(self.cluster, args, bufs, manager=self.manager)
+            self.plan_cache.put(key, compile_plan(
+                key, template_id, self.topology, args.srcs, args.dsts,
+                res.decisions, res.observed))
+            return res
+
+        args.plan = plan
+        if execution == "auto" and can_vectorize(self.cluster, args):
+            res = run_shuffle_vectorized(self.cluster, args, bufs,
+                                         manager=self.manager)
+        else:
+            res = run_shuffle(self.cluster, args, bufs, manager=self.manager)
+        # Drift check: measured reductions from this cached run vs the plan's
+        # baseline; a drifted entry is dropped so the next call re-instantiates.
+        self.plan_cache.observe(key, res.observed)
+        return res
 
     # ---- ops hooks -----------------------------------------------------------
     def stats(self) -> dict:
         return self.cluster.ledger.snapshot()
+
+    def cache_stats(self) -> dict:
+        return self.plan_cache.stats()
 
     def reset_stats(self) -> None:
         self.cluster.reset_ledger()

@@ -160,16 +160,18 @@ def _network_aware_sender(ctx: WorkerContext, bufs: Msgs) -> None:
     a = ctx.args
     bufs = ctx.COMB(bufs)                                          # local combine
     for level in ctx.local_level_names():                          # server, rack, ...
-        nbrs = ctx.FIND_NBRS(level, a.srcs)                        # $FIND_NBRS_PER_*
-        samp = ctx.SAMP(bufs, a.rate)                              # $RATE
-        ec = ctx.GATHER_SAMPLES(                                   # $COMPUTE_EFF_COST
-            level, samp, bufs.nbytes,
-            compute=lambda samples, sizes, lv=level: compute_eff_cost(
-                ctx.topology, lv, samples,
-                group_bytes=sum(sizes) // max(1, ctx.topology.num_workers
-                                              // ctx.topology.level(lv).group_size),
-                group_size=ctx.topology.level(lv).group_size,
-                combiner=a.comb_fn))
+        nbrs, ec = ctx.PLAN_STAGE(level)                           # compiled-plan hit?
+        if ec is None:                                             # miss: instantiate
+            nbrs = ctx.FIND_NBRS(level, a.srcs)                    # $FIND_NBRS_PER_*
+            samp = ctx.SAMP(bufs, a.rate)                          # $RATE
+            ec = ctx.GATHER_SAMPLES(                               # $COMPUTE_EFF_COST
+                level, samp, bufs.nbytes,
+                compute=lambda samples, sizes, lv=level: compute_eff_cost(
+                    ctx.topology, lv, samples,
+                    group_bytes=sum(sizes) // max(1, ctx.topology.num_workers
+                                                  // ctx.topology.level(lv).group_size),
+                    group_size=ctx.topology.level(lv).group_size,
+                    combiner=a.comb_fn))
         ctx.decisions.append((level, ec))
         if ec.beneficial and len(nbrs) > 1:
             parts = ctx.PART(bufs, nbrs)
@@ -177,7 +179,9 @@ def _network_aware_sender(ctx: WorkerContext, bufs: Msgs) -> None:
                 if n != ctx.wid:
                     ctx.SEND(n, parts[n])
             got = [parts[ctx.wid]] + [ctx.RECV(n) for n in nbrs if n != ctx.wid]
+            pre = sum(g.nbytes for g in got)
             bufs = ctx.COMB(got)
+            ctx.OBSERVE(level, pre, bufs.nbytes)                   # drift signal
     parts = ctx.PART(bufs, a.dsts)                                 # global shuffle
     for d in a.dsts:
         ctx.SEND(d, parts[d])
@@ -220,6 +224,21 @@ class ShuffleResult:
     bufs: dict[int, Msgs]                 # per-destination received (and combined) data
     decisions: list                       # (level, EffCost) from adaptive templates
     stats: dict                           # ledger snapshot delta for this shuffle
+    observed: dict = dataclasses.field(default_factory=dict)
+    # ^ level -> measured reduction ratio (drift input for the plan cache)
+    cached: bool = False                  # executed from a CompiledPlan?
+    vectorized: bool = False              # executed on the batched data plane?
+
+
+def aggregate_observed(per_worker: list[list[tuple]]) -> dict[str, float]:
+    """Pool (level, pre_bytes, post_bytes) records into per-level reduction ratios."""
+    pre: dict[str, int] = {}
+    post: dict[str, int] = {}
+    for records in per_worker:
+        for level, p, q in records:
+            pre[level] = pre.get(level, 0) + p
+            post[level] = post.get(level, 0) + q
+    return {lv: post[lv] / pre[lv] for lv in pre if pre[lv] > 0}
 
 
 def run_shuffle(
@@ -232,6 +251,8 @@ def run_shuffle(
 
     Mirrors §3.3: each worker's shuffle call records start/end with the manager (the
     template/plan cache lives there too); sender+receiver programs run per worker.
+    When ``args.plan`` carries a CompiledPlan, adaptive templates replay its frozen
+    decisions instead of re-instantiating (see :mod:`repro.core.plancache`).
     """
     template = (manager.get_template(args.template_id, wid=None) if manager
                 else TEMPLATES[args.template_id])
@@ -252,18 +273,19 @@ def run_shuffle(
             out = template.receiver(ctx)
         if manager is not None:
             manager.record_end(wid, args.shuffle_id, args.template_id)
-        return (out, ctx.decisions)
+        return (out, ctx.decisions, ctx.observed)
 
-    raw = cluster.run_workers(participants, worker_fn)
+    try:
+        raw = cluster.run_workers(participants, worker_fn)
+    except BaseException:
+        cluster.end_shuffle(args.shuffle_id, aborted=True)
+        raise
     cluster.ledger.advance_epoch()        # shuffle completion is a barrier
+    cluster.end_shuffle(args.shuffle_id)  # free per-invocation control state
     after = cluster.ledger.snapshot()
-    stats = {
-        "total_bytes": after["total_bytes"] - before["total_bytes"],
-        "sample_bytes": after["sample_bytes"] - before["sample_bytes"],
-        "modelled_time_s": after["modelled_time_s"] - before["modelled_time_s"],
-        "bytes_per_level": {k: after["bytes_per_level"][k] - before["bytes_per_level"][k]
-                            for k in after["bytes_per_level"]},
-    }
+    stats = cluster.ledger.delta(before, after)
     out_bufs = {w: r[0] for w, r in raw.items() if r is not None and r[0] is not None}
     decisions = next((r[1] for r in raw.values() if r is not None and r[1]), [])
-    return ShuffleResult(bufs=out_bufs, decisions=decisions, stats=stats)
+    observed = aggregate_observed([r[2] for r in raw.values() if r is not None])
+    return ShuffleResult(bufs=out_bufs, decisions=decisions, stats=stats,
+                         observed=observed, cached=args.plan is not None)

@@ -144,6 +144,70 @@ def datacenter(
     ))
 
 
+def fat_tree(
+    workers_per_server: int,
+    servers_per_edge: int,
+    edges_per_pod: int,
+    pods: int,
+    *,
+    intra_server_bw: float = 12.5e9,
+    edge_bw: float = 1.25e9,              # server NIC under the edge (ToR) switch
+    edge_oversubscription: float = 4.0,   # edge uplinks : host ports
+    core_oversubscription: float = 4.0,   # core links : aggregated edge uplinks
+    combine_bytes_per_s: float = 8e9,
+) -> NetworkTopology:
+    """An oversubscribed fat-tree: server < edge (ToR) < pod (agg) < core.
+
+    Deeper than the paper's testbed, shaped like a Clos data center where
+    oversubscription compounds: crossing the edge layer divides per-worker
+    bandwidth by ``edge_oversubscription``, and crossing the core divides it
+    again by ``core_oversubscription``.  Adaptive templates see four boundaries,
+    so three local-combine decisions get exercised per shuffle — the scenario
+    where one plan instantiation is most expensive and caching pays most.
+    """
+    per_edge = workers_per_server * servers_per_edge
+    per_pod = per_edge * edges_per_pod
+    n = per_pod * pods
+    agg_bw = edge_bw / edge_oversubscription
+    core_bw = agg_bw / core_oversubscription
+    return NetworkTopology(levels=(
+        Level("server", workers_per_server, intra_server_bw, 2e-6,
+              combine_bytes_per_s),
+        Level("edge", per_edge, edge_bw, 10e-6, combine_bytes_per_s),
+        Level("pod", per_pod, agg_bw, 20e-6, combine_bytes_per_s),
+        Level("core", n, core_bw, 30e-6, combine_bytes_per_s),
+    ))
+
+
+def multipod_dcn(
+    chips_per_host: int,
+    hosts_per_pod: int,
+    pods: int,
+    *,
+    ici_bw: float = TPU_ICI_BW_PER_LINK,
+    host_bw: float = TPU_ICI_BW_PER_LINK / 2,
+    dcn_bw: float = TPU_DCN_BW_PER_CHIP,
+    combine_bytes_per_s: float = TPU_HBM_BW,
+) -> NetworkTopology:
+    """Multi-pod TPU DCN: host (ICI) < pod (reduced ICI) < dcn (inter-pod NICs).
+
+    The accelerator-era analogue of the paper's oversubscribed leaf-spine: ICI
+    inside a pod is orders of magnitude faster than the data-center network
+    between pods, so cross-pod shuffles (MoE expert dispatch, cross-pod gradient
+    sync) are exactly the regime where hierarchical combining wins.  Unlike
+    :func:`from_mesh_axes` (which mirrors a specific jax mesh), this models the
+    physical machine room: chips within a host, hosts within a pod, pods across
+    the DCN.
+    """
+    per_pod = chips_per_host * hosts_per_pod
+    n = per_pod * pods
+    return NetworkTopology(levels=(
+        Level("host", chips_per_host, ici_bw, 1e-6, combine_bytes_per_s),
+        Level("pod", per_pod, host_bw, 5e-6, combine_bytes_per_s),
+        Level("dcn", n, dcn_bw, 50e-6, combine_bytes_per_s),
+    ))
+
+
 def from_mesh_axes(
     axis_sizes: dict[str, int],
     *,

@@ -1,0 +1,194 @@
+"""Vectorized template execution: replay a CompiledPlan as batched numpy.
+
+The threaded :func:`repro.core.templates.run_shuffle` is the *reference* executor:
+one Python thread per worker, primitives exchanging through mailboxes.  That
+fidelity matters for fresh instantiation (sampling rendezvous, stragglers,
+failures), but once a plan is compiled the remaining work is pure data movement —
+partition, transfer accounting, combine — and the thread-per-worker round trips
+dominate wall time.
+
+This module executes a cached plan single-threaded with batched numpy:
+
+* partitions are computed with one stable argsort + ``np.split`` per buffer
+  (:func:`repro.core.messages.partition`), never a per-message Python loop;
+* ledger charges are folded per worker with ``CostLedger.charge_transfers``
+  (one vectorized bincount + one lock acquisition instead of one call per peer);
+* combines remain the vectorized sort + ``ufunc.reduceat`` — or, opt-in via
+  :func:`set_comb_backend`, the Pallas MXU segment-combine kernel
+  (:mod:`repro.kernels.combine`) for SUM combiners.
+
+Equivalence contract: for the supported templates the output buffers are
+*byte-identical* to the threaded plan path (same partition functions, same concat
+orders, same stable sorts) and the ledger sees the same charges in the same
+epochs.  ``tests/test_plancache.py`` pins this.
+
+Supported: vanilla_push, vanilla_pull, coordinated, network_aware.  Bruck and
+two-level interleave SEND/RECV in log-step rounds whose ordering is inherently
+sequential per worker; they fall back to the threaded executor (still skipping
+re-instantiation via the plan).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .messages import Combiner, Msgs, partition
+from .primitives import LocalCluster, ShuffleArgs
+from .templates import ShuffleResult, aggregate_observed
+
+VECTORIZABLE = frozenset(
+    {"vanilla_push", "vanilla_pull", "coordinated", "network_aware"})
+
+_COMB_BACKEND = "numpy"
+
+
+def set_comb_backend(name: str) -> str:
+    """Select the combine backend: ``"numpy"`` (default) or ``"pallas"``.
+
+    The Pallas path routes SUM combines through the TPU segment-combine kernel
+    (interpret mode on CPU; compiled natively on TPU).  It accumulates in float32,
+    so it is opt-in: the default backend keeps bit-exact float64 semantics.
+    Returns the previous backend (so callers can restore it).
+    """
+    global _COMB_BACKEND
+    if name not in ("numpy", "pallas"):
+        raise ValueError(f"unknown combine backend: {name!r}")
+    prev, _COMB_BACKEND = _COMB_BACKEND, name
+    return prev
+
+
+def _pallas_sum_combine(msgs: Msgs) -> Msgs:
+    import jax.numpy as jnp
+
+    from repro.kernels.combine import segment_combine
+
+    uniq, inv = np.unique(msgs.keys, return_inverse=True)
+    out = segment_combine(jnp.asarray(inv, dtype=jnp.int32),
+                          jnp.asarray(msgs.vals, dtype=jnp.float32),
+                          num_segments=int(uniq.size))
+    return Msgs(uniq, np.asarray(out, dtype=np.float64))
+
+
+def combine_msgs(combiner: Combiner, msgs: Msgs) -> Msgs:
+    if _COMB_BACKEND == "pallas" and combiner.name == "sum" and msgs.n:
+        return _pallas_sum_combine(msgs)
+    return combiner(msgs)
+
+
+def can_vectorize(cluster: LocalCluster, args: ShuffleArgs) -> bool:
+    """Batched execution is valid when a plan exists, the template is supported,
+    and no fault/straggler injection needs the thread-level simulation."""
+    return (args.plan is not None
+            and args.template_id in VECTORIZABLE
+            and not cluster.failed_workers
+            and not cluster.worker_delays)
+
+
+def _comb(args: ShuffleArgs, ledger, wid: int, batches) -> Msgs:
+    """ctx.COMB semantics: concat, charge the combine, apply the combiner."""
+    batch = batches if isinstance(batches, Msgs) else Msgs.concat(list(batches))
+    if args.comb_fn is None:
+        return batch
+    ledger.charge_combine(wid, batch.nbytes)
+    return combine_msgs(args.comb_fn, batch)
+
+
+def run_shuffle_vectorized(
+    cluster: LocalCluster,
+    args: ShuffleArgs,
+    bufs: dict[int, Msgs],
+    manager=None,
+) -> ShuffleResult:
+    """Execute ``args.plan`` on the batched data plane; see module docstring."""
+    plan = args.plan
+    if plan is None:
+        raise ValueError("vectorized execution requires a CompiledPlan")
+    if args.template_id not in VECTORIZABLE:
+        raise ValueError(f"template {args.template_id!r} is not vectorizable")
+    topo = cluster.topology
+    ledger = cluster.ledger
+    srcs, dsts = list(args.srcs), list(args.dsts)
+    participants = sorted(set(srcs) | set(dsts))
+    if manager is not None:
+        manager.get_template(args.template_id, wid=None)
+        for w in participants:
+            manager.record_start(w, args.shuffle_id, args.template_id)
+    before = ledger.snapshot()
+    observed: list[tuple] = []
+
+    # ---- sender side -------------------------------------------------------
+    if args.template_id == "network_aware":
+        # local combine, then each beneficial hierarchical stage from the plan
+        state = {w: _comb(args, ledger, w, bufs.get(w, Msgs.empty())) for w in srcs}
+        for ld in plan.levels:
+            if not ld.eff_cost.beneficial:
+                continue
+            ledger.advance_epoch()        # the stage barrier (PLAN_STAGE's epoch)
+            staged = {}
+            for w in srcs:
+                nbrs = list(ld.nbrs.get(w, (w,)))
+                if len(nbrs) > 1:
+                    staged[w] = (nbrs, partition(state[w], nbrs, args.part_fn))
+            for w, (nbrs, parts) in staged.items():
+                peers = [n for n in nbrs if n != w]
+                ledger.charge_transfers(
+                    w,
+                    np.fromiter((topo.crossing_level(w, n) for n in peers),
+                                dtype=np.int64, count=len(peers)),
+                    np.fromiter((parts[n].nbytes for n in peers),
+                                dtype=np.int64, count=len(peers)))
+            for w, (nbrs, parts) in staged.items():
+                got = [parts[w]] + [staged[n][1][w] for n in nbrs if n != w]
+                pre = sum(g.nbytes for g in got)
+                state[w] = _comb(args, ledger, w, got)
+                observed.append((ld.level, pre, state[w].nbytes))
+    else:
+        state = {w: bufs.get(w, Msgs.empty()) for w in srcs}
+
+    # ---- global stage ------------------------------------------------------
+    parts_by_src = {w: partition(state[w], dsts, args.part_fn) for w in srcs}
+
+    if args.template_id in ("vanilla_push", "network_aware"):
+        # push: the sender pays the transfer
+        for w in srcs:
+            ledger.charge_transfers(
+                w,
+                np.fromiter((topo.crossing_level(w, d) for d in dsts),
+                            dtype=np.int64, count=len(dsts)),
+                np.fromiter((parts_by_src[w][d].nbytes for d in dsts),
+                            dtype=np.int64, count=len(dsts)))
+        fetch_order = {d: srcs for d in dsts}
+        charge_receiver = False
+    elif args.template_id == "vanilla_pull":
+        fetch_order = {d: srcs for d in dsts}
+        charge_receiver = True
+    else:  # coordinated: ring-rotated FETCH order, receiver pays
+        n = len(srcs)
+        fetch_order = {d: [srcs[(srcs.index(d) - t) % n] for t in range(n)]
+                       for d in dsts}
+        charge_receiver = True
+
+    out: dict[int, Msgs] = {}
+    for d in dsts:
+        got = [parts_by_src[s][d] for s in fetch_order[d]]
+        if charge_receiver:
+            ledger.charge_transfers(
+                d,
+                np.fromiter((topo.crossing_level(s, d) for s in fetch_order[d]),
+                            dtype=np.int64, count=len(got)),
+                np.fromiter((g.nbytes for g in got), dtype=np.int64,
+                            count=len(got)))
+        out[d] = _comb(args, ledger, d, got)
+
+    ledger.advance_epoch()                # shuffle completion is a barrier
+    after = ledger.snapshot()
+    if manager is not None:
+        for w in participants:
+            manager.record_end(w, args.shuffle_id, args.template_id)
+    return ShuffleResult(
+        bufs=out,
+        decisions=list(plan.decisions),
+        stats=ledger.delta(before, after),
+        observed=aggregate_observed([observed]),
+        cached=True,
+        vectorized=True,
+    )

@@ -1,0 +1,9 @@
+"""Pallas API compatibility across jax versions.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` upstream; the
+kernels are written against the new name and run on both via this alias.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 DEFAULT_BLOCK_KV = 512
 _NEG = -1e30
 
@@ -104,7 +106,7 @@ def decode_attention(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b * kvh, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(valid_len, jnp.int32).reshape(1), qg, k, v)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 DEFAULT_BLOCK_N = 128
 DEFAULT_BLOCK_D = 512
 DEFAULT_BLOCK_F = 512
@@ -78,7 +80,7 @@ def gmm(
         _gmm_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, f), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(tile_group_ids.astype(jnp.int32), x, w)

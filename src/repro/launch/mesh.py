@@ -12,6 +12,16 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(dev_array, axes) -> jax.sharding.Mesh:
+    """Build a Mesh across jax versions: ``AxisType`` (explicit-sharding API)
+    does not exist on older releases, where Auto is the only behavior anyway."""
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        return jax.sharding.Mesh(dev_array, axes,
+                                 axis_types=(axis_type,) * len(axes))
+    return jax.sharding.Mesh(dev_array, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -26,9 +36,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             "device_count=512 before any jax import")
     import numpy as np
     dev_array = np.asarray(devices).reshape(shape)
-    return jax.sharding.Mesh(
-        dev_array, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(dev_array, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
@@ -36,9 +44,7 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mes
     import numpy as np
     ndev = int(np.prod(shape))
     dev_array = np.asarray(jax.devices()[:ndev]).reshape(shape)
-    return jax.sharding.Mesh(
-        dev_array, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(dev_array, axes)
 
 
 def elastic_mesh(n_devices: int, *, model_parallel: int = 16,
@@ -66,9 +72,7 @@ def elastic_mesh(n_devices: int, *, model_parallel: int = 16,
     else:
         dev_array = devices.reshape(data_per_pod, model_parallel)
         axes = ("data", "model")
-    return jax.sharding.Mesh(
-        dev_array, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(dev_array, axes)
 
 
 def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

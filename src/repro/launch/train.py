@@ -32,6 +32,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS, get_config
 from repro.core.manager import ShuffleManager
+from repro.core.plancache import PlanCache
 from repro.data import DataConfig, DataPipeline
 from repro.launch.mesh import batch_axes, elastic_mesh
 from repro.launch.shardings import (batch_specs, ep_axes_for, param_specs,
@@ -55,8 +56,14 @@ def train(arch: str, *, smoke: bool = True, steps: int = 20,
                        moment_dtype=recipe.moment_dtype)
     ep = ep_axes_for(mesh) if cfg.family == "moe" else ()
 
+    # The manager is the training run's shuffle control plane: the loop journals
+    # step records through it, and any TeShuService attached to this manager
+    # (e.g. a co-deployed data-shuffle service) shares its PlanCache.  The jit
+    # step itself shuffles inside XLA, so the cache counters stay zero unless
+    # such a service is wired in; they are returned for ops validation.
     manager = ShuffleManager(
-        journal_path=f"{ckpt_dir}/shuffle_journal.jsonl" if ckpt_dir else None)
+        journal_path=f"{ckpt_dir}/shuffle_journal.jsonl" if ckpt_dir else None,
+        plan_cache=PlanCache(capacity=64))
 
     with mesh:
         params = lm.init_lm(jax.random.key(seed), cfg)
@@ -64,7 +71,7 @@ def train(arch: str, *, smoke: bool = True, steps: int = 20,
         p_specs = param_specs(params, mesh, cfg)
         p_sh = to_named(p_specs, mesh)
         o_sh = {"m": p_sh, "v": p_sh,
-                "step": jax.NamedSharding(mesh, jax.P())}
+                "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())}
         params = jax.device_put(params, p_sh)
         opt_state = jax.device_put(opt_state, o_sh)
 
@@ -110,7 +117,7 @@ def train(arch: str, *, smoke: bool = True, steps: int = 20,
         if ckpt:
             ckpt.wait()
     return {"history": history, "params": params, "opt_state": opt_state,
-            "manager": manager}
+            "manager": manager, "plan_cache": manager.plan_cache.stats()}
 
 
 def main() -> None:

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import shard_map
+
 from .config import ModelConfig
 from .hybrid import hymba_mixer, init_hymba_block
 from .layers import (Params, _dtype, attention, embed_init, init_attention,
@@ -176,7 +178,7 @@ def _embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
         x = tbl[tok]                           # local gather
         return lax.all_gather(x, "model", axis=2, tiled=True)
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(None, "model"), P(b_axes, None)),
         out_specs=P(b_axes, None, None),

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import meshops
 
 from .config import ModelConfig
@@ -219,7 +220,7 @@ def _moe_shard_map(p: Params, cfg: ModelConfig, x: jax.Array,
         return y.reshape(bl, s, d), aux
 
     batch_spec = P(batch_axes if batch_axes else None, None, None)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(batch_spec, P(), P(ep_axes, None, None)),
         out_specs=(batch_spec, P()),
@@ -239,9 +240,11 @@ def _ep_shuffle(x: jax.Array, ep_axes: tuple[str, ...], mesh, two_level: bool):
 
 
 def _current_mesh():
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is not None and not mesh.empty:
-        return mesh
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:      # newer jax: jax.set_mesh style
+        mesh = get_abstract()
+        if mesh is not None and not mesh.empty:
+            return mesh
     try:        # `with mesh:` context (physical mesh), pre-set_mesh style
         from jax.interpreters import pxla
         mesh = pxla.thread_resources.env.physical_mesh

@@ -153,6 +153,30 @@ def test_failed_worker_detected_and_restartable(service, skewed_bufs):
     assert len(res.bufs) == nw
 
 
+def test_aborted_shuffle_does_not_pollute_retry(service):
+    """Undelivered messages from a failed shuffle must not be RECV'd by the
+    retry: mailboxes are keyed (src, dst), so an aborted run's leftovers would
+    silently merge into the next shuffle's output without the drain."""
+    nw = service.topology.num_workers
+    service.cluster.rpc_timeout = 0.5
+    service.cluster.run_timeout = 3.0
+    keys = np.arange(16, dtype=np.int64)
+    ones = {w: Msgs(keys.copy(), np.ones((16, 1))) for w in range(nw)}
+    twos = {w: Msgs(keys.copy(), np.full((16, 1), 2.0)) for w in range(nw)}
+    service.fail_worker(2)
+    with pytest.raises(TimeoutError):
+        service.shuffle("vanilla_push", ones, list(range(nw)),
+                        list(range(nw)), comb_fn=SUM)
+    service.heal_worker(2)
+    res = service.shuffle("vanilla_push", twos, list(range(nw)),
+                          list(range(nw)), comb_fn=SUM)
+    # every received value is a sum of 2.0s; any 1.0 leaked from the aborted run
+    total = sum(m.vals.sum() for m in res.bufs.values())
+    assert total == pytest.approx(2.0 * 16 * nw)
+    assert len(service.cluster._rendezvous) == 0
+    assert all(q.empty() for q in service.cluster._mail.values())
+
+
 def test_straggler_delay_visible_in_durations(service, skewed_bufs):
     nw = service.topology.num_workers
     service.delay_worker(1, 0.3)

@@ -69,8 +69,9 @@ def test_hier_psum_equals_flat():
                 return meshops.grad_sync({"g": v}, inner_axis="data",
                                          outer_axis="pod", mode=mode,
                                          compress_outer=compress)["g"]
-            return jax.jit(jax.shard_map(
-                f, mesh=mesh, in_specs=jax.P(), out_specs=jax.P(),
+            from repro.compat import P, shard_map
+            return jax.jit(shard_map(
+                f, mesh=mesh, in_specs=P(), out_specs=P(),
                 check_vma=False))(x)
 
         flat = run("flat", False)

@@ -1,0 +1,250 @@
+"""Plan-compilation cache: keying, hit/miss, drift invalidation, equivalence.
+
+The contract under test (ISSUE 1 acceptance): a repeated shuffle with an
+unchanged (template, topology, stats-signature) key hits the cache, skips
+sampling/instantiation entirely, and produces *identical* outputs to a fresh
+run — on both the threaded reference executor and the batched (vectorized)
+data plane.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (SUM, CompiledPlan, Msgs, PlanCache, TeShuService,
+                        compile_plan, datacenter, fat_tree, multipod_dcn,
+                        plan_key, reduction_drift, stats_signature)
+from repro.core.messages import HASH_PART
+
+
+def _dup_heavy(nw, n=400, blocks=40, key_space=4096, seed=3):
+    """Heavy *cross-worker* key duplication: all workers draw from one shared
+    key pool, so local combining at every level removes most bytes (the sample
+    is taken after the per-worker combine, so only cross-worker duplication
+    drives the EFF/COST estimate)."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, key_space, blocks)
+    base[0] = key_space - 1              # pin the key-space bucket
+    out = {}
+    for w in range(nw):
+        keys = np.repeat(rng.permutation(base), n // blocks)
+        out[w] = Msgs(keys, rng.random((keys.size, 1)))
+    return out
+
+
+def _unique_ish(nw, n=400, key_space=4096, seed=4):
+    """Globally (near-)unique keys in the same space/shape as ``_dup_heavy``:
+    disjoint per-worker ranges, so the combiner removes ~nothing even pooled."""
+    rng = np.random.default_rng(seed)
+    per = key_space // nw
+    out = {}
+    for w in range(nw):
+        keys = w * per + rng.choice(per, size=n, replace=False)
+        keys[0] = key_space - 1          # pin the key-space bucket (shared key)
+        out[w] = Msgs(keys, rng.random((n, 1)))
+    return out
+
+
+def _copy(bufs):
+    return {w: Msgs(m.keys.copy(), m.vals.copy()) for w, m in bufs.items()}
+
+
+def _sorted_eq(a: Msgs, b: Msgs):
+    oa, ob = np.argsort(a.keys), np.argsort(b.keys)
+    np.testing.assert_array_equal(a.keys[oa], b.keys[ob])
+    np.testing.assert_array_equal(a.vals[oa], b.vals[ob])   # bit-identical
+
+
+# ---------------------------------------------------------------------------
+# keying
+# ---------------------------------------------------------------------------
+
+def test_signature_stable_and_discriminating():
+    bufs = _dup_heavy(4)
+    s1 = stats_signature(bufs, HASH_PART, SUM, 0.05)
+    s2 = stats_signature(_copy(bufs), HASH_PART, SUM, 0.05)
+    assert s1 == s2                                  # identical workload -> hit
+    assert s1 != stats_signature(bufs, HASH_PART, None, 0.05)   # combiner matters
+    assert s1 != stats_signature(bufs, HASH_PART, SUM, 0.10)    # rate matters
+    bigger = {w: Msgs(np.concatenate([m.keys] * 4),
+                      np.concatenate([m.vals] * 4)) for w, m in bufs.items()}
+    assert s1 != stats_signature(bigger, HASH_PART, SUM, 0.05)  # 4x data -> miss
+
+
+def test_signature_tolerates_jitter_within_bucket():
+    bufs = _dup_heavy(4, n=400)
+    jittered = {w: Msgs(m.keys[:-3], m.vals[:-3]) for w, m in bufs.items()}
+    assert stats_signature(bufs, HASH_PART, SUM, 0.05) == \
+        stats_signature(jittered, HASH_PART, SUM, 0.05)
+
+
+def test_plan_key_separates_topology_and_participants():
+    bufs = _dup_heavy(8)
+    sig = stats_signature(bufs, HASH_PART, SUM, 0.05)
+    t1, t2 = datacenter(2, 2, 2), fat_tree(2, 2, 1, 2)
+    w = tuple(range(8))
+    assert plan_key("vanilla_push", t1, w, w, sig) != \
+        plan_key("vanilla_push", t2, w, w, sig)
+    assert plan_key("vanilla_push", t1, w, w, sig) != \
+        plan_key("vanilla_push", t1, w, w[:4], sig)
+    assert plan_key("vanilla_push", t1, w, w, sig) != \
+        plan_key("bruck", t1, w, w, sig)
+
+
+# ---------------------------------------------------------------------------
+# cache mechanics
+# ---------------------------------------------------------------------------
+
+def _dummy_plan(key) -> CompiledPlan:
+    return compile_plan(key, "vanilla_push", datacenter(2, 2, 2),
+                        range(8), range(8), decisions=[])
+
+
+def test_cache_hit_miss_lru_eviction():
+    cache = PlanCache(capacity=2)
+    k = [("t", i) for i in range(3)]
+    assert cache.get(k[0]) is None                       # miss
+    for key in k:
+        cache.put(key, _dummy_plan(key))
+    assert len(cache) == 2                               # capacity enforced
+    assert cache.get(k[0]) is None                       # k[0] was LRU-evicted
+    assert cache.get(k[2]) is not None
+    st = cache.stats()
+    assert st["evictions"] == 1 and st["hits"] == 1 and st["misses"] == 2
+
+
+def test_cache_refresh_every_forces_reinstantiation():
+    cache = PlanCache(refresh_every=2)
+    key = ("t", 0)
+    cache.put(key, _dummy_plan(key))
+    assert cache.get(key) is not None
+    assert cache.get(key) is not None
+    assert cache.get(key) is None                        # 3rd hit -> forced refresh
+    assert cache.stats()["refreshes"] == 1
+
+
+def test_reduction_drift_thresholds():
+    assert not reduction_drift(0.2, 0.3)                 # within tolerance
+    assert reduction_drift(0.2, 0.4)
+    assert reduction_drift(0.9, 0.2, tolerance=0.5)
+
+
+# ---------------------------------------------------------------------------
+# service integration: hit/miss + equivalence
+# ---------------------------------------------------------------------------
+
+TOPOLOGIES = {
+    "datacenter": lambda: datacenter(2, 2, 2, oversubscription=4.0),
+    "fat_tree": lambda: fat_tree(2, 2, 2, 1, edge_oversubscription=4.0),
+    "multipod_dcn": lambda: multipod_dcn(2, 2, 2),
+}
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("template", ["vanilla_push", "vanilla_pull",
+                                      "coordinated", "network_aware", "bruck"])
+def test_cached_equals_fresh_all_executors(topo_name, template):
+    topo = TOPOLOGIES[topo_name]()
+    nw = topo.num_workers
+    svc = TeShuService(topo)
+    bufs = _dup_heavy(nw)
+    workers = list(range(nw))
+
+    fresh = svc.shuffle(template, _copy(bufs), workers, workers,
+                        comb_fn=SUM, rate=0.05)
+    assert not fresh.cached
+    cached_vec = svc.shuffle(template, _copy(bufs), workers, workers,
+                             comb_fn=SUM, rate=0.05)
+    cached_thr = svc.shuffle(template, _copy(bufs), workers, workers,
+                             comb_fn=SUM, rate=0.05, execution="threaded")
+    assert cached_vec.cached and cached_thr.cached
+    if template != "bruck":                # bruck falls back to threaded
+        assert cached_vec.vectorized
+    st = svc.cache_stats()
+    assert st["misses"] == 1 and st["hits"] == 2
+
+    assert set(fresh.bufs) == set(cached_vec.bufs) == set(cached_thr.bufs)
+    for w in fresh.bufs:
+        _sorted_eq(fresh.bufs[w], cached_vec.bufs[w])
+        _sorted_eq(fresh.bufs[w], cached_thr.bufs[w])
+    # byte accounting is identical across executors (same charges, same levels)
+    assert cached_vec.stats["bytes_per_level"] == cached_thr.stats["bytes_per_level"]
+    assert cached_vec.stats["total_bytes"] == cached_thr.stats["total_bytes"]
+
+
+def test_cache_hit_skips_sampling_and_decisions_replayed():
+    topo = datacenter(2, 2, 2, oversubscription=4.0)
+    nw = topo.num_workers
+    svc = TeShuService(topo)
+    bufs = _dup_heavy(nw)
+    workers = list(range(nw))
+    fresh = svc.shuffle("network_aware", _copy(bufs), workers, workers,
+                        comb_fn=SUM, rate=0.05)
+    assert fresh.stats["sample_bytes"] > 0               # instantiation sampled
+    hit = svc.shuffle("network_aware", _copy(bufs), workers, workers,
+                      comb_fn=SUM, rate=0.05)
+    assert hit.stats["sample_bytes"] == 0                # replay did not
+    assert [lv for lv, _ in hit.decisions] == [lv for lv, _ in fresh.decisions]
+    for (_, a), (_, b) in zip(fresh.decisions, hit.decisions):
+        assert a.beneficial == b.beneficial
+
+
+def test_execution_fresh_bypasses_cache():
+    topo = datacenter(2, 2, 2)
+    nw = topo.num_workers
+    svc = TeShuService(topo, execution="fresh")
+    bufs = _dup_heavy(nw)
+    workers = list(range(nw))
+    svc.shuffle("network_aware", _copy(bufs), workers, workers, comb_fn=SUM,
+                rate=0.05)
+    r = svc.shuffle("network_aware", _copy(bufs), workers, workers, comb_fn=SUM,
+                    rate=0.05)
+    assert not r.cached and r.stats["sample_bytes"] > 0
+    assert svc.cache_stats()["hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# drift invalidation
+# ---------------------------------------------------------------------------
+
+def test_drift_invalidates_and_reinstantiates():
+    """Same signature, different data distribution -> observed reduction drifts
+    -> plan dropped -> next call re-instantiates from fresh samples."""
+    topo = datacenter(2, 2, 2, oversubscription=10.0, combine_bytes_per_s=64e9)
+    nw = topo.num_workers
+    svc = TeShuService(topo)
+    workers = list(range(nw))
+    dup = _dup_heavy(nw, n=4000, blocks=100, key_space=65536)
+    uniq = _unique_ish(nw, n=4000, key_space=65536)
+    # both workloads must share the cache key or the test is vacuous
+    assert stats_signature(dup, HASH_PART, SUM, 0.05) == \
+        stats_signature(uniq, HASH_PART, SUM, 0.05)
+
+    fresh = svc.shuffle("network_aware", _copy(dup), workers, workers,
+                        comb_fn=SUM, rate=0.05)
+    assert any(ec.beneficial for _, ec in fresh.decisions), \
+        "duplication-heavy workload must trigger local combining"
+    drifted = svc.shuffle("network_aware", _copy(uniq), workers, workers,
+                          comb_fn=SUM, rate=0.05)
+    assert drifted.cached                                # keyed the same -> hit
+    assert svc.cache_stats()["invalidations"] == 1       # ...but drift detected
+    again = svc.shuffle("network_aware", _copy(uniq), workers, workers,
+                        comb_fn=SUM, rate=0.05)
+    assert not again.cached                              # re-instantiated
+    assert again.stats["sample_bytes"] > 0
+    for _, ec in again.decisions:
+        assert ec.reduction_ratio > 0.8                  # fresh samples see truth
+
+
+def test_no_drift_keeps_plan():
+    topo = datacenter(2, 2, 2, oversubscription=10.0)
+    nw = topo.num_workers
+    svc = TeShuService(topo)
+    workers = list(range(nw))
+    dup = _dup_heavy(nw, n=4000, blocks=100)
+    svc.shuffle("network_aware", _copy(dup), workers, workers,
+                comb_fn=SUM, rate=0.05)
+    for seed in (5, 6, 7):                               # same distribution, new draws
+        more = _dup_heavy(nw, n=4000, blocks=100, seed=seed)
+        svc.shuffle("network_aware", _copy(more), workers, workers,
+                    comb_fn=SUM, rate=0.05)
+    st = svc.cache_stats()
+    assert st["invalidations"] == 0 and st["hits"] == 3

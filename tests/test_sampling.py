@@ -2,7 +2,7 @@
 hypothesis property tests on the estimator's invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (SUM, Msgs, estimate_reduction_ratio, group_of,
                         num_groups_for_rate, partition_aware_sample,
