@@ -1,18 +1,30 @@
-"""§5.2 robustness: random link failures between ToR and spine.
+"""§5.2/§6 robustness: link failures, worker death, and the recovery path.
 
-The paper injects 3 random link failures per scenario over 100 scenarios and
-reports that network-aware shuffling keeps completion times close to the
-no-failure case (5x–8.2x faster than vanilla under failure).  Here a failure
-degrades the affected boundary's effective bandwidth (surviving links carry the
-load); the adaptive template re-decides per scenario.
+Two suites:
+
+* :func:`run_scenarios` — the paper's §5.2 experiment: random ToR↔spine link
+  failures degrade spine bandwidth; the adaptive template re-decides per
+  scenario.  Services share one PlanCache with resilience on, so every
+  degraded scenario *repairs* the healthy-topology plan instead of
+  re-instantiating (the `repairs`/`hits` columns show the control-plane work
+  saved across the sweep).
+* :func:`run_recovery` — beyond bandwidth arithmetic: a worker is actually
+  killed mid-stage (`fail worker 3 after stage 0`) and the resilience layer
+  recovers via participant-scoped restart from per-stage checkpoints, on both
+  executors.  Reported against the no-failure run and against the naive
+  alternative (abort + full re-execution), in wall-clock and in journal terms
+  (how many workers re-executed the failed stage).
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from repro.apps.graph.engine import PregelEngine, rmat_graph
 from repro.apps.graph.programs import PageRank
-from repro.core import TeShuService, degrade_links
+from repro.core import (SUM, Msgs, PlanCache, TeShuService, datacenter,
+                        degrade_links)
 
 from .common import CsvOut, paper_topology
 
@@ -20,11 +32,18 @@ from .common import CsvOut, paper_topology
 def run_scenarios(n_scenarios: int = 20, fail_links: int = 3,
                   total_uplinks: int = 8) -> CsvOut:
     out = CsvOut("failure_robustness",
-                 ["scenario_group", "vanilla_ms", "aware_ms", "speedup"])
+                 ["scenario_group", "vanilla_ms", "aware_ms", "speedup",
+                  "plan_repairs", "plan_hits"])
     g = rmat_graph(8192, 200_000, seed=21)
     rng = np.random.default_rng(42)
 
     base = paper_topology(4.0)
+    cache = PlanCache(capacity=1024)
+    # warm the healthy-topology plans: every degraded scenario repairs these
+    warm = TeShuService(base, plan_cache=cache, resilience="recover")
+    PregelEngine(g, warm, template_id="network_aware", rate=0.01).run(PageRank(3))
+    nofail = warm.stats()["modelled_time_s"]
+
     rows = []
     for s in range(n_scenarios):
         # each failed uplink removes 1/total_uplinks of spine capacity
@@ -32,7 +51,7 @@ def run_scenarios(n_scenarios: int = 20, fail_links: int = 3,
         topo = degrade_links(base, "global", frac)
         times = {}
         for template in ("vanilla_push", "network_aware"):
-            svc = TeShuService(topo)
+            svc = TeShuService(topo, plan_cache=cache, resilience="recover")
             eng = PregelEngine(g, svc, template_id=template, rate=0.01)
             eng.run(PageRank(3))
             times[template] = svc.stats()["modelled_time_s"]
@@ -40,23 +59,99 @@ def run_scenarios(n_scenarios: int = 20, fail_links: int = 3,
 
     v = np.asarray([r[0] for r in rows])
     a = np.asarray([r[1] for r in rows])
-    # no-failure reference
-    svc = TeShuService(base)
-    PregelEngine(g, svc, template_id="network_aware", rate=0.01).run(PageRank(3))
-    nofail = svc.stats()["modelled_time_s"]
-
+    st = cache.stats()
     out.add(scenario_group="failed_mean", vanilla_ms=float(v.mean() * 1e3),
-            aware_ms=float(a.mean() * 1e3), speedup=float((v / a).mean()))
+            aware_ms=float(a.mean() * 1e3), speedup=float((v / a).mean()),
+            plan_repairs=st["repairs"], plan_hits=st["hits"])
     out.add(scenario_group="failed_p95", vanilla_ms=float(np.percentile(v, 95) * 1e3),
             aware_ms=float(np.percentile(a, 95) * 1e3),
-            speedup=float(np.percentile(v / a, 95)))
+            speedup=float(np.percentile(v / a, 95)),
+            plan_repairs=st["repairs"], plan_hits=st["hits"])
     out.add(scenario_group="no_failure_aware", vanilla_ms=0.0,
-            aware_ms=float(nofail * 1e3), speedup=0.0)
+            aware_ms=float(nofail * 1e3), speedup=0.0,
+            plan_repairs=0, plan_hits=0)
+    return out
+
+
+def _dup_heavy(nw: int, n: int = 4000, blocks: int = 100,
+               key_space: int = 4096, seed: int = 3) -> dict[int, Msgs]:
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, key_space, blocks)
+    out = {}
+    for w in range(nw):
+        keys = np.repeat(rng.permutation(base), n // blocks)
+        out[w] = Msgs(keys, rng.random((keys.size, 1)))
+    return out
+
+
+def run_recovery(repeats: int = 3) -> CsvOut:
+    """Kill worker 3 after the server stage; compare completion strategies.
+
+    ``recovered_ms`` uses the resilience pipeline (checkpoints + journal
+    replay, minimal restart); ``full_restart_ms`` is the naive strategy —
+    abort, heal, re-run everything; ``no_failure_ms`` is the clean reference.
+    ``restarted_workers`` counts journal `stage` records from the recovery
+    attempt (threaded: the dead worker's rack group; vectorized lockstep: all
+    senders, since nobody had entered the failed stage).
+    """
+    out = CsvOut("worker_failure_recovery",
+                 ["executor", "no_failure_ms", "recovered_ms",
+                  "full_restart_ms", "restarted_workers", "recovered_bytes_x"])
+    topo = datacenter(2, 2, 2, oversubscription=10.0, combine_bytes_per_s=64e9)
+    nw = topo.num_workers
+    workers = list(range(nw))
+    bufs = _dup_heavy(nw)
+
+    def copy():
+        return {w: m.copy() for w, m in bufs.items()}
+
+    for executor in ("threaded", "auto"):
+        svc = TeShuService(topo, execution=executor, resilience="recover")
+        svc.shuffle("network_aware", copy(), workers, workers,
+                    comb_fn=SUM, rate=0.05)                 # compile the plan
+
+        def timed(fault: bool, recover: bool) -> tuple[float, int, int]:
+            best, restarted, nbytes = float("inf"), 0, 0
+            for _ in range(repeats):
+                if fault:
+                    svc.inject_fault(3, after_stage=0)
+                sid = svc.next_shuffle_id()
+                before = svc.stats()["total_bytes"]
+                t0 = time.perf_counter()
+                if recover or not fault:
+                    res = svc.shuffle("network_aware", copy(), workers, workers,
+                                      comb_fn=SUM, rate=0.05, shuffle_id=sid)
+                    n = len({r.wid for r in
+                             svc.manager.stage_records(sid, attempt=1)})
+                else:
+                    try:                                    # naive: fail, then
+                        svc.shuffle("network_aware", copy(), workers, workers,
+                                    comb_fn=SUM, rate=0.05, shuffle_id=sid,
+                                    resilience="off")
+                    except TimeoutError:
+                        svc.restart_worker(3)
+                    res = svc.shuffle("network_aware", copy(), workers, workers,
+                                      comb_fn=SUM, rate=0.05)
+                    n = len(workers)
+                assert res.bufs
+                dt = time.perf_counter() - t0
+                if dt < best:
+                    best, restarted = dt, n
+                    nbytes = svc.stats()["total_bytes"] - before
+            return best, restarted, nbytes
+
+        clean, _, clean_bytes = timed(fault=False, recover=False)
+        rec, restarted, rec_bytes = timed(fault=True, recover=True)
+        naive, _, _ = timed(fault=True, recover=False)
+        out.add(executor=executor, no_failure_ms=clean * 1e3,
+                recovered_ms=rec * 1e3, full_restart_ms=naive * 1e3,
+                restarted_workers=restarted,
+                recovered_bytes_x=rec_bytes / max(1, clean_bytes))
     return out
 
 
 def run() -> list[CsvOut]:
-    return [run_scenarios()]
+    return [run_scenarios(), run_recovery()]
 
 
 if __name__ == "__main__":

@@ -1,12 +1,18 @@
 """TeShu core: the paper's contribution — templated, adaptive, sampled shuffles."""
-from .adaptive import EffCost, compute_eff_cost, reduction_drift
+from .adaptive import (EffCost, compute_eff_cost, eff_cost_from_ratio,
+                       reduction_drift)
 from .coscheduler import CoflowRequest, CoflowScheduler, ScheduleEntry
 from .manager import ShuffleManager, ShuffleRecord
 from .messages import (COMBINERS, HASH_PART, MAX, MIN, SUM, Combiner, Msgs, PartFn,
                        partition, range_part, splitmix64)
 from .plancache import (CompiledPlan, LevelDecision, PlanCache, compile_plan,
                         plan_key, stats_signature)
-from .primitives import CostLedger, LocalCluster, ShuffleArgs, WorkerContext
+from .primitives import (CostLedger, FaultInjection, LocalCluster, ShuffleAborted,
+                         ShuffleArgs, WorkerContext)
+from .resilience import (CheckpointStore, FailureDetector, FailureReport,
+                         RecoveryContext, RecoveryCoordinator, SpeculationPolicy,
+                         SpeculativeTask, consistent_resume_stages, repair_plan,
+                         try_repair)
 from .sampling import (estimate_reduction_ratio, group_of, num_groups_for_rate,
                        partition_aware_sample, random_sample, reduction_ratio)
 from .service import TeShuService
@@ -19,12 +25,14 @@ from .vectorized import (can_vectorize, combine_msgs, run_shuffle_vectorized,
                          set_comb_backend)
 
 __all__ = [
-    "EffCost", "compute_eff_cost", "reduction_drift", "CoflowRequest",
+    "EffCost", "compute_eff_cost", "eff_cost_from_ratio", "reduction_drift",
+    "CoflowRequest",
     "CoflowScheduler", "ScheduleEntry", "ShuffleManager", "ShuffleRecord",
     "COMBINERS", "HASH_PART", "MAX", "MIN", "SUM", "Combiner", "Msgs", "PartFn",
     "partition", "range_part", "splitmix64",
     "CompiledPlan", "LevelDecision", "PlanCache", "compile_plan", "plan_key",
-    "stats_signature", "CostLedger", "LocalCluster",
+    "stats_signature", "CostLedger", "FaultInjection", "LocalCluster",
+    "ShuffleAborted",
     "ShuffleArgs", "WorkerContext", "estimate_reduction_ratio", "group_of",
     "num_groups_for_rate", "partition_aware_sample", "random_sample",
     "reduction_ratio", "TeShuService", "TEMPLATES", "ShuffleResult",
@@ -33,4 +41,7 @@ __all__ = [
     "from_mesh_axes", "multipod_dcn", "roofline_times", "dominant_term",
     "roofline_fraction", "can_vectorize", "combine_msgs",
     "run_shuffle_vectorized", "set_comb_backend",
+    "CheckpointStore", "FailureDetector", "FailureReport", "RecoveryContext",
+    "RecoveryCoordinator", "SpeculationPolicy", "SpeculativeTask",
+    "consistent_resume_stages", "repair_plan", "try_repair",
 ]

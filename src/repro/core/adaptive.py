@@ -27,6 +27,10 @@ class EffCost:
     eff: float
     cost: float
     reduction_ratio: float
+    group_bytes: float = 0.0
+    # ^ the B_group the verdict was computed from — carried so the resilience
+    #   layer can re-evaluate EFF/COST against a *degraded* topology (plan
+    #   repair) without re-sampling; 0.0 on trivially-rejected stages.
 
     @property
     def beneficial(self) -> bool:
@@ -64,6 +68,23 @@ def compute_eff_cost(
     if combiner is None or group_size <= 1:
         return EffCost(eff=0.0, cost=0.0, reduction_ratio=1.0)
     r_hat = estimate_reduction_ratio(samples, combiner)
+    return eff_cost_from_ratio(topology, level_name, r_hat, group_bytes, group_size)
+
+
+def eff_cost_from_ratio(
+    topology: NetworkTopology,
+    level_name: str,
+    r_hat: float,
+    group_bytes: float,
+    group_size: int,
+) -> EffCost:
+    """The EFF/COST formula alone, decoupled from sampling.
+
+    Used by fresh instantiation (with a freshly sampled r̂) and by plan repair
+    (with the ratio a cached plan already validated) — so a repaired verdict is
+    exactly what instantiation would compute on the degraded topology, minus
+    the sampling pass.
+    """
     li = topology.level_index(level_name)
     lv = topology.levels[li]
     saved_per_byte = topology.cost_per_byte_above(li)
@@ -71,4 +92,5 @@ def compute_eff_cost(
     exchange_frac = 1.0 - 1.0 / group_size
     cost = (group_bytes * exchange_frac) / lv.bw_bytes_per_s \
         + group_bytes / lv.combine_bytes_per_s + lv.latency_s
-    return EffCost(eff=eff, cost=cost, reduction_ratio=r_hat)
+    return EffCost(eff=eff, cost=cost, reduction_ratio=r_hat,
+                   group_bytes=float(group_bytes))

@@ -32,14 +32,35 @@ from .templates import TEMPLATES, ShuffleTemplate
 
 @dataclasses.dataclass
 class ShuffleRecord:
+    """One journal line.  ``wid`` is ``-1`` for manager-scope events (failure
+    diagnosis, recovery orchestration, speculation) that no single worker owns.
+
+    ``kind`` values: ``start``/``end`` (per-worker shuffle lifecycle, the
+    paper's records), ``stage`` (a worker completed one hierarchy stage —
+    recovery's restart-set evidence), ``failure`` (detector diagnosis),
+    ``recovery`` (restart/resume decision for a retry attempt), ``speculation``
+    (straggler work duplicated onto backups).  Old journals (no ``stage`` /
+    ``attempt`` / ``info`` fields) still replay: the new fields default.
+    """
+
     wid: int
     shuffle_id: int
     template_id: str
-    kind: str          # "start" | "end"
+    kind: str          # "start" | "end" | "stage" | "failure" | "recovery" | "speculation"
     ts: float
+    stage: str | None = None
+    attempt: int = 0
+    info: dict | None = None
 
     def to_json(self) -> str:
-        return json.dumps(dataclasses.asdict(self))
+        d = dataclasses.asdict(self)
+        if self.stage is None:
+            del d["stage"]          # keep start/end lines in the seed format
+        if self.info is None:
+            del d["info"]
+        if self.attempt == 0:
+            del d["attempt"]
+        return json.dumps(d)
 
     @staticmethod
     def from_json(line: str) -> "ShuffleRecord":
@@ -96,16 +117,55 @@ class ShuffleManager:
             for j in self._journals:
                 j.write(rec.to_json() + "\n")
 
-    def record_start(self, wid: int, shuffle_id: int, template_id: str) -> None:
-        self._append(ShuffleRecord(wid, shuffle_id, template_id, "start", self._clock()))
+    def record_start(self, wid: int, shuffle_id: int, template_id: str,
+                     attempt: int = 0) -> None:
+        self._append(ShuffleRecord(wid, shuffle_id, template_id, "start",
+                                   self._clock(), attempt=attempt))
 
-    def record_end(self, wid: int, shuffle_id: int, template_id: str) -> None:
-        self._append(ShuffleRecord(wid, shuffle_id, template_id, "end", self._clock()))
+    def record_end(self, wid: int, shuffle_id: int, template_id: str,
+                   attempt: int = 0) -> None:
+        self._append(ShuffleRecord(wid, shuffle_id, template_id, "end",
+                                   self._clock(), attempt=attempt))
 
-    def records(self, shuffle_id: int | None = None) -> list[ShuffleRecord]:
+    # ---- resilience records (journal-driven recovery, §6) ----------------------
+    def record_stage(self, wid: int, shuffle_id: int, template_id: str,
+                     stage: str, attempt: int = 0) -> None:
+        """A worker finished one hierarchy stage (and checkpointed it).  On a
+        recovery attempt these records are the proof of *which* participants
+        re-executed — the §6 "restart a subset" contract is asserted on them."""
+        self._append(ShuffleRecord(wid, shuffle_id, template_id, "stage",
+                                   self._clock(), stage=stage, attempt=attempt))
+
+    def record_failure(self, shuffle_id: int, info: dict, attempt: int = 0) -> None:
+        self._append(ShuffleRecord(-1, shuffle_id, "", "failure", self._clock(),
+                                   attempt=attempt, info=info))
+
+    def record_recovery(self, shuffle_id: int, info: dict, attempt: int = 0) -> None:
+        self._append(ShuffleRecord(-1, shuffle_id, "", "recovery", self._clock(),
+                                   attempt=attempt, info=info))
+
+    def record_speculation(self, shuffle_id: int, info: dict,
+                           attempt: int = 0) -> None:
+        self._append(ShuffleRecord(-1, shuffle_id, "", "speculation",
+                                   self._clock(), attempt=attempt, info=info))
+
+    def records(self, shuffle_id: int | None = None,
+                kind: str | None = None) -> list[ShuffleRecord]:
         with self._lock:
             return [r for r in self._records
-                    if shuffle_id is None or r.shuffle_id == shuffle_id]
+                    if (shuffle_id is None or r.shuffle_id == shuffle_id)
+                    and (kind is None or r.kind == kind)]
+
+    def stage_records(self, shuffle_id: int,
+                      attempt: int | None = None) -> list[ShuffleRecord]:
+        return [r for r in self.records(shuffle_id, kind="stage")
+                if attempt is None or r.attempt == attempt]
+
+    def recovery_records(self, shuffle_id: int) -> list[ShuffleRecord]:
+        return self.records(shuffle_id, kind="recovery")
+
+    def failure_records(self, shuffle_id: int) -> list[ShuffleRecord]:
+        return self.records(shuffle_id, kind="failure")
 
     # ---- progress / stragglers -------------------------------------------------
     def progress(self, shuffle_id: int) -> dict:

@@ -204,7 +204,7 @@ class PlanCache:
         self._hits_by_key: dict[tuple, int] = {}
         self._lock = threading.Lock()
         self._stats = {"hits": 0, "misses": 0, "invalidations": 0, "refreshes": 0,
-                       "evictions": 0}
+                       "evictions": 0, "repairs": 0}
 
     # ---- lookup --------------------------------------------------------------
     def get(self, key: tuple) -> CompiledPlan | None:
@@ -227,8 +227,10 @@ class PlanCache:
             self._stats["hits"] += 1
             return plan
 
-    def put(self, key: tuple, plan: CompiledPlan) -> None:
+    def put(self, key: tuple, plan: CompiledPlan, *, repaired: bool = False) -> None:
         with self._lock:
+            if repaired:
+                self._stats["repairs"] += 1
             self._plans[key] = plan
             self._plans.move_to_end(key)
             self._hits_by_key.setdefault(key, 0)
@@ -236,6 +238,13 @@ class PlanCache:
                 old, _ = self._plans.popitem(last=False)
                 self._hits_by_key.pop(old, None)
                 self._stats["evictions"] += 1
+
+    def scan(self) -> list[tuple[tuple, CompiledPlan]]:
+        """Snapshot of (key, plan) pairs, MRU last.  Used by the resilience
+        layer's plan repair to find a healthy-topology base plan for a degraded
+        scenario; does not touch hit/miss accounting or LRU order."""
+        with self._lock:
+            return list(self._plans.items())
 
     def invalidate(self, key: tuple) -> bool:
         with self._lock:

@@ -17,6 +17,7 @@ import collections
 import dataclasses
 import queue
 import threading
+import time
 from typing import Callable, Sequence
 
 import numpy as np
@@ -157,14 +158,17 @@ class Rendezvous:
     """All participants contribute a value; one computation runs; all get the result.
 
     Reused sequentially (generation counter) — one use per adaptive level per shuffle.
+    Waiters poll ``abort_event`` (set when any participant of the owning shuffle
+    dies) so a failure surfaces in ~50ms instead of the full RPC timeout.
     """
 
-    def __init__(self, nparticipants: int):
+    def __init__(self, nparticipants: int, abort_event: threading.Event | None = None):
         self.n = nparticipants
         self._cond = threading.Condition()
         self._gen = 0
         self._contrib: dict[int, object] = {}
         self._result: object = None
+        self._abort = abort_event
 
     def gather_compute(self, wid: int, value, fn: Callable[[dict], object]):
         with self._cond:
@@ -178,8 +182,12 @@ class Rendezvous:
                 return self._result
             waited = 0.0
             while self._gen == gen:
-                if not self._cond.wait(timeout=5.0):
-                    waited += 5.0
+                if not self._cond.wait(timeout=0.05):
+                    waited += 0.05
+                    if self._abort is not None and self._abort.is_set():
+                        raise ShuffleAborted(
+                            f"rendezvous abandoned at gen {gen}: a participant "
+                            f"died (worker {wid} was waiting)")
                     if waited >= 120.0:
                         raise TimeoutError(f"rendezvous stuck at gen {gen} (worker {wid})")
             return self._result
@@ -191,6 +199,42 @@ class Rendezvous:
 
 class DeadWorker(Exception):
     """Raised inside a worker thread when a fault is injected (failure testing)."""
+
+
+class ShuffleAborted(TimeoutError):
+    """A shuffle attempt cannot complete because a participant became unreachable.
+
+    Subclasses ``TimeoutError`` deliberately: to a peer, a dead worker is
+    indistinguishable from an RPC that never answers — callers that handled the
+    old slow-timeout path keep working, they just hear about it in ~50ms.  The
+    resilience layer (:mod:`repro.core.resilience`) catches this specifically,
+    attaches a :class:`~repro.core.resilience.detector.FailureReport` as
+    ``.report``, and drives plan repair / participant-scoped recovery.
+    """
+
+    def __init__(self, message: str, *, shuffle_id: int | None = None):
+        super().__init__(message)
+        self.shuffle_id = shuffle_id
+        self.report = None          # FailureReport, attached by the detector
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultInjection:
+    """Kill worker ``wid`` after it completes ``after_stage`` stages (§6 testing).
+
+    Stage indices follow the topology hierarchy: stage *i* is the exchange at
+    ``topology.levels[i]`` for adaptive templates (checkpointed via
+    ``WorkerContext.CKPT``); the global exchange is the final, uncheckpointed
+    stage.  ``after_stage=-1`` kills the worker at its first primitive call;
+    ``after_stage=k`` lets it finish stage ``k`` and die at the first primitive
+    of the next stage — the same instant on the threaded and vectorized
+    executors, so recovery tests can compare them byte for byte.  Static
+    templates (vanilla/bruck/two-level) never complete a checkpointed stage, so
+    only ``after_stage=-1`` fires for them (death before the global exchange).
+    """
+
+    wid: int
+    after_stage: int = -1
 
 
 @dataclasses.dataclass
@@ -211,6 +255,10 @@ class ShuffleArgs:
     rate: float = 0.01            # $RATE
     seed: int = 0
     plan: "object | None" = None  # CompiledPlan (kept untyped: no core cycle)
+    recovery: "object | None" = None
+    # ^ resilience.recovery.RecoveryContext when the service runs with
+    #   resilience enabled (checkpoint store, resume map, attempt number,
+    #   speculation set); None keeps every primitive on its zero-overhead path.
 
 
 class LocalCluster:
@@ -234,6 +282,12 @@ class LocalCluster:
         self._rv_lock = threading.Lock()
         self.failed_workers: set[int] = set()
         self.worker_delays: dict[int, float] = {}   # injected straggler delays (s)
+        self.fault_injections: dict[int, FaultInjection] = {}  # mid-stage kills
+        # per-shuffle failure signalling: an abort event (set the instant any
+        # participant dies) and the set of workers that have exited abnormally,
+        # so peers blocked on them fail fast instead of burning rpc_timeout.
+        self._abort_ev: dict[int, threading.Event] = {}
+        self._unreachable: dict[int, set[int]] = {}
 
     # ---- infrastructure ------------------------------------------------------
     def reset_ledger(self) -> None:
@@ -251,11 +305,45 @@ class LocalCluster:
             ev = self._published_ev.setdefault(key, threading.Event())
         return ev
 
+    # ---- failure signalling ---------------------------------------------------
+    def abort_event(self, shuffle_id: int) -> threading.Event:
+        ev = self._abort_ev.get(shuffle_id)
+        if ev is None:
+            ev = self._abort_ev.setdefault(shuffle_id, threading.Event())
+        return ev
+
+    def mark_unreachable(self, shuffle_id: int, wid: int) -> None:
+        """Record that ``wid`` exited this shuffle abnormally (died or aborted):
+        peers blocked waiting on it should stop waiting."""
+        s = self._unreachable.get(shuffle_id)
+        if s is None:
+            s = self._unreachable.setdefault(shuffle_id, set())
+        s.add(wid)
+
+    def unreachable(self, shuffle_id: int) -> set[int]:
+        return self._unreachable.get(shuffle_id, set())
+
+    # ---- fault injection (failure testing, §6) --------------------------------
+    def inject_fault(self, wid: int, after_stage: int = -1) -> None:
+        """Arrange for ``wid`` to die mid-shuffle; see :class:`FaultInjection`."""
+        self.fault_injections[wid] = FaultInjection(wid=wid, after_stage=after_stage)
+
+    def clear_fault(self, wid: int) -> None:
+        self.fault_injections.pop(wid, None)
+
+    def restart_worker(self, wid: int) -> None:
+        """Simulate the scheduler restarting a dead worker's process: it rejoins
+        healthy (its pending fault injection died with the old process)."""
+        self.failed_workers.discard(wid)
+        self.fault_injections.pop(wid, None)
+
     def rendezvous(self, key: tuple, nparticipants: int) -> Rendezvous:
         with self._rv_lock:
             rv = self._rendezvous.get(key)
             if rv is None:
-                rv = self._rendezvous[key] = Rendezvous(nparticipants)
+                # key[0] is the owning shuffle id for all rendezvous uses
+                rv = self._rendezvous[key] = Rendezvous(
+                    nparticipants, abort_event=self.abort_event(key[0]))
             return rv
 
     def end_shuffle(self, shuffle_id: int, *, aborted: bool = False) -> None:
@@ -277,12 +365,22 @@ class LocalCluster:
             self._published.pop(k, None)
         for k in [k for k in self._published_ev if k[0] == shuffle_id]:
             self._published_ev.pop(k, None)
+        self._abort_ev.pop(shuffle_id, None)
+        self._unreachable.pop(shuffle_id, None)
         if aborted:
             self._mail = {}   # orphan old queues; lingering workers can't pollute
 
     def run_workers(self, wids: Sequence[int], fn: Callable[[int], object],
-                    timeout: float | None = None) -> dict[int, object]:
-        """Run ``fn(wid)`` on a thread per worker; propagate the first exception."""
+                    timeout: float | None = None,
+                    abort_event: threading.Event | None = None) -> dict[int, object]:
+        """Run ``fn(wid)`` on a thread per worker; propagate the first exception.
+
+        A worker that dies (:class:`DeadWorker`) stops silently, but sets
+        ``abort_event`` so peers blocked on it (RECV/FETCH/rendezvous) fail in
+        ~50ms rather than the full RPC timeout.  When any worker raised
+        :class:`ShuffleAborted` it is preferred over other errors — it carries
+        the failure context the resilience layer diagnoses from.
+        """
         results: dict[int, object] = {}
         errors: list[BaseException] = []
 
@@ -292,7 +390,8 @@ class LocalCluster:
                     raise DeadWorker(f"worker {w} is failed")
                 results[w] = fn(w)
             except DeadWorker:
-                pass                      # simulated crash: silently stops
+                if abort_event is not None:   # simulated crash: silently stops,
+                    abort_event.set()         # but peers must stop waiting on it
             except BaseException as e:    # noqa: BLE001 - rethrown below
                 errors.append(e)
 
@@ -305,7 +404,8 @@ class LocalCluster:
         if any(t.is_alive() for t in threads):
             raise TimeoutError("cluster run timed out (deadlock or straggler)")
         if errors:
-            raise errors[0]
+            raise next((e for e in errors if isinstance(e, ShuffleAborted)),
+                       errors[0])
         return results
 
 
@@ -323,31 +423,76 @@ class WorkerContext:
         self.args = args
         self.decisions: list = []    # (level, EffCost) pairs from adaptive templates
         self.observed: list = []     # (level, pre_bytes, post_bytes) per exchange
+        self.stages_done = 0         # completed hierarchy stages (CKPT/RESUME)
+
+    # ---- failure machinery ----------------------------------------------------
+    def _die(self, reason: str) -> None:
+        """This worker crashes now: flag it dead, wake everyone waiting on it."""
+        self.cluster.failed_workers.add(self.wid)
+        self.cluster.abort_event(self.args.shuffle_id).set()
+        raise DeadWorker(f"worker {self.wid} {reason}")
+
+    def _check_fault(self) -> None:
+        """Entry gate of every primitive: crash if failed or a fault matured.
+
+        An injected fault fires at the first primitive call after the worker has
+        completed ``after_stage`` stages — i.e. mid-shuffle, at a point that is
+        identical on the threaded and vectorized executors.
+        """
+        if self.wid in self.cluster.failed_workers:
+            self._die("is failed")
+        fi = self.cluster.fault_injections.get(self.wid)
+        if fi is not None and self.stages_done > fi.after_stage:
+            self._die(f"killed by fault injection (after stage {fi.after_stage})")
+
+    def _peer_unreachable(self, peer: int) -> bool:
+        return (peer in self.cluster.failed_workers
+                or peer in self.cluster.unreachable(self.args.shuffle_id))
+
+    def _abort(self, message: str) -> None:
+        raise ShuffleAborted(message, shuffle_id=self.args.shuffle_id)
 
     # ---- Table-2 primitives ---------------------------------------------------
     def SEND(self, dst: int, msgs: Msgs, *, sample: bool = False) -> None:
-        if self.wid in self.cluster.failed_workers:
-            raise DeadWorker(self.wid)
+        self._check_fault()
         level = self.topology.crossing_level(self.wid, dst)
         self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes, sample=sample)
         self.cluster._mailbox(self.wid, dst).put(msgs)
 
     def RECV(self, src: int, timeout: float | None = None) -> Msgs:
+        """Blocking receive; fails fast (~50ms) once ``src`` is known dead.
+
+        The unreachable check runs only while the queue is empty, so a message
+        the sender got out before dying is still delivered — detection never
+        races ahead of data that actually arrived.
+        """
+        self._check_fault()
         timeout = self.cluster.rpc_timeout if timeout is None else timeout
-        try:
-            return self.cluster._mailbox(src, self.wid).get(timeout=timeout)
-        except queue.Empty as e:
-            raise TimeoutError(f"RECV({src} -> {self.wid}) timed out") from e
+        q = self.cluster._mailbox(src, self.wid)
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                return q.get(timeout=0.05)
+            except queue.Empty:
+                if self._peer_unreachable(src):
+                    self._abort(f"RECV({src} -> {self.wid}): sender unreachable")
+                if time.monotonic() >= deadline:
+                    raise TimeoutError(f"RECV({src} -> {self.wid}) timed out")
 
     def FETCH(self, src: int, timeout: float | None = None) -> Msgs:
-        timeout = self.cluster.rpc_timeout if timeout is None else timeout
         """Pull mode: wait until ``src`` PUBLISHed its partitions, take ours.
 
         Data bytes are charged to the fetching worker (it pays the wait)."""
+        self._check_fault()
+        timeout = self.cluster.rpc_timeout if timeout is None else timeout
         key = (self.args.shuffle_id, src)
         ev = self.cluster._publish_event(key)
-        if not ev.wait(timeout):
-            raise TimeoutError(f"FETCH from {src} timed out")
+        deadline = time.monotonic() + timeout
+        while not ev.wait(timeout=0.05):
+            if self._peer_unreachable(src):
+                self._abort(f"FETCH from {src}: publisher unreachable")
+            if time.monotonic() >= deadline:
+                raise TimeoutError(f"FETCH from {src} timed out")
         msgs = self.cluster._published[key].get(self.wid, Msgs.empty())
         level = self.topology.crossing_level(src, self.wid)
         self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes)
@@ -355,6 +500,7 @@ class WorkerContext:
 
     def PART(self, msgs: Msgs, dsts: Sequence[int], part_fn: PartFn | None = None,
              *, publish: bool = False) -> dict[int, Msgs]:
+        self._check_fault()
         parts = partition(msgs, list(dsts), part_fn or self.args.part_fn)
         if publish:  # pull mode: make partitions visible to FETCHers
             key = (self.args.shuffle_id, self.wid)
@@ -363,6 +509,7 @@ class WorkerContext:
         return parts
 
     def COMB(self, msgs: Msgs | Sequence[Msgs], comb_fn: Combiner | None = None) -> Msgs:
+        self._check_fault()
         comb = comb_fn or self.args.comb_fn
         batch = Msgs.concat(list(msgs)) if not isinstance(msgs, Msgs) else msgs
         if comb is None:
@@ -372,6 +519,7 @@ class WorkerContext:
 
     def SAMP(self, msgs: Msgs, rate: float | None = None,
              part_fn: PartFn | None = None) -> Msgs:
+        self._check_fault()
         rate = self.args.rate if rate is None else rate
         return partition_aware_sample(msgs, rate, part_fn or self.args.part_fn,
                                       seed=self.args.seed + self.args.shuffle_id)
@@ -379,6 +527,61 @@ class WorkerContext:
     # ---- $-parameters (instantiated from topology) ------------------------------
     def FIND_NBRS(self, level_name: str, peers: Sequence[int]) -> list[int]:
         return self.topology.neighbors(self.wid, peers, level_name)
+
+    # ---- checkpoint/resume (resilience.recovery) --------------------------------
+    def _stage_participants(self, level_idx: int) -> int:
+        """How many srcs will actually execute the stage at ``level_idx``.
+
+        On a recovery attempt, workers resuming past a stage skip its barriers
+        and sampling rendezvous entirely, so every collective for that stage
+        must be sized to the restart subset — otherwise it would wait forever
+        for participants that are replaying from checkpoints.
+        """
+        rc = self.args.recovery
+        if rc is None:
+            return len(self.args.srcs)
+        resume = rc.resume_stages
+        return sum(1 for w in self.args.srcs if resume.get(w, -1) < level_idx)
+
+    def CKPT(self, level_name: str, bufs: Msgs) -> Msgs:
+        """Mark the stage at ``level_name`` complete; persist the combined
+        intermediate when resilience is on (no-op otherwise).  Returns ``bufs``
+        so templates can write ``bufs = ctx.CKPT(level, bufs)``.
+
+        The checkpoint lives manager-side (it survives this worker's death);
+        recovery replays it so only the participants of the *failed* stage
+        re-execute (§6's restart-a-subset).
+        """
+        idx = self.topology.level_index(level_name)
+        self.stages_done = idx + 1
+        rc = self.args.recovery
+        if rc is not None:
+            rc.store.save(self.args.shuffle_id, self.wid, idx, level_name, bufs)
+            if rc.record_stage is not None:
+                rc.record_stage(self.wid, level_name)
+        return bufs
+
+    def RESUME(self, level_name: str) -> Msgs | None:
+        """Recovery fast-forward for the stage at ``level_name``.
+
+        Returns ``None`` when the stage must execute (normal path and the
+        failed/unreached stages of a recovery attempt).  On a recovery attempt,
+        stages this worker already completed are skipped: the stage it resumes
+        *at* returns the checkpointed intermediate, earlier ones return an
+        empty placeholder (the real buffers are restored at the resume stage).
+        """
+        rc = self.args.recovery
+        if rc is None:
+            return None
+        idx = self.topology.level_index(level_name)
+        rs = rc.resume_stages.get(self.wid, -1)
+        if idx > rs:
+            return None
+        ck = rc.store.load(self.args.shuffle_id, self.wid, idx) if idx == rs else None
+        if idx == rs and ck is None:
+            return None               # defensive: no checkpoint -> re-execute
+        self.stages_done = idx + 1
+        return Msgs.empty() if idx < rs else ck
 
     # ---- compiled-plan fast path (plancache) ------------------------------------
     def PLAN_STAGE(self, level_name: str):
@@ -398,10 +601,12 @@ class WorkerContext:
             return None, None
         nbrs = list(ld.nbrs.get(self.wid, (self.wid,)))
         if ld.beneficial:
-            # Every src joins the barrier (participation must be uniform even for
-            # a worker alone in its group, or the rendezvous would never fill).
+            # Every src executing this stage joins the barrier (participation
+            # must be uniform even for a worker alone in its group, or the
+            # rendezvous would never fill); resumed workers are excluded.
+            n = self._stage_participants(self.topology.level_index(level_name))
             rv = self.cluster.rendezvous(
-                (self.args.shuffle_id, "plan-epoch", level_name), len(self.args.srcs))
+                (self.args.shuffle_id, "plan-epoch", level_name), n)
             rv.gather_compute(self.wid, None,
                               lambda _: self.cluster.ledger.advance_epoch())
         return nbrs, ld.eff_cost
@@ -421,11 +626,16 @@ class WorkerContext:
         evaluation runs there; every worker receives the result.  Sample transfer
         bytes are charged (this is the overhead Figure 6 measures), and the epoch
         advances afterwards (a cluster-wide synchronization point)."""
+        self._check_fault()
         srcs = self.args.srcs
         server = srcs[0]
         level = self.topology.crossing_level(self.wid, server)
         self.cluster.ledger.charge_transfer(self.wid, level, sample.nbytes, sample=True)
-        rv = self.cluster.rendezvous((self.args.shuffle_id, tag), len(srcs))
+        try:                     # stage-scoped when the tag names a level (the
+            n = self._stage_participants(self.topology.level_index(tag))
+        except KeyError:         # adaptive template's use); else every src
+            n = len(srcs)
+        rv = self.cluster.rendezvous((self.args.shuffle_id, tag), n)
 
         def fn(contrib: dict):
             samples = [contrib[w][0] for w in sorted(contrib)]

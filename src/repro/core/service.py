@@ -9,9 +9,9 @@ On top of the paper's flow the service runs the plan-compilation cache
 topology x stats signature); a miss executes the template fresh — full neighbor
 discovery, sampling, EFF/COST rendezvous — and compiles the instantiation into a
 :class:`CompiledPlan`; a hit replays the plan, skipping that control-plane work
-entirely, and (when the cluster has no injected faults/stragglers and the template
-is supported) executes on the batched data plane (:mod:`repro.core.vectorized`).
-Observed reduction ratios from cached runs feed drift invalidation.
+entirely, and (when valid) executes on the batched data plane
+(:mod:`repro.core.vectorized`).  Observed reduction ratios from cached runs feed
+drift invalidation.
 
 Execution modes (constructor default, overridable per call):
 
@@ -19,6 +19,17 @@ Execution modes (constructor default, overridable per call):
 * ``"threaded"``— cache, but always the thread-per-worker reference executor;
 * ``"fresh"``   — paper-faithful: re-instantiate every call, never consult the
   cache (plans are still compiled and stored, so switching back to ``auto`` hits).
+
+Resilience modes (constructor default, overridable per call) gate the
+:mod:`repro.core.resilience` pipeline:
+
+* ``"off"``     — seed behavior: a failure surfaces as ``ShuffleAborted``
+  (a ``TimeoutError``), nothing is diagnosed or retried;
+* ``"detect"``  — failures are classified (dead vs slow) and journaled; the
+  exception carries the :class:`FailureReport` as ``.report`` but still raises;
+* ``"recover"`` — full pipeline: speculation for stragglers, plan repair for
+  degraded topologies, and journal+checkpoint driven retries that restart only
+  the affected participant subset (§6), on either executor.
 """
 from __future__ import annotations
 
@@ -28,25 +39,39 @@ from typing import Sequence
 from .manager import ShuffleManager
 from .messages import Combiner, Msgs, PartFn, HASH_PART
 from .plancache import PlanCache, compile_plan, plan_key, stats_signature
-from .primitives import LocalCluster, ShuffleArgs
+from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs
+from .resilience import (CheckpointStore, FailureDetector, RecoveryCoordinator,
+                         SpeculationPolicy, try_repair)
 from .templates import ShuffleResult, run_shuffle
 from .topology import NetworkTopology
 from .vectorized import can_vectorize, run_shuffle_vectorized
 
 EXECUTION_MODES = ("auto", "threaded", "fresh")
+RESILIENCE_MODES = ("off", "detect", "recover")
 
 
 class TeShuService:
     def __init__(self, topology: NetworkTopology, *, journal_path: str | None = None,
                  replicas: Sequence[str] = (), plan_cache: PlanCache | None = None,
-                 execution: str = "auto"):
+                 execution: str = "auto", resilience: str = "off",
+                 max_retries: int = 2):
         if execution not in EXECUTION_MODES:
             raise ValueError(f"execution must be one of {EXECUTION_MODES}: {execution}")
+        if resilience not in RESILIENCE_MODES:
+            raise ValueError(
+                f"resilience must be one of {RESILIENCE_MODES}: {resilience}")
         self.topology = topology
         self.cluster = LocalCluster(topology)
         self.manager = ShuffleManager(journal_path=journal_path, replicas=replicas,
                                       plan_cache=plan_cache)
         self.execution = execution
+        self.resilience = resilience
+        self.max_retries = max_retries
+        self.checkpoints = CheckpointStore()
+        self.detector = FailureDetector(self.cluster, self.manager)
+        self.coordinator = RecoveryCoordinator(self.cluster, self.manager,
+                                               self.checkpoints)
+        self.speculation = SpeculationPolicy()
         self._ids = itertools.count(1)
 
     def next_shuffle_id(self) -> int:
@@ -69,10 +94,15 @@ class TeShuService:
         shuffle_id: int | None = None,
         seed: int = 0,
         execution: str | None = None,
+        resilience: str | None = None,
     ) -> ShuffleResult:
         execution = self.execution if execution is None else execution
         if execution not in EXECUTION_MODES:
             raise ValueError(f"execution must be one of {EXECUTION_MODES}: {execution}")
+        resilience = self.resilience if resilience is None else resilience
+        if resilience not in RESILIENCE_MODES:
+            raise ValueError(
+                f"resilience must be one of {RESILIENCE_MODES}: {resilience}")
         args = ShuffleArgs(
             template_id=template_id,
             shuffle_id=self.next_shuffle_id() if shuffle_id is None else shuffle_id,
@@ -82,24 +112,123 @@ class TeShuService:
         key = plan_key(template_id, self.topology, args.srcs, args.dsts,
                        stats_signature(bufs, part_fn, comb_fn, rate))
         plan = self.plan_cache.get(key) if execution != "fresh" else None
+        repaired = False
+        if plan is None and execution != "fresh" and resilience != "off":
+            # no plan for this exact scenario — maybe a healthy-topology (or
+            # full-worker-set) relative exists that repair can adapt
+            plan = try_repair(self.plan_cache, key, self.topology)
+            repaired = plan is not None
+        args.plan = plan
 
-        if plan is None:
+        if resilience == "off":
+            return self._run_plain(args, bufs, key, execution)
+        return self._run_resilient(args, bufs, key, execution, resilience,
+                                   repaired)
+
+    # ---- execution paths ------------------------------------------------------
+    def _execute(self, args: ShuffleArgs, bufs: dict[int, Msgs],
+                 execution: str) -> ShuffleResult:
+        if args.plan is not None and execution == "auto" \
+                and can_vectorize(self.cluster, args):
+            return run_shuffle_vectorized(self.cluster, args, bufs,
+                                          manager=self.manager)
+        return run_shuffle(self.cluster, args, bufs, manager=self.manager)
+
+    def _run_plain(self, args: ShuffleArgs, bufs: dict[int, Msgs], key: tuple,
+                   execution: str) -> ShuffleResult:
+        if args.plan is None:
             res = run_shuffle(self.cluster, args, bufs, manager=self.manager)
             self.plan_cache.put(key, compile_plan(
-                key, template_id, self.topology, args.srcs, args.dsts,
+                key, args.template_id, self.topology, args.srcs, args.dsts,
                 res.decisions, res.observed))
             return res
-
-        args.plan = plan
-        if execution == "auto" and can_vectorize(self.cluster, args):
-            res = run_shuffle_vectorized(self.cluster, args, bufs,
-                                         manager=self.manager)
-        else:
-            res = run_shuffle(self.cluster, args, bufs, manager=self.manager)
+        res = self._execute(args, bufs, execution)
         # Drift check: measured reductions from this cached run vs the plan's
         # baseline; a drifted entry is dropped so the next call re-instantiates.
         self.plan_cache.observe(key, res.observed)
         return res
+
+    def _run_resilient(self, args: ShuffleArgs, bufs: dict[int, Msgs], key: tuple,
+                       execution: str, resilience: str,
+                       repaired: bool) -> ShuffleResult:
+        sid = args.shuffle_id
+        participants = sorted(set(args.srcs) | set(args.dsts))
+        recover = resilience == "recover"
+        attempts = (self.max_retries + 1) if recover else 1
+        recovery_info: dict = {}
+        rc = self.coordinator.initial_context(
+            sid, args.template_id,
+            speculated=self._speculate(sid, participants, attempt=0,
+                                       enabled=recover))
+        try:
+            for attempt in range(attempts):
+                args.recovery = rc
+                try:
+                    res = self._execute(args, bufs, execution)
+                    missing = set(args.dsts) - set(res.bufs)
+                    if missing:
+                        # a dst died without blocking anyone (e.g. pure
+                        # receiver): its output is simply absent — still a
+                        # failure
+                        self.cluster.end_shuffle(sid, aborted=True)
+                        raise ShuffleAborted(
+                            f"dsts {sorted(missing)} produced no output",
+                            shuffle_id=sid)
+                except ShuffleAborted as e:
+                    report = self.detector.classify(sid, participants)
+                    e.report = report
+                    self.manager.record_failure(sid, report.to_info(),
+                                                attempt=attempt)
+                    if not recover or attempt == attempts - 1:
+                        raise
+                    rc = self.coordinator.prepare_retry(
+                        sid, args.template_id, args.srcs, self.topology,
+                        report, attempt + 1,
+                        speculated=self._speculate(sid, participants,
+                                                   attempt=attempt + 1,
+                                                   enabled=True))
+                    recovery_info = {
+                        "restarted": sorted(report.dead),
+                        "resume_stages": dict(rc.resume_stages),
+                    }
+                    continue
+                # ---- success ----------------------------------------------------
+                if args.plan is None:
+                    if attempt == 0:
+                        # a recovered fresh run has per-worker partial decision
+                        # lists — don't freeze those; the next call
+                        # re-instantiates
+                        self.plan_cache.put(key, compile_plan(
+                            key, args.template_id, self.topology, args.srcs,
+                            args.dsts, res.decisions, res.observed))
+                else:
+                    self.plan_cache.observe(key, res.observed)
+                res.attempts = attempt + 1
+                res.repaired = repaired
+                if rc.speculated:
+                    recovery_info["speculated"] = sorted(rc.speculated)
+                if recovery_info:
+                    res.recovery = recovery_info
+                return res
+            raise AssertionError("unreachable: retry loop exits via return/raise")
+        finally:
+            # every exit — success, diagnosed abort, or an unexpected error
+            # (rendezvous timeout, user part_fn/comb_fn raising) — drops the
+            # shuffle's checkpoints, so a long-lived service never accretes them
+            self.checkpoints.clear(sid)
+
+    def _speculate(self, shuffle_id: int, participants, attempt: int,
+                   enabled: bool) -> frozenset:
+        """Backup-task planning; only ``"recover"`` may alter execution —
+        ``"detect"`` must observe stragglers, not paper over them."""
+        if not enabled or not self.cluster.worker_delays:
+            return frozenset()
+        tasks = self.speculation.plan(self.cluster, participants)
+        if not tasks:
+            return frozenset()
+        self.manager.record_speculation(
+            shuffle_id, {"tasks": [t.to_info() for t in tasks]}, attempt=attempt)
+        return frozenset(t.wid for t in tasks)
 
     # ---- ops hooks -----------------------------------------------------------
     def stats(self) -> dict:
@@ -117,5 +246,19 @@ class TeShuService:
     def heal_worker(self, wid: int) -> None:
         self.cluster.failed_workers.discard(wid)
 
+    def restart_worker(self, wid: int) -> None:
+        self.cluster.restart_worker(wid)
+
     def delay_worker(self, wid: int, seconds: float) -> None:
         self.cluster.worker_delays[wid] = seconds
+
+    def inject_fault(self, wid: int, after_stage: int = -1) -> None:
+        """Kill ``wid`` mid-shuffle once it completes ``after_stage`` stages
+        (see :class:`repro.core.primitives.FaultInjection`)."""
+        self.cluster.inject_fault(wid, after_stage)
+
+    def clear_fault(self, wid: int) -> None:
+        self.cluster.clear_fault(wid)
+
+    def checkpoint_stats(self) -> dict:
+        return self.checkpoints.stats()

@@ -19,7 +19,7 @@ from typing import Callable
 
 from .adaptive import compute_eff_cost
 from .messages import Msgs
-from .primitives import LocalCluster, ShuffleArgs, WorkerContext
+from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs, WorkerContext
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,6 +160,10 @@ def _network_aware_sender(ctx: WorkerContext, bufs: Msgs) -> None:
     a = ctx.args
     bufs = ctx.COMB(bufs)                                          # local combine
     for level in ctx.local_level_names():                          # server, rack, ...
+        restored = ctx.RESUME(level)                               # recovery replay?
+        if restored is not None:
+            bufs = restored
+            continue
         nbrs, ec = ctx.PLAN_STAGE(level)                           # compiled-plan hit?
         if ec is None:                                             # miss: instantiate
             nbrs = ctx.FIND_NBRS(level, a.srcs)                    # $FIND_NBRS_PER_*
@@ -182,6 +186,7 @@ def _network_aware_sender(ctx: WorkerContext, bufs: Msgs) -> None:
             pre = sum(g.nbytes for g in got)
             bufs = ctx.COMB(got)
             ctx.OBSERVE(level, pre, bufs.nbytes)                   # drift signal
+        bufs = ctx.CKPT(level, bufs)                               # stage complete
     parts = ctx.PART(bufs, a.dsts)                                 # global shuffle
     for d in a.dsts:
         ctx.SEND(d, parts[d])
@@ -228,6 +233,9 @@ class ShuffleResult:
     # ^ level -> measured reduction ratio (drift input for the plan cache)
     cached: bool = False                  # executed from a CompiledPlan?
     vectorized: bool = False              # executed on the batched data plane?
+    repaired: bool = False                # plan came from resilience.repair?
+    attempts: int = 1                     # execution attempts (>1 => recovered)
+    recovery: dict | None = None          # restart/resume/speculation details
 
 
 def aggregate_observed(per_worker: list[list[tuple]]) -> dict[str, float]:
@@ -257,26 +265,40 @@ def run_shuffle(
     template = (manager.get_template(args.template_id, wid=None) if manager
                 else TEMPLATES[args.template_id])
     participants = sorted(set(args.srcs) | set(args.dsts))
+    rc = args.recovery
+    attempt = rc.attempt if rc is not None else 0
+    speculated = rc.speculated if rc is not None else frozenset()
     before = cluster.ledger.snapshot()
 
     def worker_fn(wid: int):
         if manager is not None:
-            manager.record_start(wid, args.shuffle_id, args.template_id)
+            manager.record_start(wid, args.shuffle_id, args.template_id,
+                                 attempt=attempt)
         delay = cluster.worker_delays.get(wid, 0.0)
-        if delay:
+        if delay and wid not in speculated:
+            # a speculated straggler's work races a backup copy on a healthy
+            # peer; the backup wins, so the injected delay never materializes
             time.sleep(delay)
         ctx = WorkerContext(cluster, wid, args)
         out = None
-        if wid in args.srcs:
-            template.sender(ctx, bufs.get(wid, Msgs.empty()))
-        if wid in args.dsts:
-            out = template.receiver(ctx)
+        try:
+            if wid in args.srcs:
+                template.sender(ctx, bufs.get(wid, Msgs.empty()))
+            if wid in args.dsts:
+                out = template.receiver(ctx)
+        except ShuffleAborted:
+            # exited without delivering: peers blocked on this worker must not
+            # wait out their RPC timeout for data that will never come
+            cluster.mark_unreachable(args.shuffle_id, wid)
+            raise
         if manager is not None:
-            manager.record_end(wid, args.shuffle_id, args.template_id)
+            manager.record_end(wid, args.shuffle_id, args.template_id,
+                               attempt=attempt)
         return (out, ctx.decisions, ctx.observed)
 
     try:
-        raw = cluster.run_workers(participants, worker_fn)
+        raw = cluster.run_workers(participants, worker_fn,
+                                  abort_event=cluster.abort_event(args.shuffle_id))
     except BaseException:
         cluster.end_shuffle(args.shuffle_id, aborted=True)
         raise
@@ -285,7 +307,12 @@ def run_shuffle(
     after = cluster.ledger.snapshot()
     stats = cluster.ledger.delta(before, after)
     out_bufs = {w: r[0] for w, r in raw.items() if r is not None and r[0] is not None}
-    decisions = next((r[1] for r in raw.values() if r is not None and r[1]), [])
+    if args.plan is not None:
+        # replayed runs report the plan's frozen verdicts: on a recovery attempt
+        # no single worker re-walks every level, so per-worker lists are partial
+        decisions = list(args.plan.decisions)
+    else:
+        decisions = next((r[1] for r in raw.values() if r is not None and r[1]), [])
     observed = aggregate_observed([r[2] for r in raw.values() if r is not None])
     return ShuffleResult(bufs=out_bufs, decisions=decisions, stats=stats,
                          observed=observed, cached=args.plan is not None)

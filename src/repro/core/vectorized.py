@@ -26,13 +26,23 @@ Supported: vanilla_push, vanilla_pull, coordinated, network_aware.  Bruck and
 two-level interleave SEND/RECV in log-step rounds whose ordering is inherently
 sequential per worker; they fall back to the threaded executor (still skipping
 re-instantiation via the plan).
+
+Fault awareness: when the service runs with resilience enabled
+(``args.recovery`` carries a RecoveryContext) this executor no longer declines
+fault scenarios.  It checkpoints every worker's combined intermediate after
+every stage, honors injected faults at exactly the stage boundary where the
+threaded executor's worker would die (raising ``ShuffleAborted`` for the
+recovery coordinator), and on a retry resumes each worker from its
+group-consistent checkpoint — re-executing only the stages the failure
+invalidated.  Wall-clock straggler delays remain a threaded-executor concern
+(they are real sleeps), except when speculation neutralizes them.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from .messages import Combiner, Msgs, partition
-from .primitives import LocalCluster, ShuffleArgs
+from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs
 from .templates import ShuffleResult, aggregate_observed
 
 VECTORIZABLE = frozenset(
@@ -75,12 +85,19 @@ def combine_msgs(combiner: Combiner, msgs: Msgs) -> Msgs:
 
 
 def can_vectorize(cluster: LocalCluster, args: ShuffleArgs) -> bool:
-    """Batched execution is valid when a plan exists, the template is supported,
-    and no fault/straggler injection needs the thread-level simulation."""
-    return (args.plan is not None
-            and args.template_id in VECTORIZABLE
-            and not cluster.failed_workers
-            and not cluster.worker_delays)
+    """Batched execution is valid when a plan exists and the template is
+    supported.  Without a RecoveryContext, any fault/straggler injection needs
+    the thread-level simulation; with one, this executor handles dead workers
+    and injected faults itself, and only wall-clock delays that speculation
+    did not neutralize still require real threads to sleep in."""
+    if args.plan is None or args.template_id not in VECTORIZABLE:
+        return False
+    if args.recovery is not None:
+        pending_delays = set(cluster.worker_delays) - set(args.recovery.speculated)
+        return not pending_delays
+    return (not cluster.failed_workers
+            and not cluster.worker_delays
+            and not cluster.fault_injections)
 
 
 def _comb(args: ShuffleArgs, ledger, wid: int, batches) -> Msgs:
@@ -106,43 +123,93 @@ def run_shuffle_vectorized(
         raise ValueError(f"template {args.template_id!r} is not vectorizable")
     topo = cluster.topology
     ledger = cluster.ledger
+    sid = args.shuffle_id
+    rc = args.recovery
+    attempt = rc.attempt if rc is not None else 0
+    resume = dict(rc.resume_stages) if rc is not None else {}
     srcs, dsts = list(args.srcs), list(args.dsts)
     participants = sorted(set(srcs) | set(dsts))
     if manager is not None:
         manager.get_template(args.template_id, wid=None)
         for w in participants:
-            manager.record_start(w, args.shuffle_id, args.template_id)
+            manager.record_start(w, sid, args.template_id, attempt=attempt)
     before = ledger.snapshot()
     observed: list[tuple] = []
 
+    def _first_casualty(stage_idx: int, workers) -> tuple[int, str] | None:
+        """A worker about to execute this stage that is dead or whose injected
+        fault has matured — the same death point as the threaded executor's
+        first-primitive-of-the-stage check."""
+        for w in workers:
+            if resume.get(w, -1) >= stage_idx:
+                continue                      # resuming past it: nothing to run
+            if w in cluster.failed_workers:
+                return w, "is failed"
+            fi = cluster.fault_injections.get(w)
+            if fi is not None and stage_idx > fi.after_stage:
+                return w, f"killed by fault injection (after stage {fi.after_stage})"
+        return None
+
+    def _abort(w: int, why: str, stage_name: str) -> None:
+        cluster.failed_workers.add(w)
+        cluster.abort_event(sid).set()
+        cluster.end_shuffle(sid, aborted=True)
+        raise ShuffleAborted(
+            f"worker {w} {why} (vectorized, stage {stage_name!r})",
+            shuffle_id=sid)
+
     # ---- sender side -------------------------------------------------------
     if args.template_id == "network_aware":
-        # local combine, then each beneficial hierarchical stage from the plan
-        state = {w: _comb(args, ledger, w, bufs.get(w, Msgs.empty())) for w in srcs}
-        for ld in plan.levels:
-            if not ld.eff_cost.beneficial:
-                continue
-            ledger.advance_epoch()        # the stage barrier (PLAN_STAGE's epoch)
-            staged = {}
+        # local combine, then each hierarchical stage from the plan; on a
+        # recovery attempt, workers past a stage replay its checkpoint instead
+        state = {w: (None if resume.get(w, -1) >= 0
+                     else _comb(args, ledger, w, bufs.get(w, Msgs.empty())))
+                 for w in srcs}
+        for li, ld in enumerate(plan.levels):
+            bad = _first_casualty(li, srcs)
+            if bad is not None:
+                _abort(*bad, ld.level)
             for w in srcs:
-                nbrs = list(ld.nbrs.get(w, (w,)))
-                if len(nbrs) > 1:
-                    staged[w] = (nbrs, partition(state[w], nbrs, args.part_fn))
-            for w, (nbrs, parts) in staged.items():
-                peers = [n for n in nbrs if n != w]
-                ledger.charge_transfers(
-                    w,
-                    np.fromiter((topo.crossing_level(w, n) for n in peers),
-                                dtype=np.int64, count=len(peers)),
-                    np.fromiter((parts[n].nbytes for n in peers),
-                                dtype=np.int64, count=len(peers)))
-            for w, (nbrs, parts) in staged.items():
-                got = [parts[w]] + [staged[n][1][w] for n in nbrs if n != w]
-                pre = sum(g.nbytes for g in got)
-                state[w] = _comb(args, ledger, w, got)
-                observed.append((ld.level, pre, state[w].nbytes))
+                if resume.get(w, -1) == li:
+                    state[w] = rc.store.load(sid, w, li)
+            execute = [w for w in srcs if resume.get(w, -1) < li]
+            if ld.eff_cost.beneficial and execute:
+                ledger.advance_epoch()    # the stage barrier (PLAN_STAGE's epoch)
+                staged = {}
+                for w in execute:
+                    nbrs = list(ld.nbrs.get(w, (w,)))
+                    if len(nbrs) > 1:
+                        staged[w] = (nbrs, partition(state[w], nbrs, args.part_fn))
+                for w, (nbrs, parts) in staged.items():
+                    peers = [n for n in nbrs if n != w]
+                    ledger.charge_transfers(
+                        w,
+                        np.fromiter((topo.crossing_level(w, n) for n in peers),
+                                    dtype=np.int64, count=len(peers)),
+                        np.fromiter((parts[n].nbytes for n in peers),
+                                    dtype=np.int64, count=len(peers)))
+                for w, (nbrs, parts) in staged.items():
+                    got = [parts[w]] + [staged[n][1][w] for n in nbrs if n != w]
+                    pre = sum(g.nbytes for g in got)
+                    state[w] = _comb(args, ledger, w, got)
+                    observed.append((ld.level, pre, state[w].nbytes))
+            if rc is not None:
+                for w in execute:
+                    rc.store.save(sid, w, li, ld.level, state[w])
+                    if rc.record_stage is not None:
+                        rc.record_stage(w, ld.level)
     else:
         state = {w: bufs.get(w, Msgs.empty()) for w in srcs}
+
+    # faults that mature at (or before) the global exchange, incl. dead
+    # receivers — static templates reach here with zero completed stages
+    bad = _first_casualty(len(plan.levels), srcs)
+    if bad is None:
+        dead_dst = next((d for d in dsts if d in cluster.failed_workers), None)
+        if dead_dst is not None:
+            bad = (dead_dst, "is failed")
+    if bad is not None:
+        _abort(*bad, "global")
 
     # ---- global stage ------------------------------------------------------
     parts_by_src = {w: partition(state[w], dsts, args.part_fn) for w in srcs}
@@ -180,10 +247,12 @@ def run_shuffle_vectorized(
         out[d] = _comb(args, ledger, d, got)
 
     ledger.advance_epoch()                # shuffle completion is a barrier
+    if rc is not None:
+        cluster.end_shuffle(sid)          # symmetric with the threaded driver
     after = ledger.snapshot()
     if manager is not None:
         for w in participants:
-            manager.record_end(w, args.shuffle_id, args.template_id)
+            manager.record_end(w, sid, args.template_id, attempt=attempt)
     return ShuffleResult(
         bufs=out,
         decisions=list(plan.decisions),

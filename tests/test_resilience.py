@@ -1,0 +1,455 @@
+"""Resilience subsystem: detection, plan repair, recovery, speculation.
+
+The contract under test (ISSUE 2 acceptance): a shuffle with one worker killed
+mid-stage completes with *byte-identical* output to the no-failure run,
+re-executing only the affected participants (asserted via journal records), on
+both the threaded and vectorized executors; repeated identical failure
+scenarios hit the repaired-plan cache.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (SUM, CheckpointStore, FailureDetector, Msgs, PlanCache,
+                        ShuffleAborted, ShuffleManager, SpeculationPolicy,
+                        TeShuService, consistent_resume_stages, datacenter,
+                        degrade_links, eff_cost_from_ratio, plan_key,
+                        repair_plan, stats_signature)
+from repro.core.messages import HASH_PART
+
+WORKERS = list(range(8))
+
+
+def _topo(**kw):
+    """8 workers, oversubscribed enough that server AND rack combining win."""
+    kw.setdefault("oversubscription", 10.0)
+    kw.setdefault("combine_bytes_per_s", 64e9)
+    return datacenter(2, 2, 2, **kw)
+
+
+def _dup_heavy(nw, n=4000, blocks=100, key_space=4096, seed=3):
+    """Heavy cross-worker key duplication: local combining removes most bytes."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, key_space, blocks)
+    base[0] = key_space - 1
+    out = {}
+    for w in range(nw):
+        keys = np.repeat(rng.permutation(base), n // blocks)
+        out[w] = Msgs(keys, rng.random((keys.size, 1)))
+    return out
+
+
+def _copy(bufs):
+    return {w: m.copy() for w, m in bufs.items()}
+
+
+def _sorted_eq(a: Msgs, b: Msgs):
+    oa, ob = np.argsort(a.keys), np.argsort(b.keys)
+    np.testing.assert_array_equal(a.keys[oa], b.keys[ob])
+    np.testing.assert_array_equal(a.vals[oa], b.vals[ob])   # bit-identical
+
+
+def _shuffle(svc, bufs, template="network_aware", **kw):
+    kw.setdefault("comb_fn", SUM)
+    kw.setdefault("rate", 0.05)
+    return svc.shuffle(template, _copy(bufs), WORKERS, WORKERS, **kw)
+
+
+# ---------------------------------------------------------------------------
+# detector
+# ---------------------------------------------------------------------------
+
+def test_detector_classifies_dead_vs_slow():
+    svc = TeShuService(_topo())
+    det = FailureDetector(svc.cluster, svc.manager)
+    svc.fail_worker(3)
+    svc.delay_worker(5, 0.4)
+    rep = det.classify(1, WORKERS)
+    assert rep.dead == (3,)
+    assert rep.slow == ((5, 0.4),)
+    assert rep.kind == "mixed"
+    assert det.probe(3) == "dead" and det.probe(5) == "slow"
+    assert det.probe(0) == "healthy"
+    assert det.healthy(WORKERS) == [0, 1, 2, 4, 6, 7]
+    info = rep.to_info()
+    assert info["dead"] == [3] and info["kind"] == "mixed"
+
+
+def test_detector_dead_wins_over_slow():
+    svc = TeShuService(_topo())
+    det = FailureDetector(svc.cluster, svc.manager)
+    svc.delay_worker(3, 0.4)
+    svc.fail_worker(3)
+    rep = det.classify(1, WORKERS)
+    assert rep.dead == (3,) and rep.slow == ()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store + group-consistent resume
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_store_roundtrip_and_isolation():
+    store = CheckpointStore()
+    m = Msgs(np.arange(4), np.ones((4, 1)))
+    store.save(7, 2, 0, "server", m)
+    m.vals[:] = 9.0                       # mutate after save: store must not see it
+    got = store.load(7, 2, 0)
+    np.testing.assert_array_equal(got.vals, np.ones((4, 1)))
+    got.vals[:] = 5.0                     # mutate the loaded copy: store keeps its own
+    np.testing.assert_array_equal(store.load(7, 2, 0).vals, np.ones((4, 1)))
+    assert store.last_stage(7, 2) == 0
+    assert store.stages(7) == {2: 0}
+    assert store.stats()["checkpoints"] == 1
+    store.clear(7)
+    assert store.load(7, 2, 0) is None and store.stats()["checkpoints"] == 0
+
+
+def test_consistent_resume_clamps_to_group():
+    topo = _topo()                        # server groups of 2, rack groups of 4
+    # workers 0-3 only reached server (0); 4-7 completed rack (1)
+    raw = {0: 0, 1: 0, 2: 0, 3: 0, 4: 1, 5: 1, 6: 1, 7: 1}
+    rs = consistent_resume_stages(raw, WORKERS, topo)
+    assert rs == {0: 0, 1: 0, 2: 0, 3: 0, 4: 1, 5: 1, 6: 1, 7: 1}
+    # worker 3 has no checkpoint -> its server group {2,3} can't resume at all,
+    # and the whole rack group {0..3} must redo the rack stage
+    raw = {0: 1, 1: 1, 2: 0, 4: 1, 5: 1, 6: 1, 7: 1}
+    rs = consistent_resume_stages(raw, WORKERS, topo)
+    assert rs == {0: 0, 1: 0, 4: 1, 5: 1, 6: 1, 7: 1}
+    assert 2 not in rs and 3 not in rs
+
+
+# ---------------------------------------------------------------------------
+# mid-stage worker death -> participant-scoped recovery (the acceptance test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execution", ["threaded", "auto"])
+def test_mid_stage_death_recovers_byte_identical(execution):
+    svc = TeShuService(_topo(), execution=execution, resilience="recover")
+    bufs = _dup_heavy(8)
+    fresh = _shuffle(svc, bufs)           # instantiates + compiles the plan
+    assert dict(fresh.decisions)["rack"].beneficial, "rack stage must matter"
+    clean = _shuffle(svc, bufs)           # cached no-failure reference
+    assert clean.attempts == 1
+    if execution == "auto":
+        assert clean.vectorized
+
+    svc.inject_fault(3, after_stage=0)    # dies entering the rack stage
+    rec = _shuffle(svc, bufs)             # shuffle_id == 3
+    assert rec.attempts == 2 and rec.cached
+    assert rec.recovery["restarted"] == [3]
+    assert set(rec.bufs) == set(clean.bufs)
+    for w in clean.bufs:
+        _sorted_eq(clean.bufs[w], rec.bufs[w])
+
+    # journal: the server stage was NEVER re-executed; the rack stage was
+    # re-executed by the affected subset only (threaded workers outside the
+    # dead worker's rack group resume from checkpoints; the lockstep
+    # vectorized executor had not started the rack stage anywhere)
+    a1 = svc.manager.stage_records(3, attempt=1)
+    assert all(r.stage == "rack" for r in a1)
+    expected = {0, 1, 2, 3} if execution == "threaded" else set(WORKERS)
+    assert {r.wid for r in a1} == expected
+    recs = svc.manager.recovery_records(3)
+    assert len(recs) == 1 and recs[0].info["restarted"] == [3]
+    assert recs[0].info["restart_set"] == sorted(expected)
+    # the failed attempt was diagnosed and journaled
+    fails = svc.manager.failure_records(3)
+    assert len(fails) == 1 and fails[0].info["dead"] == [3]
+    # recovered shuffle is complete in the manager's progress view
+    assert svc.manager.progress(3)["pending"] == []
+    # fault state fully healed: next shuffle runs clean on the fast path
+    again = _shuffle(svc, bufs)
+    assert again.attempts == 1
+    for w in clean.bufs:
+        _sorted_eq(clean.bufs[w], again.bufs[w])
+
+
+@pytest.mark.parametrize("execution", ["threaded", "auto"])
+@pytest.mark.parametrize("template", ["vanilla_push", "vanilla_pull"])
+def test_static_template_death_recovers(execution, template):
+    svc = TeShuService(_topo(), execution=execution, resilience="recover")
+    bufs = _dup_heavy(8, n=800)
+    _shuffle(svc, bufs, template)
+    clean = _shuffle(svc, bufs, template)
+    svc.inject_fault(5)                   # after_stage=-1: dies at first primitive
+    rec = _shuffle(svc, bufs, template)
+    assert rec.attempts == 2 and rec.recovery["restarted"] == [5]
+    for w in clean.bufs:
+        _sorted_eq(clean.bufs[w], rec.bufs[w])
+
+
+def test_pre_failed_worker_restarted_by_recovery():
+    svc = TeShuService(_topo(), resilience="recover")
+    bufs = _dup_heavy(8, n=800)
+    svc.fail_worker(2)                    # dead before the shuffle even starts
+    res = _shuffle(svc, bufs)
+    assert res.attempts == 2
+    assert res.recovery["restarted"] == [2]
+    assert not svc.cluster.failed_workers
+    assert len(res.bufs) == 8
+
+
+def test_repeated_identical_fault_recovers_each_time():
+    svc = TeShuService(_topo(), execution="threaded", resilience="recover")
+    bufs = _dup_heavy(8)
+    _shuffle(svc, bufs)
+    clean = _shuffle(svc, bufs)
+    for _ in range(2):                    # same scenario, injected twice
+        svc.inject_fault(3, after_stage=0)
+        rec = _shuffle(svc, bufs)
+        assert rec.attempts == 2
+        for w in clean.bufs:
+            _sorted_eq(clean.bufs[w], rec.bufs[w])
+    # plan survived both recoveries: no drift invalidation, no re-instantiation
+    st = svc.cache_stats()
+    assert st["invalidations"] == 0 and st["misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# resilience knob: off / detect
+# ---------------------------------------------------------------------------
+
+def test_resilience_off_raises_fast():
+    svc = TeShuService(_topo(), execution="threaded")   # resilience="off"
+    bufs = _dup_heavy(8, n=800)
+    _shuffle(svc, bufs)
+    svc.inject_fault(3, after_stage=0)
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError):     # ShuffleAborted is a TimeoutError
+        _shuffle(svc, bufs)
+    assert time.monotonic() - t0 < 30.0   # fast abort, not rpc_timeout burn
+    assert not svc.manager.failure_records(2)           # nothing diagnosed
+
+
+def test_resilience_detect_diagnoses_but_does_not_retry():
+    svc = TeShuService(_topo(), execution="threaded", resilience="detect")
+    bufs = _dup_heavy(8, n=800)
+    _shuffle(svc, bufs)
+    svc.inject_fault(3, after_stage=0)
+    with pytest.raises(ShuffleAborted) as ei:
+        _shuffle(svc, bufs)
+    assert ei.value.report is not None and ei.value.report.dead == (3,)
+    fails = svc.manager.failure_records(2)
+    assert len(fails) == 1 and fails[0].info["dead"] == [3]
+    assert not svc.manager.recovery_records(2)          # no retry attempted
+
+
+def test_fault_injection_not_silently_ignored_by_fast_path():
+    """With resilience off, an injected fault must force the threaded executor
+    (and fail), never be skipped by the vectorized replay."""
+    svc = TeShuService(_topo())           # execution="auto", resilience="off"
+    bufs = _dup_heavy(8, n=800)
+    _shuffle(svc, bufs)
+    svc.inject_fault(3, after_stage=0)
+    with pytest.raises(TimeoutError):
+        _shuffle(svc, bufs)
+
+
+# ---------------------------------------------------------------------------
+# plan repair: degraded topologies, repeated scenarios hit the cache
+# ---------------------------------------------------------------------------
+
+def test_repair_reinstantiates_only_affected_levels():
+    base = _topo()
+    cache = PlanCache()
+    svc = TeShuService(base, plan_cache=cache, resilience="recover")
+    bufs = _dup_heavy(8)
+    _shuffle(svc, bufs)
+    (old_key, plan), = cache.scan()
+    # degrading the *server* boundary leaves the rack verdict untouched
+    deg = degrade_links(base, "server", 0.5)
+    key = plan_key("network_aware", deg, tuple(WORKERS), tuple(WORKERS),
+                   stats_signature(bufs, HASH_PART, SUM, 0.05))
+    repaired, levels = repair_plan(plan, key, deg)
+    assert levels == ["server"]
+    assert repaired.level("rack").eff_cost == plan.level("rack").eff_cost
+    assert repaired.level("server").nbrs == plan.level("server").nbrs
+    # the repaired verdict is exactly the formula on the degraded topology
+    ec = plan.level("server").eff_cost
+    want = eff_cost_from_ratio(deg, "server", ec.reduction_ratio,
+                               ec.group_bytes, deg.level("server").group_size)
+    assert repaired.level("server").eff_cost == want
+    # degrading the *global* boundary affects every level's EFF term
+    deg2 = degrade_links(base, "global", 0.5)
+    key2 = plan_key("network_aware", deg2, tuple(WORKERS), tuple(WORKERS),
+                    stats_signature(bufs, HASH_PART, SUM, 0.05))
+    _, levels2 = repair_plan(plan, key2, deg2)
+    assert levels2 == ["server", "rack"]
+
+
+def test_repeated_failure_scenario_hits_repaired_plan_cache():
+    base = _topo()
+    cache = PlanCache()
+    bufs = _dup_heavy(8)
+    svc = TeShuService(base, plan_cache=cache, resilience="recover")
+    clean = _shuffle(svc, bufs)           # healthy-topology plan compiled
+    assert clean.stats["sample_bytes"] > 0
+
+    deg = degrade_links(base, "global", 0.5)        # the §5.2 failure scenario
+    svc_deg = TeShuService(deg, plan_cache=cache, resilience="recover")
+    first = _shuffle(svc_deg, bufs)
+    assert first.repaired and first.cached
+    assert first.stats["sample_bytes"] == 0         # repair never re-samples
+    assert cache.stats()["repairs"] == 1
+    # ... the SAME degraded scenario again: plain cache hit, no second repair
+    again = _shuffle(svc_deg, bufs)
+    assert again.cached and not again.repaired
+    st = cache.stats()
+    assert st["repairs"] == 1 and st["hits"] == 1
+    # repaired replay moves the same messages as a fresh run on the degraded
+    # topology (verdicts may legitimately differ; the data may not)
+    svc_ref = TeShuService(deg)
+    ref = _shuffle(svc_ref, bufs)
+    for w in ref.bufs:
+        a, b = SUM(ref.bufs[w]), SUM(again.bufs[w])
+        _sorted_eq(a, b)
+
+
+def test_repair_off_without_resilience():
+    base = _topo()
+    cache = PlanCache()
+    bufs = _dup_heavy(8)
+    _shuffle(TeShuService(base, plan_cache=cache), bufs)
+    svc_deg = TeShuService(degrade_links(base, "global", 0.5), plan_cache=cache)
+    res = _shuffle(svc_deg, bufs)         # resilience="off": full re-instantiation
+    assert not res.cached and res.stats["sample_bytes"] > 0
+    assert cache.stats()["repairs"] == 0
+
+
+def test_repair_excises_lost_workers():
+    base = _topo()
+    cache = PlanCache()
+    bufs = _dup_heavy(8)
+    svc = TeShuService(base, plan_cache=cache, resilience="recover")
+    _shuffle(svc, bufs)                   # full 8-worker plan
+    survivors = [w for w in WORKERS if w != 3]
+    sub = {w: bufs[w].copy() for w in survivors}
+    res = svc.shuffle("network_aware", sub, survivors, survivors,
+                      comb_fn=SUM, rate=0.05)
+    assert res.repaired and res.cached
+    plan_key_new = cache.scan()[-1][0]
+    plan = cache.scan()[-1][1]
+    assert plan_key_new[2] == tuple(survivors)
+    assert all(3 not in members for ld in plan.levels
+               for members in ld.nbrs.values())
+    assert 3 not in res.bufs and len(res.bufs) == 7
+
+
+# ---------------------------------------------------------------------------
+# speculation
+# ---------------------------------------------------------------------------
+
+def test_speculation_policy_picks_healthy_backups():
+    svc = TeShuService(_topo())
+    svc.delay_worker(1, 0.5)
+    svc.delay_worker(6, 0.2)
+    svc.fail_worker(0)
+    tasks = SpeculationPolicy().plan(svc.cluster, WORKERS)
+    assert [t.wid for t in tasks] == [1, 6]          # worst straggler first
+    for t in tasks:
+        assert t.backup not in (0, 1, 6)             # healthy peers only
+    assert SpeculationPolicy(min_delay_s=1.0).plan(svc.cluster, WORKERS) == ()
+
+
+def test_speculation_beats_injected_delays():
+    bufs = _dup_heavy(8, n=800)
+    delay = 0.6
+
+    svc = TeShuService(_topo(), execution="threaded", resilience="recover")
+    _shuffle(svc, bufs)
+    svc.delay_worker(2, delay)
+    t0 = time.monotonic()
+    spec = _shuffle(svc, bufs)
+    spec_dt = time.monotonic() - t0
+    assert spec.attempts == 1 and spec.recovery["speculated"] == [2]
+    assert spec_dt < delay                           # backup dodged the sleep
+    assert svc.manager.records(2, kind="speculation")
+
+    plain = TeShuService(_topo(), execution="threaded")
+    _shuffle(plain, bufs)
+    plain.delay_worker(2, delay)
+    t0 = time.monotonic()
+    base = _shuffle(plain, bufs)
+    assert time.monotonic() - t0 >= delay            # straggler gates the run
+    for w in base.bufs:                              # same answer either way
+        _sorted_eq(base.bufs[w], spec.bufs[w])
+
+
+def test_detect_mode_observes_stragglers_without_speculating():
+    """'detect' diagnoses; it must never alter execution (no backup copies)."""
+    svc = TeShuService(_topo(), execution="threaded", resilience="detect")
+    bufs = _dup_heavy(8, n=800)
+    _shuffle(svc, bufs)
+    svc.delay_worker(2, 0.3)
+    t0 = time.monotonic()
+    res = _shuffle(svc, bufs)
+    assert time.monotonic() - t0 >= 0.3       # the straggler really gated it
+    assert res.recovery is None
+    assert not svc.manager.records(2, kind="speculation")
+
+
+def test_checkpoints_cleared_on_unexpected_failure():
+    """Non-ShuffleAborted failures (user fn raising, hard timeouts) must not
+    leak checkpoints in a long-lived service."""
+    svc = TeShuService(_topo(), resilience="recover")
+    sid_seen = []
+
+    def boom(args, bufs, execution):
+        sid_seen.append(args.shuffle_id)
+        svc.checkpoints.save(args.shuffle_id, 0, 0, "server", Msgs.empty())
+        raise RuntimeError("user comb_fn exploded")
+
+    svc._execute = boom
+    with pytest.raises(RuntimeError):
+        _shuffle(svc, _dup_heavy(8, n=100))
+    assert sid_seen and svc.checkpoint_stats()["checkpoints"] == 0
+
+
+def test_speculation_keeps_vectorized_path():
+    """A fully speculated straggler set no longer forces the threaded executor."""
+    svc = TeShuService(_topo(), resilience="recover")
+    bufs = _dup_heavy(8, n=800)
+    _shuffle(svc, bufs)
+    svc.delay_worker(2, 0.6)
+    res = _shuffle(svc, bufs)
+    assert res.vectorized and res.attempts == 1
+
+
+# ---------------------------------------------------------------------------
+# journal: new record kinds replay through ShuffleManager.recover
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrips_resilience_records(tmp_path):
+    j = str(tmp_path / "journal.jsonl")
+    mgr = ShuffleManager(journal_path=j)
+    mgr.record_start(0, 1, "network_aware")
+    mgr.record_stage(0, 1, "network_aware", "server", attempt=0)
+    mgr.record_failure(1, {"kind": "dead", "dead": [3]}, attempt=0)
+    mgr.record_recovery(1, {"restarted": [3], "restart_set": [0, 1, 2, 3]},
+                        attempt=1)
+    mgr.record_stage(0, 1, "network_aware", "rack", attempt=1)
+    mgr.record_end(0, 1, "network_aware", attempt=1)
+    mgr.close()
+    back = ShuffleManager.recover(j)
+    assert [r.stage for r in back.stage_records(1)] == ["server", "rack"]
+    assert back.stage_records(1, attempt=1)[0].stage == "rack"
+    assert back.failure_records(1)[0].info["dead"] == [3]
+    assert back.recovery_records(1)[0].info["restart_set"] == [0, 1, 2, 3]
+    assert back.progress(1)["pending"] == []
+
+
+def test_recovered_service_journal_is_replayable(tmp_path):
+    j = str(tmp_path / "svc.jsonl")
+    svc = TeShuService(_topo(), execution="threaded", resilience="recover",
+                       journal_path=j)
+    bufs = _dup_heavy(8)
+    _shuffle(svc, bufs)
+    _shuffle(svc, bufs)
+    svc.inject_fault(3, after_stage=0)
+    _shuffle(svc, bufs)
+    svc.manager.close()
+    back = ShuffleManager.recover(j)
+    assert back.progress(3)["pending"] == []         # recovery completed
+    assert back.recovery_records(3)[0].info["restarted"] == [3]
+    assert {r.wid for r in back.stage_records(3, attempt=1)} == {0, 1, 2, 3}
