@@ -1,15 +1,18 @@
 """Table 3: template expressiveness — lines of TeShu template code per shuffle
 algorithm, plus a byte/time profile of each template on a common workload, plus
-the plan-cache / vectorization benchmark (beyond-paper: repeated shuffles)."""
+the plan-cache / vectorization benchmark (beyond-paper: repeated shuffles) and
+the skew-rebalance benchmark (``BENCH_skew.json``, machine-readable)."""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
 
 from repro.core import (HASH_PART, SUM, TEMPLATES, Msgs, ShuffleArgs,
-                        TeShuService, datacenter, fat_tree, multipod_dcn,
-                        run_shuffle, template_loc)
+                        TeShuService, datacenter, dst_load_imbalance, fat_tree,
+                        multipod_dcn, run_shuffle, template_loc)
 
 from .common import CsvOut, paper_topology, zipf_shards
 
@@ -122,10 +125,89 @@ def plan_cache_profile(iters: int = 8) -> CsvOut:
     return out
 
 
+def skew_profile(iters: int = 4, *, smoke: bool = False,
+                 json_path: str | None = None) -> CsvOut:
+    """Skew rebalancing: uniform vs Zipf(1.2), balance off vs auto, both
+    executors.  The perf-trajectory quantity is ``max_recv_mb`` — the bytes
+    landing on the hottest destination, i.e. the tail the shuffle completes
+    on — plus its max/mean imbalance and wall/modelled time.
+
+    When ``json_path`` is set, the rows are also written as machine-readable
+    JSON (``BENCH_skew.json``): ``{"meta": {...}, "rows": [...]}`` with one
+    row per (workload, balance, executor), consumed by the CI smoke job.
+    """
+    out = CsvOut("skew_profile",
+                 ["workload", "balance", "executor", "rebalanced", "splits",
+                  "max_recv_mb", "mean_recv_mb", "imbalance", "modelled_ms",
+                  "wall_ms", "cache_hits"])
+    topo = datacenter(4, 2, 1)            # 8 workers across 2 servers
+    nw = topo.num_workers
+    workers = list(range(nw))
+    n_per = 4_000 if smoke else 40_000
+    loops = 2 if smoke else iters
+    workloads = {
+        "uniform": zipf_shards(nw, n_per, 20_000, alpha=0.0, seed=7),
+        "zipf_1.2": zipf_shards(nw, n_per, 500, alpha=1.2, seed=7),
+    }
+    rows = []
+    for wl_name, base in workloads.items():
+        for balance in ("off", "auto"):
+            for executor in ("threaded", "auto"):
+                svc = TeShuService(topo, balance=balance, execution=executor)
+
+                def one():
+                    bufs = {w: m.copy() for w, m in base.items()}
+                    t0 = time.perf_counter()
+                    res = svc.shuffle("vanilla_push", bufs, workers, workers,
+                                      comb_fn=SUM, rate=0.01)
+                    return time.perf_counter() - t0, res
+
+                one()                      # warm: compiles (and caches) the plan
+                svc.reset_stats()
+                runs = [one() for _ in range(loops)]
+                _, last = runs[-1]
+                st = svc.stats()
+                recv = st["recv_bytes_per_worker"]
+                loads = [recv.get(d, 0) / loops for d in workers]
+                dec = dict(last.decisions).get("rebalance")
+                row = dict(
+                    workload=wl_name, balance=balance, executor=executor,
+                    rebalanced=bool(dec is not None and dec.triggered),
+                    splits=len(dec.splits) if dec is not None else 0,
+                    max_recv_mb=max(loads) / 1e6,
+                    mean_recv_mb=(sum(loads) / len(loads)) / 1e6,
+                    imbalance=dst_load_imbalance(st, workers) or 1.0,
+                    modelled_ms=st["modelled_time_s"] / loops * 1e3,
+                    wall_ms=float(np.median([t for t, _ in runs])) * 1e3,
+                    cache_hits=svc.cache_stats()["hits"])
+                rows.append(row)
+                out.add(**row)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"meta": {"bench": "skew_profile", "workers": nw,
+                                "n_per_worker": n_per, "iters": loops,
+                                "template": "vanilla_push", "smoke": smoke},
+                       "rows": rows}, f, indent=2)
+            f.write("\n")
+    return out
+
+
 def run() -> list[CsvOut]:
-    return [table3(), template_profile(), plan_cache_profile()]
+    return [table3(), template_profile(), plan_cache_profile(),
+            skew_profile(json_path="BENCH_skew.json")]
 
 
 if __name__ == "__main__":
-    for t in run():
-        t.emit()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--skew-only", action="store_true",
+                    help="run only the skew benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-scale run (CI)")
+    ap.add_argument("--skew-json", default="BENCH_skew.json",
+                    help="path for the machine-readable skew output")
+    args = ap.parse_args()
+    if args.skew_only:
+        skew_profile(smoke=args.smoke, json_path=args.skew_json).emit()
+    else:
+        for t in run():
+            t.emit()

@@ -6,16 +6,21 @@ from .manager import ShuffleManager, ShuffleRecord
 from .messages import (COMBINERS, HASH_PART, MAX, MIN, SUM, Combiner, Msgs, PartFn,
                        partition, range_part, splitmix64)
 from .plancache import (CompiledPlan, LevelDecision, PlanCache, compile_plan,
-                        plan_key, stats_signature)
+                        plan_key, skew_bucket, stats_signature)
 from .primitives import (CostLedger, FaultInjection, LocalCluster, ShuffleAborted,
                          ShuffleArgs, WorkerContext)
 from .resilience import (CheckpointStore, FailureDetector, FailureReport,
                          RecoveryContext, RecoveryCoordinator, SpeculationPolicy,
                          SpeculativeTask, consistent_resume_stages, repair_plan,
                          try_repair)
-from .sampling import (estimate_reduction_ratio, group_of, num_groups_for_rate,
-                       partition_aware_sample, random_sample, reduction_ratio)
-from .service import TeShuService
+from .sampling import (estimate_reduction_ratio,
+                       estimate_reduction_ratio_with_fallback, group_of,
+                       num_groups_for_rate, partition_aware_sample,
+                       random_sample, reduction_ratio, sample_with_fallback)
+from .service import TeShuService, dst_load_imbalance
+from .skew import (DEFAULT_SKEW_THRESHOLD, HeavyHitterSketch, LocalSkewStats,
+                   SkewDecision, imbalance, local_skew_stats, merge_skew_stats,
+                   owner_merge_plan, plan_rebalance, scatter_part_fn)
 from .templates import (TEMPLATES, ShuffleResult, ShuffleTemplate, register_template,
                         run_shuffle, template_loc)
 from .topology import (NetworkTopology, Level, datacenter, degrade_links, fat_tree,
@@ -31,11 +36,17 @@ __all__ = [
     "COMBINERS", "HASH_PART", "MAX", "MIN", "SUM", "Combiner", "Msgs", "PartFn",
     "partition", "range_part", "splitmix64",
     "CompiledPlan", "LevelDecision", "PlanCache", "compile_plan", "plan_key",
-    "stats_signature", "CostLedger", "FaultInjection", "LocalCluster",
+    "skew_bucket", "stats_signature", "CostLedger", "FaultInjection", "LocalCluster",
     "ShuffleAborted",
-    "ShuffleArgs", "WorkerContext", "estimate_reduction_ratio", "group_of",
+    "ShuffleArgs", "WorkerContext", "estimate_reduction_ratio",
+    "estimate_reduction_ratio_with_fallback", "group_of",
     "num_groups_for_rate", "partition_aware_sample", "random_sample",
-    "reduction_ratio", "TeShuService", "TEMPLATES", "ShuffleResult",
+    "reduction_ratio", "sample_with_fallback",
+    "DEFAULT_SKEW_THRESHOLD", "HeavyHitterSketch", "LocalSkewStats",
+    "SkewDecision", "imbalance", "local_skew_stats", "merge_skew_stats",
+    "owner_merge_plan", "plan_rebalance", "scatter_part_fn",
+    "dst_load_imbalance",
+    "TeShuService", "TEMPLATES", "ShuffleResult",
     "ShuffleTemplate", "register_template", "run_shuffle", "template_loc",
     "NetworkTopology", "Level", "datacenter", "degrade_links", "fat_tree",
     "from_mesh_axes", "multipod_dcn", "roofline_times", "dominant_term",

@@ -18,7 +18,8 @@ from __future__ import annotations
 import dataclasses
 
 from .messages import Combiner, Msgs
-from .sampling import estimate_reduction_ratio
+from .sampling import (estimate_reduction_ratio,
+                       estimate_reduction_ratio_with_fallback)
 from .topology import NetworkTopology
 
 
@@ -31,6 +32,9 @@ class EffCost:
     # ^ the B_group the verdict was computed from — carried so the resilience
     #   layer can re-evaluate EFF/COST against a *degraded* topology (plan
     #   repair) without re-sampling; 0.0 on trivially-rejected stages.
+    sample_attempts: int = 0
+    # ^ how many fallback hash groups the r̂ estimator had to visit because
+    #   the primary pooled sample was empty (0 = primary group sufficed).
 
     @property
     def beneficial(self) -> bool:
@@ -63,12 +67,23 @@ def compute_eff_cost(
 
     ``samples`` come from every worker in the shuffle (the sampling server pools
     them), so duplication *across* workers — exactly what the local combine will
-    remove — is visible in the estimate.
+    remove — is visible in the estimate.  Each entry is either a plain ``Msgs``
+    (one group sample) or a fallback list from
+    :func:`repro.core.sampling.sample_with_fallback`; in the latter case an
+    empty pooled primary group falls back to the next group instead of
+    reporting the stage-rejecting ``r̂ = 1.0``, and the attempt count is
+    recorded on the verdict.
     """
     if combiner is None or group_size <= 1:
         return EffCost(eff=0.0, cost=0.0, reduction_ratio=1.0)
-    r_hat = estimate_reduction_ratio(samples, combiner)
-    return eff_cost_from_ratio(topology, level_name, r_hat, group_bytes, group_size)
+    if samples and isinstance(samples[0], list):
+        r_hat, attempts = estimate_reduction_ratio_with_fallback(samples, combiner)
+    else:
+        r_hat, attempts = estimate_reduction_ratio(samples, combiner), 0
+    ec = eff_cost_from_ratio(topology, level_name, r_hat, group_bytes, group_size)
+    if attempts:
+        ec = dataclasses.replace(ec, sample_attempts=attempts)
+    return ec
 
 
 def eff_cost_from_ratio(

@@ -73,11 +73,16 @@ class Msgs:
 
     @staticmethod
     def concat(batches: list["Msgs"]) -> "Msgs":
-        batches = [b for b in batches if b is not None and b.n > 0]
-        if not batches:
-            return Msgs.empty()
-        return Msgs(np.concatenate([b.keys for b in batches]),
-                    np.concatenate([b.vals for b in batches]))
+        present = [b for b in batches if b is not None]
+        nonempty = [b for b in present if b.n > 0]
+        if not nonempty:
+            # An all-empty concat must still carry the payload width of its
+            # inputs: collapsing to width 1 breaks byte accounting (nbytes
+            # charges per column) and makes the result un-concatenable with
+            # the real batches that arrive later.
+            return Msgs.empty(max((b.width for b in present), default=1))
+        return Msgs(np.concatenate([b.keys for b in nonempty]),
+                    np.concatenate([b.vals for b in nonempty]))
 
     def take(self, idx: np.ndarray) -> "Msgs":
         return Msgs(self.keys[idx], self.vals[idx])

@@ -41,12 +41,17 @@ from typing import Sequence
 import numpy as np
 
 from .adaptive import EffCost, reduction_drift
-from .messages import Combiner, Msgs, PartFn
+from .messages import Combiner, Msgs, PartFn, splitmix64
+from .skew import SkewDecision
 from .topology import NetworkTopology
 
 # Levels whose observed reduction drifts by more than this (absolute) from the
 # plan's baseline invalidate the plan (see adaptive.reduction_drift).
 DRIFT_TOLERANCE = 0.15
+# A cached plan whose observed per-destination load imbalance (max/mean of
+# received bytes) moves more than this from the imbalance measured on the
+# plan's own fresh run is describing a workload that no longer exists.
+SKEW_DRIFT_TOLERANCE = 0.5
 
 
 # ---------------------------------------------------------------------------
@@ -58,23 +63,70 @@ def _log2_bucket(n: int) -> int:
     return int(n).bit_length()
 
 
+# Hashed-share skew bucketing: 128 hash buckets keep collision inflation small
+# (k keys land ~k/128 per bucket), and the floor clamps every share below the
+# rebalance-relevant regime (~1/16, the mean destination load at ndst <= 16)
+# into one bucket so merely-jittery uniform workloads keep aliasing.
+_SKEW_HASH_BUCKETS = 128
+_SKEW_BUCKET_FLOOR = -4
+_SKEW_HASH_SEED = 0x5EAF
+
+
+def skew_bucket(bufs: dict[int, Msgs]) -> int:
+    """log2 bucket of the pooled top hashed-key-bucket share (skew sketch).
+
+    The max share of any of ``_SKEW_HASH_BUCKETS`` hash buckets upper-bounds —
+    and for a genuinely hot key, tracks — the top *key* share, in one O(n)
+    pass without materializing per-key counts.  ``floor(log2(share))`` is then
+    clamped at ``_SKEW_BUCKET_FLOOR``: 0 means one key is ~everything, -4 (the
+    floor) covers every distribution too flat for rebalancing to care.  Skewed
+    and uniform epochs therefore never alias, while uniform epochs of any
+    flatness all do.
+    """
+    total = sum(m.n for m in bufs.values())
+    if total == 0:
+        return _SKEW_BUCKET_FLOOR
+    acc = np.zeros(_SKEW_HASH_BUCKETS, dtype=np.int64)
+    for m in bufs.values():
+        if m.n:
+            b = (splitmix64(m.keys, seed=_SKEW_HASH_SEED)
+                 % np.uint64(_SKEW_HASH_BUCKETS)).astype(np.int64)
+            acc += np.bincount(b, minlength=_SKEW_HASH_BUCKETS)
+    share = float(acc.max()) / total
+    return max(_SKEW_BUCKET_FLOOR, int(np.floor(np.log2(share))))
+
+
 def stats_signature(
     bufs: dict[int, Msgs],
     part_fn: PartFn,
     comb_fn: Combiner | None,
     rate: float,
+    balance: str = "off",
+    skew_threshold: float | None = None,
 ) -> tuple:
     """Coarse sketch of a shuffle's decision inputs; equal sketch => reusable plan.
 
     Components (all O(total messages) numpy scans, no hashing of payloads):
 
-    * partFunc / combFunc identity and the sampling rate — different functions
-      partition or reduce differently, so their plans never alias;
+    * partFunc / combFunc identity, the sampling rate, the balance mode and —
+      under ``"auto"`` — the skew threshold: different functions partition or
+      reduce differently, and a skew-rebalanced plan must never serve a
+      ``balance="off"`` caller or one that asked for a different rebalance
+      trigger point, so none of these alias;
     * per-worker message-count log2 buckets — captures data placement and skew at
       the granularity the EFF/COST model is sensitive to;
     * a key-space bucket (log2 of the max key) — a workload that suddenly spans a
       different key universe has different duplication structure;
+    * a skew bucket (:func:`skew_bucket`, log2 of the sampled top-key share) —
+      plans instantiated on skewed vs uniform epochs never alias.  Only
+      computed under ``balance="auto"`` (it is what makes skew verdicts safe
+      to replay); ``"off"`` plans carry no skew decision to alias, so the
+      default mode skips the extra O(n) hashing pass entirely;
     * the payload width — the wire format the cost model charges.
+
+    The per-worker ``counts`` tuple stays last: plan repair's participant-subset
+    matching (:func:`repro.core.resilience.repair.try_repair`) relies on every
+    other component comparing positionally when workers are lost.
     """
     widths = {m.width for m in bufs.values() if m.n} or {1}
     max_key = 0
@@ -88,8 +140,12 @@ def stats_signature(
         part_fn.name,
         comb_fn.name if comb_fn is not None else None,
         float(rate),
+        str(balance),
+        float(skew_threshold) if balance == "auto" and skew_threshold is not None
+        else None,
         tuple(sorted(widths)),
         _log2_bucket(max_key),
+        skew_bucket(bufs) if balance == "auto" else None,
         counts,
     )
 
@@ -131,6 +187,10 @@ class CompiledPlan:
     srcs: tuple[int, ...]
     dsts: tuple[int, ...]
     levels: tuple[LevelDecision, ...]      # innermost-first; empty for static templates
+    skew: SkewDecision | None = None       # frozen skew-aware instantiation verdict
+    baseline_imbalance: float | None = None
+    # ^ max/mean per-destination received bytes measured on the plan's own
+    #   fresh run — the load-drift baseline (ground truth, like baseline_r).
 
     def level(self, name: str) -> LevelDecision | None:
         for ld in self.levels:
@@ -140,7 +200,13 @@ class CompiledPlan:
 
     @property
     def decisions(self) -> list[tuple[str, EffCost]]:
-        return [(ld.level, ld.eff_cost) for ld in self.levels]
+        out: list = []
+        if self.skew is not None:
+            # fresh instantiation records the rebalance verdict before any
+            # hierarchy-level verdicts; replays report the same order
+            out.append(("rebalance", self.skew))
+        out.extend((ld.level, ld.eff_cost) for ld in self.levels)
+        return out
 
 
 def compile_plan(
@@ -151,21 +217,30 @@ def compile_plan(
     dsts: Sequence[int],
     decisions: Sequence[tuple[str, EffCost]],
     observed: dict[str, float] | None = None,
+    baseline_imbalance: float | None = None,
 ) -> CompiledPlan:
     """Freeze a fresh run's instantiation into a replayable plan.
 
     ``decisions`` are the (level, EffCost) pairs the adaptive template recorded
-    (identical across workers: the sampling server broadcasts one verdict).
+    (identical across workers: the sampling server broadcasts one verdict),
+    plus at most one ``("rebalance", SkewDecision)`` entry from skew-aware
+    instantiation, which freezes as the plan's ``skew``.
     ``observed`` maps level -> measured reduction ratio from the fresh run's actual
     exchanges; when present it becomes the drift baseline (ground truth beats the
-    sample estimate it validated).  Neighbor lists are materialized per worker with
-    one vectorized group computation per level.
+    sample estimate it validated).  ``baseline_imbalance`` is the fresh run's
+    measured per-destination load imbalance (the load-drift baseline).
+    Neighbor lists are materialized per worker with one vectorized group
+    computation per level.
     """
     srcs = tuple(srcs)
     observed = observed or {}
     wids = np.asarray(srcs, dtype=np.int64)
     levels = []
+    skew = None
     for level_name, ec in decisions:
+        if level_name == "rebalance":
+            skew = ec
+            continue
         lv = topology.level(level_name)
         groups = wids // lv.group_size                   # vectorized $FIND_NBRS
         nbrs: dict[int, tuple[int, ...]] = {}
@@ -177,7 +252,8 @@ def compile_plan(
         levels.append(LevelDecision(level=level_name, eff_cost=ec, nbrs=nbrs,
                                     baseline_r=baseline))
     return CompiledPlan(key=key, template_id=template_id, srcs=srcs,
-                        dsts=tuple(dsts), levels=tuple(levels))
+                        dsts=tuple(dsts), levels=tuple(levels), skew=skew,
+                        baseline_imbalance=baseline_imbalance)
 
 
 # ---------------------------------------------------------------------------
@@ -194,11 +270,13 @@ class PlanCache:
 
     def __init__(self, capacity: int = 256, *,
                  drift_tolerance: float = DRIFT_TOLERANCE,
+                 skew_drift_tolerance: float = SKEW_DRIFT_TOLERANCE,
                  refresh_every: int = 0):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1: {capacity}")
         self.capacity = capacity
         self.drift_tolerance = drift_tolerance
+        self.skew_drift_tolerance = skew_drift_tolerance
         self.refresh_every = refresh_every          # 0 = never force re-instantiation
         self._plans: OrderedDict[tuple, CompiledPlan] = OrderedDict()
         self._hits_by_key: dict[tuple, int] = {}
@@ -276,6 +354,26 @@ class PlanCache:
             if ld is not None and reduction_drift(ld.baseline_r, r_obs,
                                                   tolerance=self.drift_tolerance):
                 return self.invalidate(key)
+        return False
+
+    def observe_loads(self, key: tuple, observed_imbalance: float) -> bool:
+        """Feed the measured per-destination load imbalance (max/mean received
+        bytes) from a cached execution.
+
+        Only plans that carry a skew verdict participate: their
+        ``baseline_imbalance`` was measured on the fresh run they froze, so a
+        deviation beyond ``skew_drift_tolerance`` means the key distribution
+        moved — a hot key appeared under a plan that didn't split it, or the
+        splits a plan replays are no longer warranted.  Returns True (and
+        drops the entry) on drift.
+        """
+        with self._lock:
+            plan = self._plans.get(key)
+        if plan is None or plan.skew is None or plan.baseline_imbalance is None:
+            return False
+        if abs(plan.baseline_imbalance - observed_imbalance) \
+                > self.skew_drift_tolerance:
+            return self.invalidate(key)
         return False
 
     # ---- introspection -------------------------------------------------------

@@ -23,7 +23,9 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .messages import Combiner, Msgs, PartFn, partition
-from .sampling import partition_aware_sample
+from .sampling import partition_aware_sample, sample_with_fallback
+from .skew import (DEFAULT_SKEW_THRESHOLD, LocalSkewStats, merge_skew_stats,
+                   plan_rebalance)
 from .topology import NetworkTopology
 
 
@@ -54,12 +56,17 @@ class CostLedger:
         self._bws = np.array([lv.bw_bytes_per_s for lv in topology.levels])
         self._bytes_per_level = np.zeros(len(topology.levels), dtype=np.int64)
         self._total_bytes = 0
+        # per-destination received data bytes (skew visibility: the receiver a
+        # hash-partitioned hot key lands on is the shuffle's tail).  Sample
+        # shipments are control-plane traffic and are never counted here.
+        self._recv_bytes: dict[int, int] = {}
         # current (open) epoch: per-worker serialized cost + levels crossed
         self._cur_cost: dict[int, float] = collections.defaultdict(float)
         self._cur_levels: set[int] = set()
         self._closed_time = 0.0                              # folded epochs
 
-    def charge_transfer(self, wid: int, level: int, nbytes: int, *, sample: bool = False) -> None:
+    def charge_transfer(self, wid: int, level: int, nbytes: int, *, sample: bool = False,
+                        dst: int | None = None) -> None:
         if level < 0 or nbytes == 0:
             return
         with self._lock:
@@ -69,9 +76,11 @@ class CostLedger:
             self._cur_levels.add(level)
             if sample:
                 self.sample_bytes += nbytes
+            elif dst is not None:
+                self._recv_bytes[dst] = self._recv_bytes.get(dst, 0) + nbytes
 
     def charge_transfers(self, wid: int, levels: np.ndarray, nbytes: np.ndarray,
-                         *, sample: bool = False) -> None:
+                         *, sample: bool = False, dsts: np.ndarray | None = None) -> None:
         """Batched charge for one worker: vectorized aggregation, one lock pass.
 
         The vectorized executor produces per-destination (level, bytes) arrays in
@@ -83,6 +92,8 @@ class CostLedger:
         keep = (levels >= 0) & (nbytes > 0)
         if not np.any(keep):
             return
+        if dsts is not None:
+            dsts = np.asarray(dsts)[keep]
         levels, nbytes = levels[keep], nbytes[keep]
         per_level = np.bincount(levels, weights=nbytes,
                                 minlength=len(self.topology.levels)).astype(np.int64)
@@ -95,6 +106,10 @@ class CostLedger:
             self._cur_levels.update(int(l) for l in np.nonzero(per_level)[0])
             if sample:
                 self.sample_bytes += total
+            elif dsts is not None:
+                for d, b in zip(dsts, nbytes):
+                    self._recv_bytes[int(d)] = (self._recv_bytes.get(int(d), 0)
+                                                + int(b))
 
     def charge_combine(self, wid: int, nbytes: int) -> None:
         with self._lock:
@@ -134,12 +149,14 @@ class CostLedger:
                 "bytes_per_level": {lv.name: int(self._bytes_per_level[i])
                                     for i, lv in enumerate(self.topology.levels)},
                 "sample_bytes": self.sample_bytes,
+                "recv_bytes_per_worker": dict(self._recv_bytes),
                 "modelled_time_s": self._closed_time + self._open_epoch_time(),
             }
 
     @staticmethod
     def delta(before: dict, after: dict) -> dict:
         """Difference of two snapshots — the per-shuffle stats block."""
+        recv_before = before.get("recv_bytes_per_worker", {})
         return {
             "total_bytes": after["total_bytes"] - before["total_bytes"],
             "sample_bytes": after["sample_bytes"] - before["sample_bytes"],
@@ -147,6 +164,9 @@ class CostLedger:
             "bytes_per_level": {k: after["bytes_per_level"][k]
                                 - before["bytes_per_level"][k]
                                 for k in after["bytes_per_level"]},
+            "recv_bytes_per_worker": {
+                w: b - recv_before.get(w, 0)
+                for w, b in after.get("recv_bytes_per_worker", {}).items()},
         }
 
 
@@ -254,6 +274,8 @@ class ShuffleArgs:
     comb_fn: Combiner | None
     rate: float = 0.01            # $RATE
     seed: int = 0
+    balance: str = "off"          # "off" | "auto": skew-aware instantiation
+    skew_threshold: float = DEFAULT_SKEW_THRESHOLD
     plan: "object | None" = None  # CompiledPlan (kept untyped: no core cycle)
     recovery: "object | None" = None
     # ^ resilience.recovery.RecoveryContext when the service runs with
@@ -421,6 +443,8 @@ class WorkerContext:
         self.topology = cluster.topology
         self.wid = wid
         self.args = args
+        self.part_fn = args.part_fn  # effective partFunc; skew instantiation may
+        #                              swap in a hot-key-scattering wrapper
         self.decisions: list = []    # (level, EffCost) pairs from adaptive templates
         self.observed: list = []     # (level, pre_bytes, post_bytes) per exchange
         self.stages_done = 0         # completed hierarchy stages (CKPT/RESUME)
@@ -456,7 +480,8 @@ class WorkerContext:
     def SEND(self, dst: int, msgs: Msgs, *, sample: bool = False) -> None:
         self._check_fault()
         level = self.topology.crossing_level(self.wid, dst)
-        self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes, sample=sample)
+        self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes,
+                                            sample=sample, dst=dst)
         self.cluster._mailbox(self.wid, dst).put(msgs)
 
     def RECV(self, src: int, timeout: float | None = None) -> Msgs:
@@ -495,13 +520,14 @@ class WorkerContext:
                 raise TimeoutError(f"FETCH from {src} timed out")
         msgs = self.cluster._published[key].get(self.wid, Msgs.empty())
         level = self.topology.crossing_level(src, self.wid)
-        self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes)
+        self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes,
+                                            dst=self.wid)
         return msgs
 
     def PART(self, msgs: Msgs, dsts: Sequence[int], part_fn: PartFn | None = None,
              *, publish: bool = False) -> dict[int, Msgs]:
         self._check_fault()
-        parts = partition(msgs, list(dsts), part_fn or self.args.part_fn)
+        parts = partition(msgs, list(dsts), part_fn or self.part_fn)
         if publish:  # pull mode: make partitions visible to FETCHers
             key = (self.args.shuffle_id, self.wid)
             self.cluster._published[key] = parts
@@ -518,11 +544,21 @@ class WorkerContext:
         return comb(batch)
 
     def SAMP(self, msgs: Msgs, rate: float | None = None,
-             part_fn: PartFn | None = None) -> Msgs:
+             part_fn: PartFn | None = None, *, fallback: bool = False):
+        """Partition-aware sample of this worker's buffer ($RATE).
+
+        ``fallback=True`` returns the bounded-retry sample *list* of
+        :func:`repro.core.sampling.sample_with_fallback` instead of a single
+        batch, so an empty primary group can be re-drawn pool-side.
+        """
         self._check_fault()
         rate = self.args.rate if rate is None else rate
+        seed = self.args.seed + self.args.shuffle_id
+        if fallback:
+            return sample_with_fallback(msgs, rate, part_fn or self.args.part_fn,
+                                        seed=seed)
         return partition_aware_sample(msgs, rate, part_fn or self.args.part_fn,
-                                      seed=self.args.seed + self.args.shuffle_id)
+                                      seed=seed)
 
     # ---- $-parameters (instantiated from topology) ------------------------------
     def FIND_NBRS(self, level_name: str, peers: Sequence[int]) -> list[int]:
@@ -620,17 +656,20 @@ class WorkerContext:
         return [lv.name for lv in self.topology.levels[:-1]]
 
     # ---- sampling-server rendezvous ($COMPUTE_EFF_COST, Figure 4) --------------
-    def GATHER_SAMPLES(self, tag: str, sample: Msgs, full_bytes: int,
-                       compute: Callable[[list[Msgs], list[int]], object]):
+    def GATHER_SAMPLES(self, tag: str, sample, full_bytes: int,
+                       compute: Callable[[list, list[int]], object]):
         """Ship this worker's sample group to the sampling server (srcs[0]); one
         evaluation runs there; every worker receives the result.  Sample transfer
         bytes are charged (this is the overhead Figure 6 measures), and the epoch
-        advances afterwards (a cluster-wide synchronization point)."""
+        advances afterwards (a cluster-wide synchronization point).  ``sample``
+        is one ``Msgs`` batch or a fallback list of them (``SAMP(fallback=True)``)."""
         self._check_fault()
         srcs = self.args.srcs
         server = srcs[0]
         level = self.topology.crossing_level(self.wid, server)
-        self.cluster.ledger.charge_transfer(self.wid, level, sample.nbytes, sample=True)
+        nbytes = (sum(s.nbytes for s in sample) if isinstance(sample, list)
+                  else sample.nbytes)
+        self.cluster.ledger.charge_transfer(self.wid, level, nbytes, sample=True)
         try:                     # stage-scoped when the tag names a level (the
             n = self._stage_participants(self.topology.level_index(tag))
         except KeyError:         # adaptive template's use); else every src
@@ -645,3 +684,30 @@ class WorkerContext:
             return out
 
         return rv.gather_compute(self.wid, (sample, full_bytes), fn)
+
+    # ---- skew rendezvous (heavy-hitter sketches, core/skew.py) -----------------
+    def GATHER_SKEW(self, stats: LocalSkewStats):
+        """Pool every participant's heavy-hitter sketch + load vector; one
+        rebalance decision is computed and broadcast (the skew analogue of the
+        Figure-4 sampling server).  Sketch shipment is charged as sampling
+        overhead — it is control-plane bytes, O(capacity) per worker no matter
+        how much data the sketch scanned.  Participation spans srcs *and*
+        dsts: receivers need the decision for the owner-merge stage."""
+        self._check_fault()
+        participants = sorted(set(self.args.srcs) | set(self.args.dsts))
+        server = participants[0]
+        level = self.topology.crossing_level(self.wid, server)
+        self.cluster.ledger.charge_transfer(self.wid, level, stats.nbytes,
+                                            sample=True)
+        rv = self.cluster.rendezvous((self.args.shuffle_id, "skew"),
+                                     len(participants))
+
+        def fn(contrib: dict):
+            sketch, loads = merge_skew_stats([contrib[w] for w in sorted(contrib)])
+            decision = plan_rebalance(sketch, loads, self.args.part_fn,
+                                      len(self.args.dsts),
+                                      threshold=self.args.skew_threshold)
+            self.cluster.ledger.advance_epoch()
+            return decision
+
+        return rv.gather_compute(self.wid, stats, fn)

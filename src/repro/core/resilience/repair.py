@@ -22,7 +22,9 @@ rack-level brownout) then hit the cache directly and pay nothing at all.
 from __future__ import annotations
 
 from ..adaptive import eff_cost_from_ratio
+from ..messages import PartFn
 from ..plancache import CompiledPlan, LevelDecision, PlanCache
+from ..skew import estimate_slot_loads, plan_rebalance
 from ..topology import Level, NetworkTopology
 
 
@@ -44,6 +46,7 @@ def repair_plan(
     *,
     new_srcs=None,
     new_dsts=None,
+    part_fn: PartFn | None = None,
 ) -> tuple[CompiledPlan, list[str]]:
     """Rebuild ``plan`` for ``new_topology`` (and optionally fewer workers).
 
@@ -51,6 +54,15 @@ def repair_plan(
     actually re-derived — everything else is carried over untouched.  Raises
     ``ValueError`` when the topologies are structurally incompatible (different
     depth or level names), i.e. when only full re-instantiation can help.
+
+    A skew-instantiated plan carries the frozen heavy-hitter sketch; when the
+    destination set shrinks (a dead worker excised) the hot-key splits are
+    **re-targeted** by re-running :func:`repro.core.skew.plan_rebalance` from
+    that sketch against the surviving destinations — every share and owner is
+    a live worker again, and no re-sampling happens.  ``part_fn`` (the
+    shuffle's own partition function) is required for that re-derivation;
+    link-degradation repairs keep the splits untouched (membership is
+    placement, not bandwidth).
     """
     old_fp = plan.key[1]
     new_fp = new_topology.fingerprint()
@@ -89,26 +101,45 @@ def repair_plan(
             repaired_levels.append(ld.level)
         out.append(LevelDecision(level=ld.level, eff_cost=ec, nbrs=nbrs,
                                  baseline_r=ld.baseline_r))
+
+    skew = plan.skew
+    baseline = plan.baseline_imbalance
+    if skew is not None and new_dsts != plan.dsts:
+        if part_fn is None:
+            raise ValueError(
+                "repairing a skew-instantiated plan onto a different "
+                "destination set requires the shuffle's part_fn")
+        ndst = len(new_dsts)
+        skew = plan_rebalance(
+            skew.sketch, estimate_slot_loads(skew.sketch, part_fn, ndst),
+            part_fn, ndst, threshold=skew.threshold)
+        repaired_levels.append("rebalance")
+        # the old run's measured imbalance described the lost-worker layout;
+        # the re-targeted estimate is the only baseline that still applies
+        baseline = skew.est_balanced_imbalance
+
     repaired = CompiledPlan(key=new_key, template_id=plan.template_id,
-                            srcs=new_srcs, dsts=new_dsts, levels=tuple(out))
+                            srcs=new_srcs, dsts=new_dsts, levels=tuple(out),
+                            skew=skew, baseline_imbalance=baseline)
     return repaired, repaired_levels
 
 
 def _signature_shrinks_to(big_sig: tuple, small_sig: tuple) -> bool:
     """Does ``small_sig`` describe a participant-subset of ``big_sig``'s workload?
 
-    A stats signature is ``(part, comb, rate, widths, key_bucket, counts)``
-    with ``counts`` the per-worker (wid, log2-bucket) tuple — so losing
-    workers keeps every element equal except ``counts``, which must shrink to
-    a sub-multiset (the survivors' buckets unchanged).
+    A stats signature is ``(part, comb, rate, balance, skew_threshold, widths,
+    key_bucket, skew_bucket, counts)`` with ``counts`` — the per-worker
+    (wid, log2-bucket) tuple — kept last by contract: losing workers keeps every other element
+    equal (the survivors' distribution shape is the distribution shape), so
+    only ``counts`` may shrink, and it must shrink to a sub-multiset.
     """
     if big_sig[:-1] != small_sig[:-1]:
         return False
     return set(small_sig[-1]) <= set(big_sig[-1])
 
 
-def try_repair(cache: PlanCache, key: tuple,
-               topology: NetworkTopology) -> CompiledPlan | None:
+def try_repair(cache: PlanCache, key: tuple, topology: NetworkTopology,
+               part_fn: PartFn | None = None) -> CompiledPlan | None:
     """On a cache miss, try to derive the missing plan from a cached relative.
 
     ``key`` is the (missed) full plan key ``(template, fingerprint, srcs,
@@ -134,7 +165,8 @@ def try_repair(cache: PlanCache, key: tuple,
         else:
             continue
         try:
-            repaired, _ = repair_plan(plan, key, topology, **kwargs)
+            repaired, _ = repair_plan(plan, key, topology, part_fn=part_fn,
+                                      **kwargs)
         except ValueError:
             continue
         cache.put(key, repaired, repaired=True)

@@ -42,24 +42,41 @@ from .plancache import PlanCache, compile_plan, plan_key, stats_signature
 from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs
 from .resilience import (CheckpointStore, FailureDetector, RecoveryCoordinator,
                          SpeculationPolicy, try_repair)
+from .skew import DEFAULT_SKEW_THRESHOLD, imbalance
 from .templates import ShuffleResult, run_shuffle
 from .topology import NetworkTopology
 from .vectorized import can_vectorize, run_shuffle_vectorized
 
 EXECUTION_MODES = ("auto", "threaded", "fresh")
 RESILIENCE_MODES = ("off", "detect", "recover")
+BALANCE_MODES = ("off", "auto")
+
+
+def dst_load_imbalance(stats: dict, dsts) -> float | None:
+    """max/mean received bytes across ``dsts`` from a shuffle's stats delta;
+    None when the run recorded no received bytes (e.g. a single destination)."""
+    recv = stats.get("recv_bytes_per_worker", {})
+    loads = [recv.get(d, 0) for d in dsts]
+    if len(loads) < 2 or sum(loads) <= 0:
+        return None
+    return imbalance(loads)
 
 
 class TeShuService:
     def __init__(self, topology: NetworkTopology, *, journal_path: str | None = None,
                  replicas: Sequence[str] = (), plan_cache: PlanCache | None = None,
                  execution: str = "auto", resilience: str = "off",
+                 balance: str = "off", skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
                  max_retries: int = 2):
         if execution not in EXECUTION_MODES:
             raise ValueError(f"execution must be one of {EXECUTION_MODES}: {execution}")
         if resilience not in RESILIENCE_MODES:
             raise ValueError(
                 f"resilience must be one of {RESILIENCE_MODES}: {resilience}")
+        if balance not in BALANCE_MODES:
+            raise ValueError(f"balance must be one of {BALANCE_MODES}: {balance}")
+        self.balance = balance
+        self.skew_threshold = skew_threshold
         self.topology = topology
         self.cluster = LocalCluster(topology)
         self.manager = ShuffleManager(journal_path=journal_path, replicas=replicas,
@@ -95,6 +112,8 @@ class TeShuService:
         seed: int = 0,
         execution: str | None = None,
         resilience: str | None = None,
+        balance: str | None = None,
+        skew_threshold: float | None = None,
     ) -> ShuffleResult:
         execution = self.execution if execution is None else execution
         if execution not in EXECUTION_MODES:
@@ -103,20 +122,35 @@ class TeShuService:
         if resilience not in RESILIENCE_MODES:
             raise ValueError(
                 f"resilience must be one of {RESILIENCE_MODES}: {resilience}")
+        balance = self.balance if balance is None else balance
+        if balance not in BALANCE_MODES:
+            raise ValueError(f"balance must be one of {BALANCE_MODES}: {balance}")
+        if balance == "auto" and \
+                not self.manager.get_template(template_id, wid=None).rebalanceable:
+            # a template that re-partitions en route never carries a skew
+            # decision: resolve to "off" up front so keying skips the skew
+            # bucket pass and its plans don't split across skew epochs
+            balance = "off"
         args = ShuffleArgs(
             template_id=template_id,
             shuffle_id=self.next_shuffle_id() if shuffle_id is None else shuffle_id,
             srcs=tuple(srcs), dsts=tuple(dsts),
-            part_fn=part_fn, comb_fn=comb_fn, rate=rate, seed=seed)
+            part_fn=part_fn, comb_fn=comb_fn, rate=rate, seed=seed,
+            balance=balance,
+            skew_threshold=(self.skew_threshold if skew_threshold is None
+                            else skew_threshold))
 
         key = plan_key(template_id, self.topology, args.srcs, args.dsts,
-                       stats_signature(bufs, part_fn, comb_fn, rate))
+                       stats_signature(bufs, part_fn, comb_fn, rate,
+                                       balance=balance,
+                                       skew_threshold=args.skew_threshold))
         plan = self.plan_cache.get(key) if execution != "fresh" else None
         repaired = False
         if plan is None and execution != "fresh" and resilience != "off":
             # no plan for this exact scenario — maybe a healthy-topology (or
             # full-worker-set) relative exists that repair can adapt
-            plan = try_repair(self.plan_cache, key, self.topology)
+            plan = try_repair(self.plan_cache, key, self.topology,
+                              part_fn=part_fn)
             repaired = plan is not None
         args.plan = plan
 
@@ -134,18 +168,31 @@ class TeShuService:
                                           manager=self.manager)
         return run_shuffle(self.cluster, args, bufs, manager=self.manager)
 
+    def _compile(self, args: ShuffleArgs, key: tuple, res: ShuffleResult) -> None:
+        self.plan_cache.put(key, compile_plan(
+            key, args.template_id, self.topology, args.srcs, args.dsts,
+            res.decisions, res.observed,
+            baseline_imbalance=dst_load_imbalance(res.stats, args.dsts)))
+
+    def _observe(self, args: ShuffleArgs, key: tuple, res: ShuffleResult) -> None:
+        """Feed drift signals from a cached run: per-level reduction ratios,
+        and — for skew-instantiated plans — the measured destination load
+        imbalance vs the baseline the plan froze."""
+        self.plan_cache.observe(key, res.observed)
+        obs = dst_load_imbalance(res.stats, args.dsts)
+        if obs is not None:
+            self.plan_cache.observe_loads(key, obs)
+
     def _run_plain(self, args: ShuffleArgs, bufs: dict[int, Msgs], key: tuple,
                    execution: str) -> ShuffleResult:
         if args.plan is None:
             res = run_shuffle(self.cluster, args, bufs, manager=self.manager)
-            self.plan_cache.put(key, compile_plan(
-                key, args.template_id, self.topology, args.srcs, args.dsts,
-                res.decisions, res.observed))
+            self._compile(args, key, res)
             return res
         res = self._execute(args, bufs, execution)
         # Drift check: measured reductions from this cached run vs the plan's
         # baseline; a drifted entry is dropped so the next call re-instantiates.
-        self.plan_cache.observe(key, res.observed)
+        self._observe(args, key, res)
         return res
 
     def _run_resilient(self, args: ShuffleArgs, bufs: dict[int, Msgs], key: tuple,
@@ -198,11 +245,9 @@ class TeShuService:
                         # a recovered fresh run has per-worker partial decision
                         # lists — don't freeze those; the next call
                         # re-instantiates
-                        self.plan_cache.put(key, compile_plan(
-                            key, args.template_id, self.topology, args.srcs,
-                            args.dsts, res.decisions, res.observed))
+                        self._compile(args, key, res)
                 else:
-                    self.plan_cache.observe(key, res.observed)
+                    self._observe(args, key, res)
                 res.attempts = attempt + 1
                 res.repaired = repaired
                 if rc.speculated:

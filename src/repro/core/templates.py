@@ -17,9 +17,12 @@ import inspect
 import time
 from typing import Callable
 
+import numpy as np
+
 from .adaptive import compute_eff_cost
 from .messages import Msgs
 from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs, WorkerContext
+from .skew import local_skew_stats, owner_merge_plan, scatter_part_fn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +32,13 @@ class ShuffleTemplate:
     receiver: Callable[[WorkerContext], Msgs]
     mode: str                    # "push" | "pull" | "push/pull"
     description: str = ""
+    rebalanceable: bool = True
+    # ^ hot-key scattering (core/skew.py) is positional: it is only sound for
+    #   templates that assign each message its *final* destination in a single
+    #   PART over the full destination set.  A template that re-partitions
+    #   messages en route (two_level's phase-3 PART inside a group) would
+    #   re-scatter by position within a different buffer and strand rows whose
+    #   new slot falls outside that stage's fan-out.
 
     def loc(self) -> int:
         return template_loc(self.sender) + template_loc(self.receiver)
@@ -167,7 +177,7 @@ def _network_aware_sender(ctx: WorkerContext, bufs: Msgs) -> None:
         nbrs, ec = ctx.PLAN_STAGE(level)                           # compiled-plan hit?
         if ec is None:                                             # miss: instantiate
             nbrs = ctx.FIND_NBRS(level, a.srcs)                    # $FIND_NBRS_PER_*
-            samp = ctx.SAMP(bufs, a.rate)                          # $RATE
+            samp = ctx.SAMP(bufs, a.rate, fallback=True)           # $RATE
             ec = ctx.GATHER_SAMPLES(                               # $COMPUTE_EFF_COST
                 level, samp, bufs.nbytes,
                 compute=lambda samples, sizes, lv=level: compute_eff_cost(
@@ -214,7 +224,8 @@ register_template(ShuffleTemplate(
     "Schedule flows to avoid single-process bottleneck [38]."))
 register_template(ShuffleTemplate(
     "two_level", _two_level_sender, _two_level_receiver, "push",
-    "Group small shuffles to reduce cost in the cloud [27]."))
+    "Group small shuffles to reduce cost in the cloud [27].",
+    rebalanceable=False))        # re-partitions en route; see ShuffleTemplate
 register_template(ShuffleTemplate(
     "network_aware", _network_aware_sender, _push_receiver, "push/pull",
     "Adaptively shuffle data at data center scale (Figure 3)."))
@@ -247,6 +258,60 @@ def aggregate_observed(per_worker: list[list[tuple]]) -> dict[str, float]:
             pre[level] = pre.get(level, 0) + p
             post[level] = post.get(level, 0) + q
     return {lv: post[lv] / pre[lv] for lv in pre if pre[lv] > 0}
+
+
+def skew_instantiate(ctx: WorkerContext, bufs_w: Msgs, template: ShuffleTemplate):
+    """Skew-aware instantiation step (runs before the template's programs).
+
+    With ``balance="auto"`` every participant contributes a heavy-hitter
+    sketch + exact load vector to the skew rendezvous
+    (:meth:`WorkerContext.GATHER_SKEW`); the broadcast
+    :class:`~repro.core.skew.SkewDecision` is recorded under the
+    ``"rebalance"`` decision kind.  A cached run replays the plan's frozen
+    decision instead — no sketching, no rendezvous.  When the decision
+    triggered, the worker's effective partFunc becomes the hot-key-scattering
+    wrapper, so every PART the template issues splits hot keys across their
+    share destinations.
+    """
+    args = ctx.args
+    if args.plan is not None:
+        dec = args.plan.skew
+    elif (args.balance == "auto" and args.comb_fn is not None
+          and len(args.dsts) > 1 and template.rebalanceable):
+        stats = local_skew_stats(
+            bufs_w if ctx.wid in args.srcs else Msgs.empty(),
+            args.part_fn, len(args.dsts))
+        dec = ctx.GATHER_SKEW(stats)
+        ctx.decisions.append(("rebalance", dec))
+    else:
+        dec = None
+    if dec is not None and dec.triggered:
+        ctx.part_fn = scatter_part_fn(args.part_fn, dec)
+    return dec
+
+
+def owner_merge(ctx: WorkerContext, out: Msgs, decision) -> Msgs:
+    """The final stage of a rebalanced shuffle: every destination forwards the
+    (already combined) rows of hot keys it holds for *other* owners; each
+    owner combines its own rows with its sharers' contributions.  One row per
+    (hot key, sharer) moves — negligible bytes against the imbalance removed.
+    Deterministic send/receive order (sorted owners, sorted sharers) keeps the
+    output byte-identical to the vectorized replay.
+    """
+    merge = owner_merge_plan(decision, ctx.args.part_fn, ctx.args.dsts)
+    wid = ctx.wid
+    for owner, (owned_keys, sharers) in merge.items():
+        if owner == wid or wid not in sharers:
+            continue
+        mask = np.isin(out.keys, owned_keys)
+        rows = out.take(np.nonzero(mask)[0])
+        out = out.take(np.nonzero(~mask)[0])
+        ctx.SEND(owner, rows)
+    if wid in merge:
+        _, sharers = merge[wid]
+        got = [ctx.RECV(s) for s in sharers]
+        out = ctx.COMB([out] + got)
+    return out
 
 
 def run_shuffle(
@@ -282,10 +347,14 @@ def run_shuffle(
         ctx = WorkerContext(cluster, wid, args)
         out = None
         try:
+            skew_dec = skew_instantiate(ctx, bufs.get(wid, Msgs.empty()),
+                                        template)
             if wid in args.srcs:
                 template.sender(ctx, bufs.get(wid, Msgs.empty()))
             if wid in args.dsts:
                 out = template.receiver(ctx)
+                if skew_dec is not None and skew_dec.triggered:
+                    out = owner_merge(ctx, out, skew_dec)
         except ShuffleAborted:
             # exited without delivering: peers blocked on this worker must not
             # wait out their RPC timeout for data that will never come
@@ -312,7 +381,10 @@ def run_shuffle(
         # no single worker re-walks every level, so per-worker lists are partial
         decisions = list(args.plan.decisions)
     else:
-        decisions = next((r[1] for r in raw.values() if r is not None and r[1]), [])
+        # longest list wins: a dst-only participant records just the rebalance
+        # verdict, while srcs record rebalance + every hierarchy level
+        decisions = max((r[1] for r in raw.values() if r is not None),
+                        key=len, default=[])
     observed = aggregate_observed([r[2] for r in raw.values() if r is not None])
     return ShuffleResult(bufs=out_bufs, decisions=decisions, stats=stats,
                          observed=observed, cached=args.plan is not None)

@@ -43,6 +43,7 @@ import numpy as np
 
 from .messages import Combiner, Msgs, partition
 from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs
+from .skew import owner_merge_plan, scatter_part_fn
 from .templates import ShuffleResult, aggregate_observed
 
 VECTORIZABLE = frozenset(
@@ -129,6 +130,11 @@ def run_shuffle_vectorized(
     resume = dict(rc.resume_stages) if rc is not None else {}
     srcs, dsts = list(args.srcs), list(args.dsts)
     participants = sorted(set(srcs) | set(dsts))
+    skew = plan.skew if plan.skew is not None and plan.skew.triggered else None
+    # the effective partFunc mirrors the threaded ctx.part_fn: the hot-key
+    # scatter wraps every PART the plan replays (it passes through untouched
+    # for assignments outside the decision's slot space)
+    eff_part = scatter_part_fn(args.part_fn, skew) if skew else args.part_fn
     if manager is not None:
         manager.get_template(args.template_id, wid=None)
         for w in participants:
@@ -179,7 +185,7 @@ def run_shuffle_vectorized(
                 for w in execute:
                     nbrs = list(ld.nbrs.get(w, (w,)))
                     if len(nbrs) > 1:
-                        staged[w] = (nbrs, partition(state[w], nbrs, args.part_fn))
+                        staged[w] = (nbrs, partition(state[w], nbrs, eff_part))
                 for w, (nbrs, parts) in staged.items():
                     peers = [n for n in nbrs if n != w]
                     ledger.charge_transfers(
@@ -187,7 +193,8 @@ def run_shuffle_vectorized(
                         np.fromiter((topo.crossing_level(w, n) for n in peers),
                                     dtype=np.int64, count=len(peers)),
                         np.fromiter((parts[n].nbytes for n in peers),
-                                    dtype=np.int64, count=len(peers)))
+                                    dtype=np.int64, count=len(peers)),
+                        dsts=np.asarray(peers, dtype=np.int64))
                 for w, (nbrs, parts) in staged.items():
                     got = [parts[w]] + [staged[n][1][w] for n in nbrs if n != w]
                     pre = sum(g.nbytes for g in got)
@@ -212,7 +219,7 @@ def run_shuffle_vectorized(
         _abort(*bad, "global")
 
     # ---- global stage ------------------------------------------------------
-    parts_by_src = {w: partition(state[w], dsts, args.part_fn) for w in srcs}
+    parts_by_src = {w: partition(state[w], dsts, eff_part) for w in srcs}
 
     if args.template_id in ("vanilla_push", "network_aware"):
         # push: the sender pays the transfer
@@ -222,7 +229,8 @@ def run_shuffle_vectorized(
                 np.fromiter((topo.crossing_level(w, d) for d in dsts),
                             dtype=np.int64, count=len(dsts)),
                 np.fromiter((parts_by_src[w][d].nbytes for d in dsts),
-                            dtype=np.int64, count=len(dsts)))
+                            dtype=np.int64, count=len(dsts)),
+                dsts=np.asarray(dsts, dtype=np.int64))
         fetch_order = {d: srcs for d in dsts}
         charge_receiver = False
     elif args.template_id == "vanilla_pull":
@@ -243,8 +251,31 @@ def run_shuffle_vectorized(
                 np.fromiter((topo.crossing_level(s, d) for s in fetch_order[d]),
                             dtype=np.int64, count=len(got)),
                 np.fromiter((g.nbytes for g in got), dtype=np.int64,
-                            count=len(got)))
+                            count=len(got)),
+                dsts=np.full(len(got), d, dtype=np.int64))
         out[d] = _comb(args, ledger, d, got)
+
+    # ---- owner merge (rebalanced plans) ------------------------------------
+    if skew is not None:
+        # batched replay of templates.owner_merge: every sharer's forwarded
+        # rows come from its post-receiver buffer (removals across owners are
+        # disjoint key sets), then each owner combines [kept] + sharer rows in
+        # sorted-sharer order — row for row what the threaded stage does
+        merge = owner_merge_plan(skew, args.part_fn, args.dsts)
+        inbox: dict[int, list[Msgs]] = {}
+        for owner, (owned_keys, sharers) in merge.items():
+            got = []
+            for s in sharers:
+                mask = np.isin(out[s].keys, owned_keys)
+                rows = out[s].take(np.nonzero(mask)[0])
+                out[s] = out[s].take(np.nonzero(~mask)[0])
+                ledger.charge_transfer(s, topo.crossing_level(s, owner),
+                                       rows.nbytes, dst=owner)
+                got.append(rows)
+            inbox[owner] = got
+        for owner, got in inbox.items():
+            out[owner] = _comb(args, ledger, owner,
+                               Msgs.concat([out[owner]] + got))
 
     ledger.advance_epoch()                # shuffle completion is a barrier
     if rc is not None:

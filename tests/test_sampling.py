@@ -1,12 +1,14 @@
 """Sampling tests: partition-aware vs random (the Figure-5 phenomenon) plus
-hypothesis property tests on the estimator's invariants."""
+hypothesis property tests on the estimator's invariants, the empty-group
+fallback, and the Msgs.concat width fix."""
 import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
-from repro.core import (SUM, Msgs, estimate_reduction_ratio, group_of,
+from repro.core import (SUM, Msgs, estimate_reduction_ratio,
+                        estimate_reduction_ratio_with_fallback, group_of,
                         num_groups_for_rate, partition_aware_sample,
-                        random_sample, reduction_ratio)
+                        random_sample, reduction_ratio, sample_with_fallback)
 
 
 def zipf_msgs(n=20000, keys=200, alpha=0.9, seed=0, workers=8):
@@ -63,6 +65,104 @@ def test_group_of_consistency():
 
 
 # ---------------------------------------------------------------------------
+# Msgs.concat width propagation (the empty-batch byte-accounting fix)
+# ---------------------------------------------------------------------------
+
+def test_concat_preserves_width_when_all_inputs_empty():
+    assert Msgs.concat([Msgs.empty(width=4)]).width == 4
+    assert Msgs.concat([Msgs.empty(width=2), Msgs.empty(width=5)]).width == 5
+    assert Msgs.concat([None, Msgs.empty(width=3)]).width == 3
+    assert Msgs.concat([]).width == 1                       # nothing to preserve
+    # an empty wide result charges per column, like the batches it stands for
+    assert Msgs.concat([Msgs.empty(width=4)]).nbytes == 0
+    wide = Msgs(np.array([1, 2]), np.ones((2, 4)))
+    # ... and concats with real wide batches downstream instead of raising
+    again = Msgs.concat([Msgs.concat([Msgs.empty(width=4)]), wide])
+    assert again.width == 4 and again.n == 2
+
+
+def test_concat_nonempty_unchanged():
+    a = Msgs(np.array([1, 2]), np.ones((2, 3)))
+    b = Msgs(np.array([3]), np.full((1, 3), 2.0))
+    out = Msgs.concat([a, Msgs.empty(width=3), b])
+    assert out.n == 3 and out.width == 3
+    np.testing.assert_array_equal(out.keys, [1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# empty-pooled-sample fallback (bounded resampling of further hash groups)
+# ---------------------------------------------------------------------------
+
+def _msgs_missing_primary_group(rate=0.25, max_seed=200):
+    """A workload whose keys all avoid the primary sampled group for some
+    seed: found deterministically by scanning seeds."""
+    keys = np.full(64, 17, dtype=np.int64)      # one key -> one group occupied
+    msgs = Msgs(keys, np.ones((64, 1)))
+    s = num_groups_for_rate(rate)
+    for seed in range(max_seed):
+        if partition_aware_sample(msgs, rate, seed=seed).n == 0:
+            return msgs, rate, seed, s
+    raise AssertionError("no seed misses the occupied group; widen the scan")
+
+
+def test_fallback_recovers_from_empty_primary_group():
+    msgs, rate, seed, s = _msgs_missing_primary_group()
+    # the old estimator: empty pooled sample -> r^=1.0, stage rejected
+    assert estimate_reduction_ratio(
+        [partition_aware_sample(msgs, rate, seed=seed)], SUM) == 1.0
+    # the fallback visits further groups until one holds the data
+    samples = sample_with_fallback(msgs, rate, seed=seed)
+    assert len(samples) > 1 and samples[0].n == 0 and samples[-1].n > 0
+    r, attempts = estimate_reduction_ratio_with_fallback([samples], SUM)
+    assert attempts == len(samples) - 1 >= 1
+    assert r == pytest.approx(reduction_ratio(msgs, SUM))   # 1/64: heavy dup
+
+
+def test_fallback_noop_when_primary_group_holds_data():
+    shards = zipf_msgs(n=20000, keys=2000, workers=4)
+    lists = [sample_with_fallback(m, 0.05, seed=3) for m in shards]
+    assert all(len(sl) == 1 for sl in lists)                # no retries drawn
+    r, attempts = estimate_reduction_ratio_with_fallback(lists, SUM)
+    assert attempts == 0
+    assert r == estimate_reduction_ratio([sl[0] for sl in lists], SUM)
+
+
+def test_fallback_gives_up_after_bounded_retries():
+    empty = Msgs.empty()
+    samples = sample_with_fallback(empty, 0.25, seed=0, max_retries=3)
+    assert len(samples) == 4 and all(s.n == 0 for s in samples)
+    r, attempts = estimate_reduction_ratio_with_fallback([samples], SUM)
+    assert r == 1.0 and attempts == 3
+
+
+def test_fallback_recorded_in_eff_cost_decision():
+    """End to end: a shuffle whose primary sampled group is empty still finds
+    the beneficial combine, and the verdict records the fallback attempts."""
+    from repro.core import TeShuService, datacenter
+    topo = datacenter(2, 2, 2, oversubscription=10.0)
+    nw = topo.num_workers
+    # 64 distinct keys shared by every worker: locally unique (the template's
+    # local combine removes nothing), fully duplicated across workers — but at
+    # rate 0.02 they occupy only a fraction of the 50 hash groups, so a seed
+    # whose primary group is empty exists and is found deterministically
+    keys = np.arange(100, 164, dtype=np.int64)
+    rate = 0.02
+    msgs = Msgs(keys, np.ones((keys.size, 1)))
+    seed = next(sd for sd in range(300)
+                if partition_aware_sample(msgs, rate, seed=sd).n == 0)
+    bufs = {w: Msgs(keys.copy(), np.ones((keys.size, 8))) for w in range(nw)}
+    svc = TeShuService(topo)
+    # SAMP seeds with seed + shuffle_id (=1 on the service's first call)
+    res = svc.shuffle("network_aware", bufs, list(range(nw)), list(range(nw)),
+                      comb_fn=SUM, rate=rate, seed=seed - 1)
+    decisions = dict(res.decisions)
+    assert decisions and all(ec.sample_attempts >= 1
+                             for ec in decisions.values())
+    assert all(ec.beneficial for ec in decisions.values()), \
+        "empty primary group must not silently reject the combine stage"
+
+
+# ---------------------------------------------------------------------------
 # property-based tests (hypothesis)
 # ---------------------------------------------------------------------------
 
@@ -112,3 +212,67 @@ def test_estimator_unbiased_over_seeds(seed):
         [partition_aware_sample(m, 0.05, seed=seed) for m in shards], SUM)
     truth = reduction_ratio(Msgs.concat(shards), SUM)
     assert abs(est - truth) < 0.25
+
+
+@given(alpha=st.sampled_from([0.7, 0.9, 1.1]), seed=st.integers(0, 30))
+@settings(max_examples=40, deadline=None)
+def test_partition_aware_bias_property_on_skewed_keys(alpha, seed):
+    """Property (Figure 5, across skew exponents): on Zipf-skewed keys a
+    pooled multi-group partition-aware estimate tracks truth, while random
+    tuple sampling at the SAME total coverage stays biased upward.  Pooling
+    several complete groups is the fair comparison at heavy skew: a single
+    group's ratio has high *variance* there (one mega-hot key dominates its
+    group), but the bias is zero — random sampling's error is structural and
+    no amount of extra coverage at the same rate removes it."""
+    rate, groups = 0.01, 5
+    shards = zipf_msgs(n=100000, keys=20000, alpha=alpha, seed=seed % 7,
+                       workers=4)
+    truth = reduction_ratio(Msgs.concat(shards), SUM)
+    pooled = [partition_aware_sample(m, rate, seed=seed, attempt=a)
+              for m in shards for a in range(groups)]
+    est_pa = estimate_reduction_ratio(pooled, SUM)
+    est_rand = reduction_ratio(Msgs.concat(
+        [random_sample(m, rate * groups, seed=seed) for m in shards]), SUM)
+    assert abs(est_pa - truth) < 0.25, (est_pa, truth)
+    assert est_rand > truth + 0.08, (est_rand, truth)
+
+
+@given(keys=st.lists(st.integers(-2**40, 2**40), min_size=1, max_size=200),
+       rate=st.sampled_from([0.5, 0.25, 0.1]),
+       seed=st.integers(0, 20))
+@settings(max_examples=60, deadline=None)
+def test_fallback_estimate_properties(keys, rate, seed):
+    """Properties of the empty-group fallback: the sample list is empty
+    batches followed by at most one non-empty one; each attempt is closed
+    over a single group; and on non-empty data the estimator either uses a
+    complete group (ratio in (0, 1], exact |unique|/|n| of that group for
+    SUM) or exhausts its bounded retries."""
+    ks = np.asarray(keys, np.int64)
+    msgs = Msgs(ks, np.ones((len(keys), 1)))
+    samples = sample_with_fallback(msgs, rate, seed=seed)
+    s = num_groups_for_rate(rate)
+    # primary + bounded retries, never revisiting a group (<= s - 1 retries)
+    assert 1 <= len(samples) <= 1 + min(3, s - 1)
+    assert all(b.n == 0 for b in samples[:-1])
+    for b in samples:
+        if b.n:
+            groups = np.unique(group_of(b.keys, s))
+            assert groups.size == 1          # closure: one whole group
+    r, attempts = estimate_reduction_ratio_with_fallback([samples], SUM)
+    assert 0 < r <= 1.0
+    assert attempts == len(samples) - 1
+    if samples[-1].n:
+        assert r == pytest.approx(
+            np.unique(samples[-1].keys).size / samples[-1].n)
+
+
+@given(widths=st.lists(st.integers(1, 8), min_size=1, max_size=5))
+@settings(max_examples=40, deadline=None)
+def test_concat_width_property(widths):
+    """Property: concat of empties carries the widest input; appending one
+    real batch of that width always concatenates cleanly."""
+    empties = [Msgs.empty(width=w) for w in widths]
+    out = Msgs.concat(empties)
+    assert out.n == 0 and out.width == max(widths)
+    real = Msgs(np.arange(3), np.ones((3, max(widths))))
+    assert Msgs.concat([out, real]).n == 3

@@ -1,0 +1,411 @@
+"""Skew-aware template instantiation (ISSUE 3 acceptance).
+
+The contract: on a Zipf(1.2) workload, ``balance="auto"`` cuts the max
+per-destination received bytes by >= 2x vs ``balance="off"`` (asserted via the
+CostLedger's per-destination accounting) while keeping outputs correct; a
+uniform workload triggers no rebalance and stays byte-identical to the
+``balance="off"`` path on both executors; rebalanced plans hit the cache on
+repeat calls (bitwise-identical replays, threaded and vectorized); and a
+worker kill is survived via plan repair that re-targets hot-key splits onto
+surviving destinations.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (HASH_PART, SUM, HeavyHitterSketch, Msgs, PlanCache,
+                        TeShuService, datacenter, dst_load_imbalance,
+                        local_skew_stats, merge_skew_stats, owner_merge_plan,
+                        plan_rebalance, scatter_part_fn, skew_bucket,
+                        stats_signature)
+
+TOPO = lambda: datacenter(4, 2, 1)          # 8 workers, server < rack hierarchy
+WORKERS = list(range(8))
+
+
+def zipf_bufs(nw=8, n_per=8000, keys=500, alpha=1.2, seed=0, identical=False):
+    """Zipf(alpha) keyed buffers; ``identical=True`` gives every worker the
+    same key multiset (participant-subset signatures then match exactly,
+    which is what the lost-worker repair path keys on)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, keys + 1, dtype=np.float64)
+    w = ranks ** -alpha
+    cdf = np.cumsum(w) / np.sum(w)
+    if identical:
+        ks = np.searchsorted(cdf, rng.random(n_per)).astype(np.int64)
+        return {wid: Msgs(ks.copy(), rng.random((n_per, 1)))
+                for wid in range(nw)}
+    return {wid: Msgs(np.searchsorted(cdf, rng.random(n_per)).astype(np.int64),
+                      rng.random((n_per, 1)))
+            for wid in range(nw)}
+
+
+def uniform_bufs(nw=8, n_per=8000, keys=5000, seed=0):
+    rng = np.random.default_rng(seed)
+    return {wid: Msgs(rng.integers(0, keys, n_per).astype(np.int64),
+                      rng.random((n_per, 1)))
+            for wid in range(nw)}
+
+
+def _copy(bufs):
+    return {w: m.copy() for w, m in bufs.items()}
+
+
+def _sorted_eq(a: Msgs, b: Msgs):
+    oa, ob = np.argsort(a.keys), np.argsort(b.keys)
+    np.testing.assert_array_equal(a.keys[oa], b.keys[ob])
+    np.testing.assert_array_equal(a.vals[oa], b.vals[ob])   # bit-identical
+
+
+def _check_totals(inputs: dict[int, Msgs], res):
+    """Global invariant of a combined shuffle: pooling every output equals
+    combining every input, and no key lands on two destinations."""
+    ref = SUM(Msgs.concat(list(inputs.values())))
+    allout = Msgs.concat([res.bufs[w] for w in sorted(res.bufs)])
+    assert allout.n == np.unique(allout.keys).size     # owner-merge completed
+    got = SUM(allout)
+    oa, ob = np.argsort(ref.keys), np.argsort(got.keys)
+    np.testing.assert_array_equal(ref.keys[oa], got.keys[ob])
+    np.testing.assert_allclose(ref.vals[oa], got.vals[ob], rtol=1e-12)
+
+
+def _max_recv(res, dsts):
+    recv = res.stats["recv_bytes_per_worker"]
+    return max(recv.get(d, 0) for d in dsts)
+
+
+# ---------------------------------------------------------------------------
+# sketch + decision units
+# ---------------------------------------------------------------------------
+
+def test_sketch_exact_under_capacity_and_bounded_over():
+    keys = np.repeat(np.arange(20, dtype=np.int64), np.arange(1, 21))
+    sk = HeavyHitterSketch.from_keys(keys, capacity=64)
+    assert sk.total == keys.size and sk.error_bound == 0
+    assert dict(sk.top()) == {k: k + 1 for k in range(20)}     # exact
+    tight = HeavyHitterSketch.from_keys(keys, capacity=4)
+    assert len(tight) <= 4
+    assert tight.error_bound <= keys.size // 4                 # MG guarantee
+    # the heaviest key survives compression and is undercounted <= error_bound
+    top_key, top_cnt = tight.top(1)[0]
+    assert top_key == 19 and 20 - tight.error_bound <= top_cnt <= 20
+
+
+def test_sketch_merge_preserves_heavy_hitters():
+    rng = np.random.default_rng(0)
+    shards = [np.concatenate([np.full(500, 7, dtype=np.int64),
+                              rng.integers(100, 5000, 2000)]) for _ in range(4)]
+    merged = HeavyHitterSketch.from_keys(shards[0], capacity=32)
+    for s in shards[1:]:
+        merged = merged.merge(HeavyHitterSketch.from_keys(s, capacity=32))
+    assert merged.total == sum(s.size for s in shards)
+    top_key, top_cnt = merged.top(1)[0]
+    assert top_key == 7
+    assert 2000 - merged.error_bound <= top_cnt <= 2000
+
+
+def test_rebalance_triggers_on_skew_not_on_uniform():
+    for bufs, expect in ((zipf_bufs(), True), (uniform_bufs(), False)):
+        stats = [local_skew_stats(m, HASH_PART, 8) for m in bufs.values()]
+        sketch, loads = merge_skew_stats(stats)
+        dec = plan_rebalance(sketch, loads, HASH_PART, 8)
+        assert dec.triggered == expect, (expect, dec.est_imbalance)
+        if expect:
+            assert dec.est_balanced_imbalance < dec.est_imbalance / 1.5
+            # every hot key is split across >= 2 distinct in-range slots
+            for k, share in dec.splits:
+                assert len(share) >= 2 and len(set(share)) == len(share)
+                assert all(0 <= s < 8 for s in share)
+
+
+def test_rebalance_deterministic_across_merge_orders():
+    bufs = zipf_bufs(seed=5)
+    stats = [local_skew_stats(m, HASH_PART, 8) for m in bufs.values()]
+    s1, l1 = merge_skew_stats(stats)
+    s2, l2 = merge_skew_stats(list(reversed(stats)))
+    d1 = plan_rebalance(s1, l1, HASH_PART, 8)
+    d2 = plan_rebalance(s2, l2, HASH_PART, 8)
+    assert d1.splits == d2.splits
+
+
+def test_scatter_part_fn_cycles_hot_keys_and_passes_through():
+    bufs = zipf_bufs(seed=1)
+    stats = [local_skew_stats(m, HASH_PART, 8) for m in bufs.values()]
+    dec = plan_rebalance(*merge_skew_stats(stats), HASH_PART, 8)
+    assert dec.triggered
+    fn = scatter_part_fn(HASH_PART, dec)
+    keys = bufs[0].keys
+    base = HASH_PART.assign(keys, 8)
+    out = fn.assign(keys, 8)
+    hot = dec.split_keys()
+    cold = ~np.isin(keys, hot)
+    np.testing.assert_array_equal(out[cold], base[cold])       # cold untouched
+    for k, share in dec.splits:
+        idx = np.nonzero(keys == k)[0]
+        if idx.size:
+            want = np.asarray(share)[np.arange(idx.size) % len(share)]
+            np.testing.assert_array_equal(out[idx], want)      # cycle, in order
+    # a different slot-space width (a local exchange) is never scattered
+    np.testing.assert_array_equal(fn.assign(keys, 4), HASH_PART.assign(keys, 4))
+
+
+def test_owner_merge_plan_owners_and_sharers_disjoint():
+    bufs = zipf_bufs(seed=2)
+    stats = [local_skew_stats(m, HASH_PART, 8) for m in bufs.values()]
+    dec = plan_rebalance(*merge_skew_stats(stats), HASH_PART, 8)
+    merge = owner_merge_plan(dec, HASH_PART, tuple(WORKERS))
+    assert merge
+    seen = set()
+    for owner, (okeys, sharers) in merge.items():
+        assert owner not in sharers
+        assert not (set(okeys.tolist()) & seen)                # one owner per key
+        seen |= set(okeys.tolist())
+    assert seen == set(dec.split_keys().tolist())
+
+
+# ---------------------------------------------------------------------------
+# signature: skewed vs uniform epochs never alias
+# ---------------------------------------------------------------------------
+
+def test_skew_bucket_separates_zipf_from_uniform():
+    assert skew_bucket(zipf_bufs()) > skew_bucket(uniform_bufs())
+    # flat distributions of different sizes all clamp to the floor bucket
+    assert skew_bucket(uniform_bufs(keys=500)) == skew_bucket(uniform_bufs(keys=50000))
+
+
+def test_signature_splits_on_balance_and_skew():
+    # same shape (counts, widths, key space), different skew: under auto the
+    # skew bucket separates them; off mode skips the extra hashing pass
+    rng = np.random.default_rng(0)
+    keys = 5000
+    u = uniform_bufs(keys=keys)
+    z = {w: Msgs(m.keys.copy(), m.vals.copy()) for w, m in u.items()}
+    for w, m in z.items():
+        m.keys[: m.n // 5] = keys - 1          # 20% of traffic on one key
+    assert stats_signature(z, HASH_PART, SUM, 0.05, balance="auto") != \
+        stats_signature(u, HASH_PART, SUM, 0.05, balance="auto")
+    assert stats_signature(z, HASH_PART, SUM, 0.05) == \
+        stats_signature(u, HASH_PART, SUM, 0.05)   # off: no skew component
+    assert stats_signature(z, HASH_PART, SUM, 0.05, balance="auto") != \
+        stats_signature(z, HASH_PART, SUM, 0.05, balance="off")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: >= 2x tail-load reduction, correctness, cache, both executors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execution", ["auto", "threaded"])
+def test_zipf_auto_halves_max_received_bytes(execution):
+    bufs = zipf_bufs()
+    results = {}
+    for balance in ("off", "auto"):
+        svc = TeShuService(TOPO(), balance=balance)
+        res = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                          comb_fn=SUM, rate=0.05, execution=execution)
+        _check_totals(bufs, res)
+        results[balance] = res
+    assert "rebalance" not in dict(results["off"].decisions)
+    dec = dict(results["auto"].decisions)["rebalance"]
+    assert dec.triggered and dec.est_imbalance > 2.0
+    off_max = _max_recv(results["off"], WORKERS)
+    auto_max = _max_recv(results["auto"], WORKERS)
+    assert off_max >= 2.0 * auto_max, (off_max, auto_max)
+    assert dst_load_imbalance(results["auto"].stats, WORKERS) < 1.3
+
+
+def test_uniform_auto_is_byte_identical_to_off():
+    bufs = uniform_bufs()
+    outs = {}
+    for balance in ("off", "auto"):
+        for execution in ("auto", "threaded"):
+            svc = TeShuService(TOPO(), balance=balance)
+            fresh = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                                comb_fn=SUM, rate=0.05, execution=execution)
+            hit = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                              comb_fn=SUM, rate=0.05, execution=execution)
+            assert not fresh.cached and hit.cached
+            outs[(balance, execution)] = (fresh, hit)
+    dec = dict(outs[("auto", "auto")][0].decisions)["rebalance"]
+    assert not dec.triggered                       # estimate kept, no splits
+    ref_fresh, ref_hit = outs[("off", "threaded")]
+    for (balance, _), (fresh, hit) in outs.items():
+        for w in ref_fresh.bufs:                   # outputs identical, always
+            _sorted_eq(ref_fresh.bufs[w], fresh.bufs[w])
+            _sorted_eq(ref_fresh.bufs[w], hit.bufs[w])
+        # the fresh run's only extra traffic vs balance=off is the sketch
+        # shipment, accounted as sampling overhead (Figure-6 semantics) ...
+        data_bytes = fresh.stats["total_bytes"] - fresh.stats["sample_bytes"]
+        assert data_bytes == \
+            ref_fresh.stats["total_bytes"] - ref_fresh.stats["sample_bytes"]
+        assert (fresh.stats["sample_bytes"] > 0) == (balance == "auto")
+        # ... and replays skip the gather: byte-identical ledgers throughout
+        assert hit.stats["bytes_per_level"] == ref_hit.stats["bytes_per_level"]
+        assert hit.stats["total_bytes"] == ref_hit.stats["total_bytes"]
+        assert hit.stats["sample_bytes"] == 0
+
+
+@pytest.mark.parametrize("template", ["vanilla_push", "vanilla_pull",
+                                      "coordinated", "bruck", "network_aware"])
+def test_rebalanced_plan_cached_and_replays_identically(template):
+    bufs = zipf_bufs(n_per=4000, seed=3)
+    svc = TeShuService(TOPO(), balance="auto")
+    fresh = svc.shuffle(template, _copy(bufs), WORKERS, WORKERS,
+                        comb_fn=SUM, rate=0.05)
+    assert not fresh.cached
+    assert dict(fresh.decisions)["rebalance"].triggered
+    vec = svc.shuffle(template, _copy(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM, rate=0.05)
+    thr = svc.shuffle(template, _copy(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM, rate=0.05, execution="threaded")
+    assert vec.cached and thr.cached
+    if template != "bruck":
+        assert vec.vectorized
+    st = svc.cache_stats()
+    assert st["misses"] == 1 and st["hits"] == 2 and st["invalidations"] == 0
+    # replays report the frozen rebalance verdict and stay bitwise identical
+    assert dict(vec.decisions)["rebalance"].splits == \
+        dict(fresh.decisions)["rebalance"].splits
+    for w in fresh.bufs:
+        _sorted_eq(fresh.bufs[w], vec.bufs[w])
+        _sorted_eq(fresh.bufs[w], thr.bufs[w])
+    assert vec.stats["recv_bytes_per_worker"] == thr.stats["recv_bytes_per_worker"]
+    _check_totals(bufs, vec)
+
+
+def test_skew_threshold_is_part_of_the_plan_key():
+    """A plan frozen under one rebalance trigger point must not serve a call
+    that asked for a different one."""
+    bufs = zipf_bufs(n_per=4000, seed=6)       # est_imbalance ~2.5
+    svc = TeShuService(TOPO(), balance="auto")
+    lax = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM, rate=0.05, skew_threshold=10.0)
+    assert not dict(lax.decisions)["rebalance"].triggered
+    strict = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                         comb_fn=SUM, rate=0.05, skew_threshold=1.2)
+    assert not strict.cached                   # different threshold -> miss
+    assert dict(strict.decisions)["rebalance"].triggered
+    assert svc.cache_stats()["hits"] == 0
+
+
+def test_non_rebalanceable_template_resolves_to_off_keying():
+    """two_level can never carry a skew decision, so balance=auto must not
+    pay the skew-bucket pass or split its plans across skew epochs: the same
+    workload hits the same plan whichever balance mode the caller asked for."""
+    topo = datacenter(4, 2, 2)
+    workers = list(range(16))
+    bufs = zipf_bufs(nw=16, n_per=2000, seed=9)
+    svc = TeShuService(topo)
+    first = svc.shuffle("two_level", _copy(bufs), workers, workers,
+                        comb_fn=SUM, rate=0.05, balance="auto")
+    assert not first.cached
+    second = svc.shuffle("two_level", _copy(bufs), workers, workers,
+                         comb_fn=SUM, rate=0.05, balance="off")
+    assert second.cached                       # same key either way
+
+
+def test_two_level_declines_rebalance_but_stays_correct():
+    topo = datacenter(4, 2, 2)                 # 16 workers: square grid
+    workers = list(range(16))
+    bufs = zipf_bufs(nw=16, n_per=3000, seed=2)
+    svc = TeShuService(topo, balance="auto")
+    fresh = svc.shuffle("two_level", _copy(bufs), workers, workers,
+                        comb_fn=SUM, rate=0.05)
+    assert "rebalance" not in dict(fresh.decisions)
+    hit = svc.shuffle("two_level", _copy(bufs), workers, workers,
+                      comb_fn=SUM, rate=0.05)
+    assert hit.cached
+    for w in fresh.bufs:
+        _sorted_eq(fresh.bufs[w], hit.bufs[w])
+
+
+def test_load_drift_invalidates_stale_plan():
+    """A hot key appearing under a plan compiled on near-uniform data (same
+    signature bucket) drifts the observed per-destination loads -> the plan is
+    dropped and the next call re-instantiates with splits."""
+    uniform = uniform_bufs(n_per=4000, keys=3000, seed=1)
+    hotted = {}
+    rng = np.random.default_rng(1)
+    for w in range(8):
+        ks = rng.integers(0, 3000, 4000).astype(np.int64)
+        ks[:400] = 7                          # ~10% of traffic on one key
+        hotted[w] = Msgs(ks, rng.random((4000, 1)))
+    assert stats_signature(uniform, HASH_PART, SUM, 0.05, balance="auto") == \
+        stats_signature(hotted, HASH_PART, SUM, 0.05, balance="auto")
+    svc = TeShuService(TOPO(), balance="auto")
+    first = svc.shuffle("vanilla_push", _copy(uniform), WORKERS, WORKERS,
+                        comb_fn=SUM, rate=0.05)
+    assert not dict(first.decisions)["rebalance"].triggered
+    drifted = svc.shuffle("vanilla_push", _copy(hotted), WORKERS, WORKERS,
+                          comb_fn=SUM, rate=0.05)
+    assert drifted.cached                     # same key -> hit ...
+    assert svc.cache_stats()["invalidations"] == 1   # ... but loads drifted
+    again = svc.shuffle("vanilla_push", _copy(hotted), WORKERS, WORKERS,
+                        comb_fn=SUM, rate=0.05)
+    assert not again.cached
+    assert dict(again.decisions)["rebalance"].triggered
+
+
+def test_steady_zipf_replays_do_not_drift():
+    svc = TeShuService(TOPO(), balance="auto")
+    bufs = zipf_bufs(n_per=4000, seed=4)
+    svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                comb_fn=SUM, rate=0.05)
+    for seed in (5, 6, 7):                    # same distribution, fresh draws
+        more = zipf_bufs(n_per=4000, seed=seed)
+        svc.shuffle("vanilla_push", _copy(more), WORKERS, WORKERS,
+                    comb_fn=SUM, rate=0.05)
+    st = svc.cache_stats()
+    assert st["invalidations"] == 0 and st["hits"] == 3
+
+
+# ---------------------------------------------------------------------------
+# resilience: worker kill -> plan repair re-targets the splits
+# ---------------------------------------------------------------------------
+
+def test_worker_kill_survived_via_retargeted_repair():
+    bufs = zipf_bufs(identical=True, n_per=6000)
+    cache = PlanCache()
+    svc = TeShuService(TOPO(), plan_cache=cache, balance="auto",
+                       resilience="recover")
+    full = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                       comb_fn=SUM, rate=0.05)
+    assert dict(full.decisions)["rebalance"].triggered
+
+    svc.fail_worker(3)
+    survivors = [w for w in WORKERS if w != 3]
+    sub = {w: bufs[w].copy() for w in survivors}
+    res = svc.shuffle("vanilla_push", sub, survivors, survivors,
+                      comb_fn=SUM, rate=0.05)
+    assert res.repaired and res.cached
+    assert cache.stats()["repairs"] == 1
+    dec = dict(res.decisions)["rebalance"]
+    assert dec.triggered
+    # every split share and owner is a surviving destination
+    touched = {survivors[s] for _, share in dec.splits for s in share}
+    owners = set(owner_merge_plan(dec, HASH_PART, tuple(survivors)))
+    assert 3 not in touched and 3 not in owners
+    _check_totals(sub, res)
+    # the SAME degraded scenario again is a plain cache hit, no second repair
+    again = svc.shuffle("vanilla_push", _copy(sub), survivors, survivors,
+                        comb_fn=SUM, rate=0.05)
+    assert again.cached and not again.repaired
+    assert cache.stats()["repairs"] == 1
+    for w in res.bufs:
+        _sorted_eq(res.bufs[w], again.bufs[w])
+
+
+def test_mid_shuffle_kill_recovers_on_rebalanced_plan():
+    """A fault injected mid-shuffle under balance=auto: the recovery retry
+    replays the frozen rebalance and still produces correct totals."""
+    bufs = zipf_bufs(n_per=3000, seed=8)
+    svc = TeShuService(TOPO(), balance="auto", resilience="recover")
+    warm = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                       comb_fn=SUM, rate=0.05)
+    assert dict(warm.decisions)["rebalance"].triggered
+    svc.inject_fault(5, after_stage=-1)
+    res = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM, rate=0.05)
+    svc.clear_fault(5)
+    assert res.attempts > 1
+    _check_totals(bufs, res)
+    for w in warm.bufs:
+        _sorted_eq(warm.bufs[w], res.bufs[w])
