@@ -1,7 +1,9 @@
 """Table 3: template expressiveness — lines of TeShu template code per shuffle
 algorithm, plus a byte/time profile of each template on a common workload, plus
-the plan-cache / vectorization benchmark (beyond-paper: repeated shuffles) and
-the skew-rebalance benchmark (``BENCH_skew.json``, machine-readable)."""
+the plan-cache / vectorization benchmark (beyond-paper: repeated shuffles),
+the skew-rebalance benchmark (``BENCH_skew.json``, machine-readable) and the
+streaming benchmark (``BENCH_streaming.json``: barrier vs chunk-pipelined
+modelled time on both executors)."""
 from __future__ import annotations
 
 import argparse
@@ -192,22 +194,120 @@ def skew_profile(iters: int = 4, *, smoke: bool = False,
     return out
 
 
+def streaming_profile(iters: int = 3, *, smoke: bool = False,
+                      json_path: str | None = None) -> CsvOut:
+    """Barrier vs chunk-pipelined execution, both executors.
+
+    Workload: every worker holds the same key pool permuted — no intra-worker
+    dedup (the exchanges stay data-heavy) but heavy cross-worker duplication
+    (hierarchical combining stays beneficial), i.e. the regime where both the
+    multi-stage decisions *and* the transfer/combine overlap matter.  The
+    perf-trajectory quantity is ``modelled_ms``: the pipeline bound
+    ``max(X, C) + min(X, C)/n`` per streamed sub-epoch vs the BSP sum — plus
+    the modelled speedup and wall time.  Outputs are asserted byte-identical
+    between the two execution models before anything is reported.
+
+    When ``json_path`` is set the rows are also written machine-readable
+    (``BENCH_streaming.json``): one row per (template, executor, streaming),
+    consumed by the CI smoke job, which gates on pipelined <= barrier for
+    every streamable template and strictly below on the multi-stage one.
+    """
+    out = CsvOut("streaming_profile",
+                 ["template", "executor", "streaming", "streamed", "chunks",
+                  "modelled_ms", "speedup", "wall_ms", "total_mb"])
+    topo = datacenter(4, 2, 2, oversubscription=8.0)
+    nw = topo.num_workers
+    workers = list(range(nw))
+    # smoke stays data-dominated: each streamed sub-epoch pays one fixed
+    # level latency, so the pipeline win needs per-stage data time >> 10us
+    n_per = 15_000 if smoke else 30_000
+    loops = 2 if smoke else iters
+    chunk_bytes = 32 * 1024 if smoke else 64 * 1024
+    rng = np.random.default_rng(3)
+    pool = np.arange(n_per)
+    base = {w: Msgs(rng.permutation(pool), rng.random((n_per, 1)))
+            for w in workers}
+    rows = []
+    for tid in ("vanilla_push", "coordinated", "network_aware"):
+        ref = None
+        for executor in ("threaded", "auto"):
+            for streaming in ("off", "auto"):
+                svc = TeShuService(topo, execution=executor,
+                                   streaming=streaming, chunk_bytes=chunk_bytes)
+
+                def one():
+                    bufs = {w: m.copy() for w, m in base.items()}
+                    t0 = time.perf_counter()
+                    res = svc.shuffle(tid, bufs, workers, workers,
+                                      comb_fn=SUM, rate=0.02)
+                    return time.perf_counter() - t0, res
+
+                one()                      # warm: compiles (and caches) the plan
+                svc.reset_stats()
+                runs = [one() for _ in range(loops)]
+                _, last = runs[-1]
+                if ref is None:
+                    ref = last.bufs
+                else:                      # byte-identical across all modes
+                    for d in ref:
+                        a, b = ref[d], last.bufs[d]
+                        assert np.array_equal(a.keys, b.keys)
+                        assert np.array_equal(a.vals, b.vals)
+                st = svc.stats()
+                row = dict(
+                    template=tid, executor=executor, streaming=streaming,
+                    streamed=bool(last.streamed),
+                    chunks=(last.stats["total_bytes"] // chunk_bytes),
+                    modelled_ms=st["modelled_time_s"] / loops * 1e3,
+                    speedup=1.0,
+                    wall_ms=float(np.median([t for t, _ in runs])) * 1e3,
+                    total_mb=st["total_bytes"] / loops / 1e6)
+                rows.append(row)
+        for executor in ("threaded", "auto"):
+            bar = next(r for r in rows
+                       if (r["template"], r["executor"],
+                           r["streaming"]) == (tid, executor, "off"))
+            pipe = next(r for r in rows
+                        if (r["template"], r["executor"],
+                            r["streaming"]) == (tid, executor, "auto"))
+            pipe["speedup"] = bar["modelled_ms"] / max(pipe["modelled_ms"],
+                                                       1e-12)
+    for row in rows:
+        out.add(**row)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"meta": {"bench": "streaming_profile", "workers": nw,
+                                "n_per_worker": n_per, "iters": loops,
+                                "chunk_bytes": chunk_bytes, "smoke": smoke},
+                       "rows": rows}, f, indent=2)
+            f.write("\n")
+    return out
+
+
 def run() -> list[CsvOut]:
     return [table3(), template_profile(), plan_cache_profile(),
-            skew_profile(json_path="BENCH_skew.json")]
+            skew_profile(json_path="BENCH_skew.json"),
+            streaming_profile(json_path="BENCH_streaming.json")]
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--skew-only", action="store_true",
                     help="run only the skew benchmark")
+    ap.add_argument("--streaming-only", action="store_true",
+                    help="run only the streaming benchmark")
     ap.add_argument("--smoke", action="store_true",
                     help="small-scale run (CI)")
     ap.add_argument("--skew-json", default="BENCH_skew.json",
                     help="path for the machine-readable skew output")
+    ap.add_argument("--streaming-json", default="BENCH_streaming.json",
+                    help="path for the machine-readable streaming output")
     args = ap.parse_args()
     if args.skew_only:
         skew_profile(smoke=args.smoke, json_path=args.skew_json).emit()
+    elif args.streaming_only:
+        streaming_profile(smoke=args.smoke,
+                          json_path=args.streaming_json).emit()
     else:
         for t in run():
             t.emit()

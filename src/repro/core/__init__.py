@@ -7,11 +7,12 @@ from .messages import (COMBINERS, HASH_PART, MAX, MIN, SUM, Combiner, Msgs, Part
                        partition, range_part, splitmix64)
 from .plancache import (CompiledPlan, LevelDecision, PlanCache, compile_plan,
                         plan_key, skew_bucket, stats_signature)
-from .primitives import (CostLedger, FaultInjection, LocalCluster, ShuffleAborted,
-                         ShuffleArgs, WorkerContext)
+from .primitives import (CostLedger, EndOfStream, FaultInjection, LocalCluster,
+                         ShuffleAborted, ShuffleArgs, WorkerContext)
 from .resilience import (CheckpointStore, FailureDetector, FailureReport,
                          RecoveryContext, RecoveryCoordinator, SpeculationPolicy,
-                         SpeculativeTask, consistent_resume_stages, repair_plan,
+                         SpeculativeTask, StreamCheckpoint,
+                         consistent_resume_stages, repair_plan,
                          try_repair)
 from .sampling import (estimate_reduction_ratio,
                        estimate_reduction_ratio_with_fallback, group_of,
@@ -19,8 +20,12 @@ from .sampling import (estimate_reduction_ratio,
                        random_sample, reduction_ratio, sample_with_fallback)
 from .service import TeShuService, dst_load_imbalance
 from .skew import (DEFAULT_SKEW_THRESHOLD, HeavyHitterSketch, LocalSkewStats,
-                   SkewDecision, imbalance, local_skew_stats, merge_skew_stats,
-                   owner_merge_plan, plan_rebalance, scatter_part_fn)
+                   MAX_SKETCH_CAPACITY, MIN_SKETCH_CAPACITY, SkewDecision,
+                   adaptive_sketch_capacity, imbalance, local_skew_stats,
+                   merge_skew_stats, owner_merge_plan, plan_rebalance,
+                   scatter_part_fn)
+from .streaming import (DEFAULT_CHUNK_BYTES, DEFAULT_MAX_INFLIGHT, ChunkPlan,
+                        StreamSession)
 from .templates import (TEMPLATES, ShuffleResult, ShuffleTemplate, register_template,
                         run_shuffle, template_loc)
 from .topology import (NetworkTopology, Level, datacenter, degrade_links, fat_tree,
@@ -36,16 +41,20 @@ __all__ = [
     "COMBINERS", "HASH_PART", "MAX", "MIN", "SUM", "Combiner", "Msgs", "PartFn",
     "partition", "range_part", "splitmix64",
     "CompiledPlan", "LevelDecision", "PlanCache", "compile_plan", "plan_key",
-    "skew_bucket", "stats_signature", "CostLedger", "FaultInjection", "LocalCluster",
+    "skew_bucket", "stats_signature", "CostLedger", "EndOfStream",
+    "FaultInjection", "LocalCluster",
     "ShuffleAborted",
     "ShuffleArgs", "WorkerContext", "estimate_reduction_ratio",
     "estimate_reduction_ratio_with_fallback", "group_of",
     "num_groups_for_rate", "partition_aware_sample", "random_sample",
     "reduction_ratio", "sample_with_fallback",
     "DEFAULT_SKEW_THRESHOLD", "HeavyHitterSketch", "LocalSkewStats",
-    "SkewDecision", "imbalance", "local_skew_stats", "merge_skew_stats",
+    "MAX_SKETCH_CAPACITY", "MIN_SKETCH_CAPACITY",
+    "SkewDecision", "adaptive_sketch_capacity", "imbalance",
+    "local_skew_stats", "merge_skew_stats",
     "owner_merge_plan", "plan_rebalance", "scatter_part_fn",
     "dst_load_imbalance",
+    "DEFAULT_CHUNK_BYTES", "DEFAULT_MAX_INFLIGHT", "ChunkPlan", "StreamSession",
     "TeShuService", "TEMPLATES", "ShuffleResult",
     "ShuffleTemplate", "register_template", "run_shuffle", "template_loc",
     "NetworkTopology", "Level", "datacenter", "degrade_links", "fat_tree",
@@ -54,5 +63,6 @@ __all__ = [
     "run_shuffle_vectorized", "set_comb_backend",
     "CheckpointStore", "FailureDetector", "FailureReport", "RecoveryContext",
     "RecoveryCoordinator", "SpeculationPolicy", "SpeculativeTask",
+    "StreamCheckpoint",
     "consistent_resume_stages", "repair_plan", "try_repair",
 ]

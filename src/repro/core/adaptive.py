@@ -35,6 +35,10 @@ class EffCost:
     sample_attempts: int = 0
     # ^ how many fallback hash groups the r̂ estimator had to visit because
     #   the primary pooled sample was empty (0 = primary group sufficed).
+    recv_imbalance: float = 1.0
+    # ^ the ledger-observed per-destination recv-byte imbalance (max/mean)
+    #   folded into the EFF term — 1.0 when the coupling is off (balance mode
+    #   "off") or no imbalance has been observed.
 
     @property
     def beneficial(self) -> bool:
@@ -62,6 +66,7 @@ def compute_eff_cost(
     group_bytes: int,
     group_size: int,
     combiner: Combiner | None,
+    recv_imbalance: float = 1.0,
 ) -> EffCost:
     """Evaluate one hierarchical stage from pooled partition-aware samples.
 
@@ -73,6 +78,11 @@ def compute_eff_cost(
     empty pooled primary group falls back to the next group instead of
     reporting the stage-rejecting ``r̂ = 1.0``, and the attempt count is
     recorded on the verdict.
+
+    ``recv_imbalance`` is the skew-aware EFF/COST coupling (balance mode
+    ``"auto"``): the ledger's observed per-destination recv-byte imbalance,
+    pricing the BSP tail a hot destination puts on the levels above — see
+    :func:`eff_cost_from_ratio`.
     """
     if combiner is None or group_size <= 1:
         return EffCost(eff=0.0, cost=0.0, reduction_ratio=1.0)
@@ -80,7 +90,8 @@ def compute_eff_cost(
         r_hat, attempts = estimate_reduction_ratio_with_fallback(samples, combiner)
     else:
         r_hat, attempts = estimate_reduction_ratio(samples, combiner), 0
-    ec = eff_cost_from_ratio(topology, level_name, r_hat, group_bytes, group_size)
+    ec = eff_cost_from_ratio(topology, level_name, r_hat, group_bytes, group_size,
+                             recv_imbalance=recv_imbalance)
     if attempts:
         ec = dataclasses.replace(ec, sample_attempts=attempts)
     return ec
@@ -92,6 +103,7 @@ def eff_cost_from_ratio(
     r_hat: float,
     group_bytes: float,
     group_size: int,
+    recv_imbalance: float = 1.0,
 ) -> EffCost:
     """The EFF/COST formula alone, decoupled from sampling.
 
@@ -99,13 +111,21 @@ def eff_cost_from_ratio(
     (with the ratio a cached plan already validated) — so a repaired verdict is
     exactly what instantiation would compute on the degraded topology, minus
     the sampling pass.
+
+    ``recv_imbalance`` folds destination skew into the BSP tail term of EFF:
+    epoch time is gated on the slowest worker, so when received bytes pile
+    ``imb ×`` the mean onto one hot destination, every byte a local combine
+    removes shortens that tail proportionally — the savings on the boundaries
+    above scale by the imbalance, making combining *more* beneficial exactly
+    when a hot receiver is the shuffle's critical path.
     """
     li = topology.level_index(level_name)
     lv = topology.levels[li]
     saved_per_byte = topology.cost_per_byte_above(li)
-    eff = (1.0 - r_hat) * group_bytes * saved_per_byte
+    imb = max(1.0, float(recv_imbalance))
+    eff = (1.0 - r_hat) * group_bytes * saved_per_byte * imb
     exchange_frac = 1.0 - 1.0 / group_size
     cost = (group_bytes * exchange_frac) / lv.bw_bytes_per_s \
         + group_bytes / lv.combine_bytes_per_s + lv.latency_s
     return EffCost(eff=eff, cost=cost, reduction_ratio=r_hat,
-                   group_bytes=float(group_bytes))
+                   group_bytes=float(group_bytes), recv_imbalance=imb)

@@ -103,20 +103,51 @@ class Combiner:
     name: str
     binary: Callable[[np.ndarray, np.ndarray], np.ndarray]
     ufunc: np.ufunc
+    order_sensitive: bool = False
+    # ^ does the reduction *tree shape* change the result bits?  Float addition
+    #   does (rounding differs by association), so SUM must reduce as an
+    #   explicit sequential left fold.  min/max return their first operand on
+    #   ties, so any order-preserving tree — including reduceat's pairwise
+    #   blocks — yields the leftmost element bit-for-bit and can keep the
+    #   fast reduceat path.
 
     def __call__(self, msgs: Msgs) -> Msgs:
-        """Combine all messages sharing a key into one message (sort + segment reduce)."""
+        """Combine all messages sharing a key into one message.
+
+        Stable sort by key, then a reduction over each key's rows that is
+        *decomposable across arbitrary buffer boundaries*: reducing a
+        concatenation equals reducing its pieces in order.  That property is
+        what lets the streaming executor combine chunk-by-chunk into a
+        running accumulator and stay *byte-identical* to the one-shot barrier
+        combine (the accumulator row sorts stably ahead of newly arrived rows
+        of the same key, so each incremental combine is an exact continuation
+        of the reduction).
+
+        Order-insensitive combiners (min/max) use ``reduceat``.  For
+        ``order_sensitive`` ones (SUM) — where ``reduceat``'s pairwise tree
+        would make the result depend on segment length — the segment is
+        seeded with its first row and the rest fold in element order via
+        ``ufunc.at`` (unbuffered, applied in sequence): an explicit
+        sequential left fold.
+        """
         if msgs.n == 0:
             return msgs
         order = np.argsort(msgs.keys, kind="stable")
         keys = msgs.keys[order]
         vals = msgs.vals[order]
         uniq, starts = np.unique(keys, return_index=True)
-        out = self.ufunc.reduceat(vals, starts, axis=0)
+        if not self.order_sensitive:
+            return Msgs(uniq, self.ufunc.reduceat(vals, starts, axis=0))
+        out = vals[starts].copy()          # fold seed: first row of each segment
+        if keys.size > uniq.size:
+            rest = np.ones(keys.size, dtype=bool)
+            rest[starts] = False
+            seg = np.searchsorted(uniq, keys[rest])
+            self.ufunc.at(out, seg, vals[rest])
         return Msgs(uniq, out)
 
 
-SUM = Combiner("sum", lambda a, b: a + b, np.add)
+SUM = Combiner("sum", lambda a, b: a + b, np.add, order_sensitive=True)
 MIN = Combiner("min", np.minimum, np.minimum)
 MAX = Combiner("max", np.maximum, np.maximum)
 

@@ -43,6 +43,7 @@ import numpy as np
 from .adaptive import EffCost, reduction_drift
 from .messages import Combiner, Msgs, PartFn, splitmix64
 from .skew import SkewDecision
+from .streaming import ChunkPlan
 from .topology import NetworkTopology
 
 # Levels whose observed reduction drifts by more than this (absolute) from the
@@ -103,6 +104,8 @@ def stats_signature(
     rate: float,
     balance: str = "off",
     skew_threshold: float | None = None,
+    streaming: str = "off",
+    stream: ChunkPlan | None = None,
 ) -> tuple:
     """Coarse sketch of a shuffle's decision inputs; equal sketch => reusable plan.
 
@@ -122,7 +125,13 @@ def stats_signature(
       computed under ``balance="auto"`` (it is what makes skew verdicts safe
       to replay); ``"off"`` plans carry no skew decision to alias, so the
       default mode skips the extra O(n) hashing pass entirely;
-    * the payload width — the wire format the cost model charges.
+    * the payload width — the wire format the cost model charges;
+    * the streaming mode and — under ``"auto"`` — the chunking-policy bucket
+      (:meth:`repro.core.streaming.ChunkPlan.signature`): a plan compiled as a
+      barrier carries no frozen ChunkPlan and must never serve a pipelined
+      caller (and vice versa), so the execution models never alias.  Byte
+      identity of the streamed path makes *within*-bucket aliasing safe —
+      any chunking of the same data yields the same bytes.
 
     The per-worker ``counts`` tuple stays last: plan repair's participant-subset
     matching (:func:`repro.core.resilience.repair.try_repair`) relies on every
@@ -146,6 +155,7 @@ def stats_signature(
         tuple(sorted(widths)),
         _log2_bucket(max_key),
         skew_bucket(bufs) if balance == "auto" else None,
+        stream.signature() if streaming == "auto" and stream is not None else None,
         counts,
     )
 
@@ -191,6 +201,10 @@ class CompiledPlan:
     baseline_imbalance: float | None = None
     # ^ max/mean per-destination received bytes measured on the plan's own
     #   fresh run — the load-drift baseline (ground truth, like baseline_r).
+    stream: ChunkPlan | None = None
+    # ^ frozen chunking policy when the plan was compiled from a streamed run:
+    #   replays (threaded or vectorized) chunk exactly like the run that froze
+    #   it.  None = the plan executes as a barrier.
 
     def level(self, name: str) -> LevelDecision | None:
         for ld in self.levels:
@@ -218,6 +232,7 @@ def compile_plan(
     decisions: Sequence[tuple[str, EffCost]],
     observed: dict[str, float] | None = None,
     baseline_imbalance: float | None = None,
+    stream: ChunkPlan | None = None,
 ) -> CompiledPlan:
     """Freeze a fresh run's instantiation into a replayable plan.
 
@@ -253,7 +268,7 @@ def compile_plan(
                                     baseline_r=baseline))
     return CompiledPlan(key=key, template_id=template_id, srcs=srcs,
                         dsts=tuple(dsts), levels=tuple(levels), skew=skew,
-                        baseline_imbalance=baseline_imbalance)
+                        baseline_imbalance=baseline_imbalance, stream=stream)
 
 
 # ---------------------------------------------------------------------------

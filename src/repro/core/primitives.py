@@ -46,6 +46,20 @@ class CostLedger:
     time sum at ``advance_epoch``.  ``snapshot()`` is therefore O(levels) no matter
     how many shuffles ran — it used to rescan the whole charge history, which made
     repeated shuffles (exactly what the plan cache optimizes) quadratic.
+
+    **Streamed (chunk-pipelined) epochs.**  A chunk-tagged charge (``chunk=`` on
+    the charge methods) lands in one of two per-worker *lanes* — transfer or
+    combine — instead of the serialized epoch cost.  When the stream's
+    end-of-stream rendezvous calls :meth:`end_stream`, the epoch closes under
+    the two-stage pipeline bound instead of the BSP sum::
+
+        t_w = max(X_w, C_w) + min(X_w, C_w) / nchunks_w
+
+    — with ``nchunks`` chunks in flight the non-dominant lane is hidden behind
+    the dominant one except for a single chunk's fill/drain ramp.  For one
+    chunk this degenerates to ``X + C`` (exactly the barrier epoch); for many
+    chunks it approaches ``max(X, C)``, which is how modelled time reflects
+    senders transferring chunk *c+1* while receivers combine chunk *c*.
     """
 
     def __init__(self, topology: NetworkTopology):
@@ -63,24 +77,38 @@ class CostLedger:
         # current (open) epoch: per-worker serialized cost + levels crossed
         self._cur_cost: dict[int, float] = collections.defaultdict(float)
         self._cur_levels: set[int] = set()
+        # current (open) streamed epoch: per-worker transfer/combine lanes,
+        # chunk depth, and the levels its transfers crossed
+        self._stream_xfer: dict[int, float] = {}
+        self._stream_comb: dict[int, float] = {}
+        self._stream_nchunks: dict[int, int] = {}
+        self._stream_levels: set[int] = set()
         self._closed_time = 0.0                              # folded epochs
 
     def charge_transfer(self, wid: int, level: int, nbytes: int, *, sample: bool = False,
-                        dst: int | None = None) -> None:
+                        dst: int | None = None, chunk: int | None = None) -> None:
         if level < 0 or nbytes == 0:
             return
         with self._lock:
             self._bytes_per_level[level] += nbytes
             self._total_bytes += nbytes
-            self._cur_cost[wid] += nbytes / self.topology.levels[level].bw_bytes_per_s
-            self._cur_levels.add(level)
+            cost = nbytes / self.topology.levels[level].bw_bytes_per_s
+            if chunk is None:
+                self._cur_cost[wid] += cost
+                self._cur_levels.add(level)
+            else:
+                self._stream_xfer[wid] = self._stream_xfer.get(wid, 0.0) + cost
+                self._stream_nchunks[wid] = max(self._stream_nchunks.get(wid, 0),
+                                                chunk + 1)
+                self._stream_levels.add(level)
             if sample:
                 self.sample_bytes += nbytes
             elif dst is not None:
                 self._recv_bytes[dst] = self._recv_bytes.get(dst, 0) + nbytes
 
     def charge_transfers(self, wid: int, levels: np.ndarray, nbytes: np.ndarray,
-                         *, sample: bool = False, dsts: np.ndarray | None = None) -> None:
+                         *, sample: bool = False, dsts: np.ndarray | None = None,
+                         chunk: int | None = None) -> None:
         """Batched charge for one worker: vectorized aggregation, one lock pass.
 
         The vectorized executor produces per-destination (level, bytes) arrays in
@@ -102,8 +130,14 @@ class CostLedger:
         with self._lock:
             self._bytes_per_level += per_level
             self._total_bytes += total
-            self._cur_cost[wid] += cost
-            self._cur_levels.update(int(l) for l in np.nonzero(per_level)[0])
+            if chunk is None:
+                self._cur_cost[wid] += cost
+                self._cur_levels.update(int(l) for l in np.nonzero(per_level)[0])
+            else:
+                self._stream_xfer[wid] = self._stream_xfer.get(wid, 0.0) + cost
+                self._stream_nchunks[wid] = max(self._stream_nchunks.get(wid, 0),
+                                                chunk + 1)
+                self._stream_levels.update(int(l) for l in np.nonzero(per_level)[0])
             if sample:
                 self.sample_bytes += total
             elif dsts is not None:
@@ -111,9 +145,26 @@ class CostLedger:
                     self._recv_bytes[int(d)] = (self._recv_bytes.get(int(d), 0)
                                                 + int(b))
 
-    def charge_combine(self, wid: int, nbytes: int) -> None:
+    def charge_combine(self, wid: int, nbytes: int, *, chunk: int | None = None) -> None:
+        cost = nbytes / self.topology.levels[0].combine_bytes_per_s
         with self._lock:
-            self._cur_cost[wid] += nbytes / self.topology.levels[0].combine_bytes_per_s
+            if chunk is None:
+                self._cur_cost[wid] += cost
+            else:
+                self._stream_comb[wid] = self._stream_comb.get(wid, 0.0) + cost
+                self._stream_nchunks[wid] = max(self._stream_nchunks.get(wid, 0),
+                                                chunk + 1)
+
+    def recv_imbalance(self, dsts: Sequence[int]) -> float:
+        """max/mean of received data bytes across ``dsts`` so far (1.0 when the
+        ledger has seen no received bytes for them).  The skew-aware EFF/COST
+        coupling reads this at instantiation time: a destination that has been
+        running hot prices the BSP tail of the combine decision."""
+        with self._lock:
+            loads = [self._recv_bytes.get(int(d), 0) for d in dsts]
+        if len(loads) < 2 or sum(loads) <= 0:
+            return 1.0
+        return float(max(loads) / (sum(loads) / len(loads)))
 
     def _open_epoch_time(self) -> float:
         if not self._cur_cost:
@@ -122,11 +173,38 @@ class CostLedger:
                   default=0.0)
         return max(self._cur_cost.values()) + lat
 
+    def _open_stream_time(self) -> float:
+        if not self._stream_xfer and not self._stream_comb:
+            return 0.0
+        t = 0.0
+        for w in set(self._stream_xfer) | set(self._stream_comb):
+            x = self._stream_xfer.get(w, 0.0)
+            c = self._stream_comb.get(w, 0.0)
+            n = max(1, self._stream_nchunks.get(w, 1))
+            t = max(t, max(x, c) + min(x, c) / n)
+        lat = max((self.topology.levels[l].latency_s for l in self._stream_levels),
+                  default=0.0)
+        return t + lat
+
     def advance_epoch(self) -> None:
         with self._lock:
             self._closed_time += self._open_epoch_time()
             self._cur_cost.clear()
             self._cur_levels.clear()
+            self.epoch += 1
+
+    def end_stream(self) -> None:
+        """Close the open streamed epoch under the pipeline bound (no-op when
+        no chunk-tagged charge arrived, so a stream that fell back to barrier
+        execution costs nothing extra)."""
+        with self._lock:
+            if not self._stream_xfer and not self._stream_comb:
+                return
+            self._closed_time += self._open_stream_time()
+            self._stream_xfer.clear()
+            self._stream_comb.clear()
+            self._stream_nchunks.clear()
+            self._stream_levels.clear()
             self.epoch += 1
 
     # ---- aggregation --------------------------------------------------------
@@ -140,7 +218,8 @@ class CostLedger:
 
     def modelled_time(self) -> float:
         with self._lock:
-            return self._closed_time + self._open_epoch_time()
+            return (self._closed_time + self._open_epoch_time()
+                    + self._open_stream_time())
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -150,7 +229,8 @@ class CostLedger:
                                     for i, lv in enumerate(self.topology.levels)},
                 "sample_bytes": self.sample_bytes,
                 "recv_bytes_per_worker": dict(self._recv_bytes),
-                "modelled_time_s": self._closed_time + self._open_epoch_time(),
+                "modelled_time_s": (self._closed_time + self._open_epoch_time()
+                                    + self._open_stream_time()),
             }
 
     @staticmethod
@@ -239,6 +319,16 @@ class ShuffleAborted(TimeoutError):
 
 
 @dataclasses.dataclass(frozen=True)
+class EndOfStream:
+    """End-of-stream marker: a sender's (or publisher's) chunk stream is done.
+
+    Carries the number of chunks the stream held so receivers (and recovery)
+    can assert they saw a complete stream.  Control-plane: never charged."""
+
+    nchunks: int
+
+
+@dataclasses.dataclass(frozen=True)
 class FaultInjection:
     """Kill worker ``wid`` after it completes ``after_stage`` stages (§6 testing).
 
@@ -251,10 +341,18 @@ class FaultInjection:
     executors, so recovery tests can compare them byte for byte.  Static
     templates (vanilla/bruck/two-level) never complete a checkpointed stage, so
     only ``after_stage=-1`` fires for them (death before the global exchange).
+
+    ``after_chunk`` (streaming runs) kills the worker *mid-stream* instead: it
+    dies at the first primitive call after completing that many chunk units of
+    the global exchange stream — sender units (one chunk partitioned and sent
+    to every destination) count first, then receiver units (one chunk folded
+    into the running accumulator), matching the order the per-worker programs
+    run in.  When set, ``after_stage`` is ignored.
     """
 
     wid: int
     after_stage: int = -1
+    after_chunk: int | None = None
 
 
 @dataclasses.dataclass
@@ -277,6 +375,9 @@ class ShuffleArgs:
     balance: str = "off"          # "off" | "auto": skew-aware instantiation
     skew_threshold: float = DEFAULT_SKEW_THRESHOLD
     plan: "object | None" = None  # CompiledPlan (kept untyped: no core cycle)
+    stream: "object | None" = None
+    # ^ repro.core.streaming.ChunkPlan when the service runs this shuffle as
+    #   chunk-pipelined sub-epochs; None keeps the barrier execution model.
     recovery: "object | None" = None
     # ^ resilience.recovery.RecoveryContext when the service runs with
     #   resilience enabled (checkpoint store, resume map, attempt number,
@@ -346,9 +447,11 @@ class LocalCluster:
         return self._unreachable.get(shuffle_id, set())
 
     # ---- fault injection (failure testing, §6) --------------------------------
-    def inject_fault(self, wid: int, after_stage: int = -1) -> None:
+    def inject_fault(self, wid: int, after_stage: int = -1,
+                     after_chunk: int | None = None) -> None:
         """Arrange for ``wid`` to die mid-shuffle; see :class:`FaultInjection`."""
-        self.fault_injections[wid] = FaultInjection(wid=wid, after_stage=after_stage)
+        self.fault_injections[wid] = FaultInjection(
+            wid=wid, after_stage=after_stage, after_chunk=after_chunk)
 
     def clear_fault(self, wid: int) -> None:
         self.fault_injections.pop(wid, None)
@@ -448,6 +551,12 @@ class WorkerContext:
         self.decisions: list = []    # (level, EffCost) pairs from adaptive templates
         self.observed: list = []     # (level, pre_bytes, post_bytes) per exchange
         self.stages_done = 0         # completed hierarchy stages (CKPT/RESUME)
+        self.chunks_done = 0         # completed global-stream chunk units
+
+    @property
+    def chunk_plan(self):
+        """The shuffle's ChunkPlan (None on barrier runs)."""
+        return self.args.stream
 
     # ---- failure machinery ----------------------------------------------------
     def _die(self, reason: str) -> None:
@@ -466,7 +575,13 @@ class WorkerContext:
         if self.wid in self.cluster.failed_workers:
             self._die("is failed")
         fi = self.cluster.fault_injections.get(self.wid)
-        if fi is not None and self.stages_done > fi.after_stage:
+        if fi is None:
+            return
+        if fi.after_chunk is not None:
+            if self.chunks_done > fi.after_chunk:
+                self._die("killed by fault injection "
+                          f"(after chunk {fi.after_chunk})")
+        elif self.stages_done > fi.after_stage:
             self._die(f"killed by fault injection (after stage {fi.after_stage})")
 
     def _peer_unreachable(self, peer: int) -> bool:
@@ -477,12 +592,21 @@ class WorkerContext:
         raise ShuffleAborted(message, shuffle_id=self.args.shuffle_id)
 
     # ---- Table-2 primitives ---------------------------------------------------
-    def SEND(self, dst: int, msgs: Msgs, *, sample: bool = False) -> None:
+    def SEND(self, dst: int, msgs: Msgs, *, sample: bool = False,
+             chunk: int | None = None) -> None:
+        """Push ``msgs`` to ``dst``.  ``chunk`` tags a streamed sub-epoch chunk:
+        the transfer is charged to the ledger's pipelined lanes instead of the
+        serialized epoch cost."""
         self._check_fault()
         level = self.topology.crossing_level(self.wid, dst)
         self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes,
-                                            sample=sample, dst=dst)
+                                            sample=sample, dst=dst, chunk=chunk)
         self.cluster._mailbox(self.wid, dst).put(msgs)
+
+    def SEND_EOS(self, dst: int, nchunks: int) -> None:
+        """Close this worker's chunk stream to ``dst`` (control-plane, free)."""
+        self._check_fault()
+        self.cluster._mailbox(self.wid, dst).put(EndOfStream(nchunks))
 
     def RECV(self, src: int, timeout: float | None = None) -> Msgs:
         """Blocking receive; fails fast (~50ms) once ``src`` is known dead.
@@ -504,6 +628,12 @@ class WorkerContext:
                 if time.monotonic() >= deadline:
                     raise TimeoutError(f"RECV({src} -> {self.wid}) timed out")
 
+    def RECV_CHUNK(self, src: int, timeout: float | None = None) -> "Msgs | EndOfStream":
+        """Next item of ``src``'s chunk stream: a ``Msgs`` chunk or the
+        :class:`EndOfStream` marker.  Same failure semantics as :meth:`RECV`
+        (push mode: transfer bytes were charged by the sender)."""
+        return self.RECV(src, timeout=timeout)
+
     def FETCH(self, src: int, timeout: float | None = None) -> Msgs:
         """Pull mode: wait until ``src`` PUBLISHed its partitions, take ours.
 
@@ -524,15 +654,54 @@ class WorkerContext:
                                             dst=self.wid)
         return msgs
 
+    def FETCH_CHUNK(self, src: int, chunk: int,
+                    timeout: float | None = None) -> "Msgs | EndOfStream":
+        """Pull-mode streaming: fetch chunk ``chunk`` of ``src``'s published
+        stream, or :class:`EndOfStream` once the publisher closed the stream at
+        or before that index.  Data bytes are charged to the fetching worker
+        (it pays the wait), into the pipelined lanes."""
+        self._check_fault()
+        timeout = self.cluster.rpc_timeout if timeout is None else timeout
+        sid = self.args.shuffle_id
+        key = (sid, src, chunk)
+        eos_key = (sid, src, "eos")
+        ev = self.cluster._publish_event(key)
+        eos_ev = self.cluster._publish_event(eos_key)
+        deadline = time.monotonic() + timeout
+        while True:
+            if ev.wait(timeout=0.05):
+                break
+            if eos_ev.is_set():
+                nchunks = self.cluster._published[eos_key]
+                if chunk >= nchunks:
+                    return EndOfStream(nchunks)
+            if self._peer_unreachable(src):
+                self._abort(f"FETCH_CHUNK from {src}: publisher unreachable")
+            if time.monotonic() >= deadline:
+                raise TimeoutError(f"FETCH_CHUNK({src}, {chunk}) timed out")
+        msgs = self.cluster._published[key].get(self.wid, Msgs.empty())
+        level = self.topology.crossing_level(src, self.wid)
+        self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes,
+                                            dst=self.wid, chunk=chunk)
+        return msgs
+
     def PART(self, msgs: Msgs, dsts: Sequence[int], part_fn: PartFn | None = None,
-             *, publish: bool = False) -> dict[int, Msgs]:
+             *, publish: bool = False, chunk: int | None = None) -> dict[int, Msgs]:
         self._check_fault()
         parts = partition(msgs, list(dsts), part_fn or self.part_fn)
         if publish:  # pull mode: make partitions visible to FETCHers
-            key = (self.args.shuffle_id, self.wid)
+            key = ((self.args.shuffle_id, self.wid) if chunk is None
+                   else (self.args.shuffle_id, self.wid, chunk))
             self.cluster._published[key] = parts
             self.cluster._publish_event(key).set()
         return parts
+
+    def PUBLISH_EOS(self, nchunks: int) -> None:
+        """Close this worker's published chunk stream (pull-mode end-of-stream)."""
+        self._check_fault()
+        key = (self.args.shuffle_id, self.wid, "eos")
+        self.cluster._published[key] = nchunks
+        self.cluster._publish_event(key).set()
 
     def COMB(self, msgs: Msgs | Sequence[Msgs], comb_fn: Combiner | None = None) -> Msgs:
         self._check_fault()
@@ -541,6 +710,25 @@ class WorkerContext:
         if comb is None:
             return batch
         self.cluster.ledger.charge_combine(self.wid, batch.nbytes)
+        return comb(batch)
+
+    def COMB_INC(self, acc: Msgs | None, msgs: Msgs, *,
+                 chunk: int | None = None) -> Msgs:
+        """Incrementally combine an arriving chunk into the running accumulator.
+
+        Byte-identical to the one-shot barrier combine: the accumulator rows
+        concat *ahead of* the chunk's rows, and the combiner's sequential
+        left fold (see :class:`repro.core.messages.Combiner`) continues
+        exactly where the previous fold stopped.  Only the chunk's bytes are
+        charged — summed over a stream this equals the single barrier combine
+        charge, but it lands in the pipelined combine lane.
+        """
+        self._check_fault()
+        comb = self.args.comb_fn
+        batch = msgs if acc is None else Msgs.concat([acc, msgs])
+        if comb is None:
+            return batch
+        self.cluster.ledger.charge_combine(self.wid, msgs.nbytes, chunk=chunk)
         return comb(batch)
 
     def SAMP(self, msgs: Msgs, rate: float | None = None,
@@ -618,6 +806,45 @@ class WorkerContext:
             return None               # defensive: no checkpoint -> re-execute
         self.stages_done = idx + 1
         return Msgs.empty() if idx < rs else ck
+
+    # ---- streaming: end-of-stream rendezvous + chunk-granular checkpoints ------
+    def STREAM_EOS(self, tag: str, nparticipants: int) -> None:
+        """The lightweight end-of-stream rendezvous that replaces the global
+        barrier for a streamed exchange: once every participant finished
+        sending and folding its chunks, the streamed epoch closes under the
+        ledger's pipeline bound.  No data moves — it is a pure control-plane
+        synchronization, keyed per stage so multi-stage templates can stream
+        each exchange as its own sub-epoch."""
+        self._check_fault()
+        rv = self.cluster.rendezvous(
+            (self.args.shuffle_id, "stream-eos", tag), nparticipants)
+        rv.gather_compute(self.wid, None,
+                          lambda _: self.cluster.ledger.end_stream())
+
+    def CKPT_STREAM(self, tag: str, peer_idx: int, folded: int, pre_bytes: int,
+                    acc: Msgs | None) -> None:
+        """Checkpoint the running accumulator after a completed chunk fold
+        (no-op without resilience).  Lives manager-side, so a retry resumes
+        the fold from the last completed chunk instead of the last stage."""
+        rc = self.args.recovery
+        if rc is not None:
+            rc.store.save_stream(self.args.shuffle_id, self.wid, tag,
+                                 peer_idx, folded, pre_bytes, acc)
+
+    def RESUME_STREAM(self, tag: str):
+        """Chunk-granular recovery fast-forward for a streamed fold: returns
+        the last :class:`~repro.core.resilience.recovery.StreamCheckpoint`
+        this worker saved for ``tag`` (or None).  The resumed cursor is
+        journaled as a ``stage`` record so tests and operators can audit that
+        recovery restarted mid-stream, not from scratch."""
+        rc = self.args.recovery
+        if rc is None or rc.attempt == 0:
+            return None
+        ck = rc.store.load_stream(self.args.shuffle_id, self.wid, tag)
+        if ck is not None and rc.record_stage is not None:
+            rc.record_stage(self.wid,
+                            f"stream-resume:{tag}:{ck.peer_idx}:{ck.folded}")
+        return ck
 
     # ---- compiled-plan fast path (plancache) ------------------------------------
     def PLAN_STAGE(self, level_name: str):

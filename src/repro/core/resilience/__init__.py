@@ -18,12 +18,14 @@ bandwidth-degradation arithmetic:
 """
 from .detector import FailureDetector, FailureReport
 from .recovery import (Checkpoint, CheckpointStore, RecoveryContext,
-                       RecoveryCoordinator, consistent_resume_stages)
+                       RecoveryCoordinator, StreamCheckpoint,
+                       consistent_resume_stages)
 from .repair import repair_plan, try_repair
 from .speculation import SpeculationPolicy, SpeculativeTask
 
 __all__ = [
     "FailureDetector", "FailureReport", "Checkpoint", "CheckpointStore",
-    "RecoveryContext", "RecoveryCoordinator", "consistent_resume_stages",
+    "RecoveryContext", "RecoveryCoordinator", "StreamCheckpoint",
+    "consistent_resume_stages",
     "repair_plan", "try_repair", "SpeculationPolicy", "SpeculativeTask",
 ]

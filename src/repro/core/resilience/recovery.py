@@ -40,6 +40,25 @@ class Checkpoint:
     msgs: Msgs
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamCheckpoint:
+    """Chunk-granular fold state of a streamed exchange (one per (worker, tag)).
+
+    ``peer_idx`` / ``folded`` form the cursor into the receiver's ordered
+    source streams: streams before ``peer_idx`` are fully folded into ``acc``,
+    and ``folded`` chunks of stream ``peer_idx`` are.  Because senders re-send
+    identical streams on a retry (chunking is a pure function of their input)
+    and the combiner folds sequentially, *any* prefix cursor resumes to the
+    same final bytes — recovery restarts from the last completed chunk instead
+    of the last stage.
+    """
+
+    peer_idx: int
+    folded: int
+    pre_bytes: int
+    acc: Msgs | None
+
+
 class CheckpointStore:
     """Thread-safe per-(shuffle, worker, stage) intermediate snapshots.
 
@@ -47,12 +66,19 @@ class CheckpointStore:
     nor a recovery replay can alias the stored bytes.  State is scoped by
     shuffle id and dropped wholesale when the shuffle completes, so a
     long-lived service does not grow with shuffle count.
+
+    Besides the per-stage checkpoints it also holds *stream* checkpoints —
+    the :class:`StreamCheckpoint` fold cursors of chunk-pipelined exchanges,
+    keyed ``(shuffle, worker, tag)`` where ``tag`` is the streamed stage
+    (``"global"`` or a hierarchy level name).
     """
 
     def __init__(self):
         self._lock = threading.Lock()
         # shuffle_id -> wid -> stage_idx -> Checkpoint
         self._data: dict[int, dict[int, dict[int, Checkpoint]]] = {}
+        # shuffle_id -> (wid, tag) -> StreamCheckpoint
+        self._streams: dict[int, dict[tuple[int, str], StreamCheckpoint]] = {}
 
     def save(self, shuffle_id: int, wid: int, stage_idx: int, stage: str,
              msgs: Msgs) -> None:
@@ -76,9 +102,28 @@ class CheckpointStore:
             return {w: max(s) for w, s in self._data.get(shuffle_id, {}).items()
                     if s}
 
+    # ---- stream (chunk-granular) checkpoints ---------------------------------
+    def save_stream(self, shuffle_id: int, wid: int, tag: str, peer_idx: int,
+                    folded: int, pre_bytes: int, acc: Msgs | None) -> None:
+        ck = StreamCheckpoint(peer_idx=peer_idx, folded=folded,
+                              pre_bytes=pre_bytes,
+                              acc=None if acc is None else acc.copy())
+        with self._lock:
+            self._streams.setdefault(shuffle_id, {})[(wid, tag)] = ck
+
+    def load_stream(self, shuffle_id: int, wid: int,
+                    tag: str) -> StreamCheckpoint | None:
+        with self._lock:
+            ck = self._streams.get(shuffle_id, {}).get((wid, tag))
+        if ck is None:
+            return None
+        return dataclasses.replace(
+            ck, acc=None if ck.acc is None else ck.acc.copy())
+
     def clear(self, shuffle_id: int) -> None:
         with self._lock:
             self._data.pop(shuffle_id, None)
+            self._streams.pop(shuffle_id, None)
 
     def stats(self) -> dict:
         with self._lock:
@@ -86,8 +131,9 @@ class CheckpointStore:
                           for s in ws.values())
             nbytes = sum(ck.msgs.nbytes for ws in self._data.values()
                          for s in ws.values() for ck in s.values())
+            stream_entries = sum(len(s) for s in self._streams.values())
             return {"shuffles": len(self._data), "checkpoints": entries,
-                    "nbytes": nbytes}
+                    "nbytes": nbytes, "stream_checkpoints": stream_entries}
 
 
 def consistent_resume_stages(raw: dict[int, int], srcs,

@@ -94,9 +94,12 @@ def repair_plan(
                 if kept:
                     nbrs[w] = kept
         if (cost_hit or eff_hit or group_hit) and ec.group_bytes > 0:
+            # carry the frozen hot-destination factor: a repaired verdict must
+            # be exactly what instantiation computed, minus the sampling pass
             ec = eff_cost_from_ratio(
                 new_topology, ld.level, ec.reduction_ratio,
-                ec.group_bytes * scale, new_topology.levels[li].group_size)
+                ec.group_bytes * scale, new_topology.levels[li].group_size,
+                recv_imbalance=ec.recv_imbalance)
         if cost_hit or eff_hit or group_hit:
             repaired_levels.append(ld.level)
         out.append(LevelDecision(level=ld.level, eff_cost=ec, nbrs=nbrs,
@@ -120,7 +123,8 @@ def repair_plan(
 
     repaired = CompiledPlan(key=new_key, template_id=plan.template_id,
                             srcs=new_srcs, dsts=new_dsts, levels=tuple(out),
-                            skew=skew, baseline_imbalance=baseline)
+                            skew=skew, baseline_imbalance=baseline,
+                            stream=plan.stream)
     return repaired, repaired_levels
 
 
@@ -128,7 +132,7 @@ def _signature_shrinks_to(big_sig: tuple, small_sig: tuple) -> bool:
     """Does ``small_sig`` describe a participant-subset of ``big_sig``'s workload?
 
     A stats signature is ``(part, comb, rate, balance, skew_threshold, widths,
-    key_bucket, skew_bucket, counts)`` with ``counts`` — the per-worker
+    key_bucket, skew_bucket, stream, counts)`` with ``counts`` — the per-worker
     (wid, log2-bucket) tuple — kept last by contract: losing workers keeps every other element
     equal (the survivors' distribution shape is the distribution shape), so
     only ``counts`` may shrink, and it must shrink to a sub-multiset.

@@ -20,6 +20,18 @@ Execution modes (constructor default, overridable per call):
 * ``"fresh"``   — paper-faithful: re-instantiate every call, never consult the
   cache (plans are still compiled and stored, so switching back to ``auto`` hits).
 
+Streaming modes (constructor default, overridable per call) pick the execution
+model (:mod:`repro.core.streaming`):
+
+* ``"off"``     — barrier shuffles (the paper's model): one synchronized
+  exchange, receivers combine once everything arrived;
+* ``"auto"``    — streamable templates run as chunk-pipelined sub-epochs:
+  senders stream fixed-budget chunks, receivers incrementally combine, an
+  end-of-stream rendezvous replaces the barrier, and modelled time reflects
+  the transfer/combine overlap.  Output stays byte-identical to ``"off"``.
+  ``open_stream()`` additionally exposes the ``feed()``/``drain()``
+  continuous-ingest API for open-ended sources.
+
 Resilience modes (constructor default, overridable per call) gate the
 :mod:`repro.core.resilience` pipeline:
 
@@ -43,6 +55,8 @@ from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs
 from .resilience import (CheckpointStore, FailureDetector, RecoveryCoordinator,
                          SpeculationPolicy, try_repair)
 from .skew import DEFAULT_SKEW_THRESHOLD, imbalance
+from .streaming import (DEFAULT_CHUNK_BYTES, DEFAULT_MAX_INFLIGHT, ChunkPlan,
+                        StreamSession)
 from .templates import ShuffleResult, run_shuffle
 from .topology import NetworkTopology
 from .vectorized import can_vectorize, run_shuffle_vectorized
@@ -50,6 +64,7 @@ from .vectorized import can_vectorize, run_shuffle_vectorized
 EXECUTION_MODES = ("auto", "threaded", "fresh")
 RESILIENCE_MODES = ("off", "detect", "recover")
 BALANCE_MODES = ("off", "auto")
+STREAMING_MODES = ("off", "auto")
 
 
 def dst_load_imbalance(stats: dict, dsts) -> float | None:
@@ -67,6 +82,8 @@ class TeShuService:
                  replicas: Sequence[str] = (), plan_cache: PlanCache | None = None,
                  execution: str = "auto", resilience: str = "off",
                  balance: str = "off", skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
+                 streaming: str = "off", chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 max_inflight: int = DEFAULT_MAX_INFLIGHT,
                  max_retries: int = 2):
         if execution not in EXECUTION_MODES:
             raise ValueError(f"execution must be one of {EXECUTION_MODES}: {execution}")
@@ -75,8 +92,14 @@ class TeShuService:
                 f"resilience must be one of {RESILIENCE_MODES}: {resilience}")
         if balance not in BALANCE_MODES:
             raise ValueError(f"balance must be one of {BALANCE_MODES}: {balance}")
+        if streaming not in STREAMING_MODES:
+            raise ValueError(
+                f"streaming must be one of {STREAMING_MODES}: {streaming}")
         self.balance = balance
         self.skew_threshold = skew_threshold
+        self.streaming = streaming
+        self.chunk_bytes = chunk_bytes
+        self.max_inflight = max_inflight
         self.topology = topology
         self.cluster = LocalCluster(topology)
         self.manager = ShuffleManager(journal_path=journal_path, replicas=replicas,
@@ -114,6 +137,9 @@ class TeShuService:
         resilience: str | None = None,
         balance: str | None = None,
         skew_threshold: float | None = None,
+        streaming: str | None = None,
+        chunk_bytes: int | None = None,
+        max_inflight: int | None = None,
     ) -> ShuffleResult:
         execution = self.execution if execution is None else execution
         if execution not in EXECUTION_MODES:
@@ -125,12 +151,24 @@ class TeShuService:
         balance = self.balance if balance is None else balance
         if balance not in BALANCE_MODES:
             raise ValueError(f"balance must be one of {BALANCE_MODES}: {balance}")
-        if balance == "auto" and \
-                not self.manager.get_template(template_id, wid=None).rebalanceable:
+        streaming = self.streaming if streaming is None else streaming
+        if streaming not in STREAMING_MODES:
+            raise ValueError(
+                f"streaming must be one of {STREAMING_MODES}: {streaming}")
+        template = self.manager.get_template(template_id, wid=None)
+        if balance == "auto" and not template.rebalanceable:
             # a template that re-partitions en route never carries a skew
             # decision: resolve to "off" up front so keying skips the skew
             # bucket pass and its plans don't split across skew epochs
             balance = "off"
+        if streaming == "auto" and not template.streamable:
+            # same resolution for the execution model: a non-streamable
+            # template always runs the barrier, so key it that way
+            streaming = "off"
+        chunk = ChunkPlan(
+            chunk_bytes=self.chunk_bytes if chunk_bytes is None else chunk_bytes,
+            max_inflight=(self.max_inflight if max_inflight is None
+                          else max_inflight)) if streaming == "auto" else None
         args = ShuffleArgs(
             template_id=template_id,
             shuffle_id=self.next_shuffle_id() if shuffle_id is None else shuffle_id,
@@ -143,7 +181,8 @@ class TeShuService:
         key = plan_key(template_id, self.topology, args.srcs, args.dsts,
                        stats_signature(bufs, part_fn, comb_fn, rate,
                                        balance=balance,
-                                       skew_threshold=args.skew_threshold))
+                                       skew_threshold=args.skew_threshold,
+                                       streaming=streaming, stream=chunk))
         plan = self.plan_cache.get(key) if execution != "fresh" else None
         repaired = False
         if plan is None and execution != "fresh" and resilience != "off":
@@ -153,11 +192,39 @@ class TeShuService:
                               part_fn=part_fn)
             repaired = plan is not None
         args.plan = plan
+        # a cached plan replays the chunking policy it froze; a fresh streamed
+        # run uses the service knobs (and freezes them at compile time)
+        args.stream = (plan.stream if plan is not None and plan.stream is not None
+                       else chunk)
 
         if resilience == "off":
             return self._run_plain(args, bufs, key, execution)
         return self._run_resilient(args, bufs, key, execution, resilience,
                                    repaired)
+
+    def open_stream(self, template_id: str, srcs: Sequence[int],
+                    dsts: Sequence[int], *, part_fn: PartFn = HASH_PART,
+                    comb_fn: Combiner | None = None,
+                    chunk_bytes: int | None = None,
+                    max_inflight: int | None = None,
+                    shuffle_id: int | None = None) -> StreamSession:
+        """Open a continuous-ingest shuffle: ``feed()`` source buffers as they
+        arrive, ``drain()`` the combined per-destination accumulators at end
+        of source.  The native path for open-ended workloads where a barrier
+        would never close; see :class:`repro.core.streaming.StreamSession`."""
+        template = self.manager.get_template(template_id, wid=None)
+        if not template.streamable:
+            raise ValueError(
+                f"template {template_id!r} is not streamable (declares no "
+                "chunk-pipelined programs)")
+        chunk = ChunkPlan(
+            chunk_bytes=self.chunk_bytes if chunk_bytes is None else chunk_bytes,
+            max_inflight=(self.max_inflight if max_inflight is None
+                          else max_inflight))
+        return StreamSession(
+            self.cluster, self.manager, template,
+            self.next_shuffle_id() if shuffle_id is None else shuffle_id,
+            srcs, dsts, part_fn, comb_fn, chunk)
 
     # ---- execution paths ------------------------------------------------------
     def _execute(self, args: ShuffleArgs, bufs: dict[int, Msgs],
@@ -172,7 +239,8 @@ class TeShuService:
         self.plan_cache.put(key, compile_plan(
             key, args.template_id, self.topology, args.srcs, args.dsts,
             res.decisions, res.observed,
-            baseline_imbalance=dst_load_imbalance(res.stats, args.dsts)))
+            baseline_imbalance=dst_load_imbalance(res.stats, args.dsts),
+            stream=args.stream))
 
     def _observe(self, args: ShuffleArgs, key: tuple, res: ShuffleResult) -> None:
         """Feed drift signals from a cached run: per-level reduction ratios,
@@ -297,10 +365,12 @@ class TeShuService:
     def delay_worker(self, wid: int, seconds: float) -> None:
         self.cluster.worker_delays[wid] = seconds
 
-    def inject_fault(self, wid: int, after_stage: int = -1) -> None:
-        """Kill ``wid`` mid-shuffle once it completes ``after_stage`` stages
+    def inject_fault(self, wid: int, after_stage: int = -1,
+                     after_chunk: int | None = None) -> None:
+        """Kill ``wid`` mid-shuffle once it completes ``after_stage`` stages —
+        or, on streamed runs, ``after_chunk`` chunk units of the global stream
         (see :class:`repro.core.primitives.FaultInjection`)."""
-        self.cluster.inject_fault(wid, after_stage)
+        self.cluster.inject_fault(wid, after_stage, after_chunk)
 
     def clear_fault(self, wid: int) -> None:
         self.cluster.clear_fault(wid)

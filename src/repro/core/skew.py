@@ -64,6 +64,37 @@ DEFAULT_SKEW_THRESHOLD = 1.5
 # than total/capacity; with <= 64 destinations the hot threshold
 # (HOT_KEY_FRACTION * total/ndst) sits well above that floor.
 DEFAULT_SKETCH_CAPACITY = 256
+# Adaptive capacity bounds (see adaptive_sketch_capacity).
+MIN_SKETCH_CAPACITY = 64
+MAX_SKETCH_CAPACITY = 4096
+
+
+def adaptive_sketch_capacity(max_key: int, ndst: int) -> int:
+    """Size a sketch from the observed key-space bucket instead of a constant.
+
+    Two guarantees drive the bounds:
+
+    * **detection floor** — a key is "hot" at ``HOT_KEY_FRACTION * total/ndst``
+      messages; Misra–Gries guarantees presence for keys above
+      ``total/capacity``, so ``capacity >= ndst / HOT_KEY_FRACTION`` keeps
+      every hot key detectable no matter how many destinations the shuffle
+      fans out to (the static 256 silently lost this above 64 destinations);
+    * **error scaling** — the undercount bound is (at worst) proportional to
+      the mass the compression discards, which grows with the number of
+      distinct keys.  Scaling capacity with the square root of the key
+      universe (the log2 bucket the stats signature already computes) keeps
+      the bound useful for giant key spaces without overpaying on small ones:
+      a universe that fits the capacity outright is summarized *exactly*.
+
+    The merge bound is unaffected: merged sketches take the larger capacity
+    and add error bounds, so pooling workers with different observed key
+    ranges keeps the classic Misra–Gries guarantee over the pooled stream.
+    """
+    detect_floor = int(np.ceil(ndst / HOT_KEY_FRACTION))
+    universe_bits = max(0, int(max_key).bit_length())
+    sqrt_universe = 1 << ((universe_bits + 1) // 2)
+    return min(MAX_SKETCH_CAPACITY,
+               max(MIN_SKETCH_CAPACITY, detect_floor, sqrt_universe))
 
 
 class HeavyHitterSketch:
@@ -160,10 +191,18 @@ class LocalSkewStats:
 
 
 def local_skew_stats(msgs: Msgs, part_fn: PartFn, ndst: int,
-                     capacity: int = DEFAULT_SKETCH_CAPACITY) -> LocalSkewStats:
-    """The per-worker O(n) pass: sketch + exact base-assignment load vector."""
+                     capacity: int | None = None) -> LocalSkewStats:
+    """The per-worker O(n) pass: sketch + exact base-assignment load vector.
+
+    ``capacity=None`` sizes the sketch adaptively from this worker's observed
+    key range and the fan-out (:func:`adaptive_sketch_capacity`)."""
     if msgs.n == 0:
-        return LocalSkewStats(HeavyHitterSketch(capacity), (0,) * ndst, 0)
+        return LocalSkewStats(
+            HeavyHitterSketch(capacity if capacity is not None
+                              else adaptive_sketch_capacity(0, ndst)),
+            (0,) * ndst, 0)
+    if capacity is None:
+        capacity = adaptive_sketch_capacity(int(msgs.keys.max()), ndst)
     slots = part_fn.assign(msgs.keys, ndst)
     loads = np.bincount(slots, minlength=ndst)
     return LocalSkewStats(HeavyHitterSketch.from_keys(msgs.keys, capacity),

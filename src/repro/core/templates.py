@@ -21,7 +21,8 @@ import numpy as np
 
 from .adaptive import compute_eff_cost
 from .messages import Msgs
-from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs, WorkerContext
+from .primitives import (EndOfStream, LocalCluster, ShuffleAborted, ShuffleArgs,
+                         WorkerContext)
 from .skew import local_skew_stats, owner_merge_plan, scatter_part_fn
 
 
@@ -39,6 +40,18 @@ class ShuffleTemplate:
     #   messages en route (two_level's phase-3 PART inside a group) would
     #   re-scatter by position within a different buffer and strand rows whose
     #   new slot falls outside that stage's fan-out.
+    stream_sender: Callable[[WorkerContext, Msgs], None] | None = None
+    stream_receiver: Callable[[WorkerContext], Msgs] | None = None
+    # ^ the chunk-pipelined rewrites of the same programs, driven by the
+    #   shuffle's ChunkPlan.  A template whose exchange structure cannot be
+    #   chunked without changing semantics (bruck's log-step rounds re-block
+    #   messages between sends; two_level re-partitions en route) leaves them
+    #   unset and always runs the barrier model — `streamable` is the
+    #   streaming analogue of `rebalanceable`.
+
+    @property
+    def streamable(self) -> bool:
+        return self.stream_sender is not None and self.stream_receiver is not None
 
     def loc(self) -> int:
         return template_loc(self.sender) + template_loc(self.receiver)
@@ -166,6 +179,29 @@ def _two_level_receiver(ctx: WorkerContext) -> Msgs:
 # Network-aware shuffling (Figure 3) — adaptive hierarchical shuffle
 # ---------------------------------------------------------------------------
 
+def _eff_cost_compute(ctx: WorkerContext, level: str):
+    """Build the ``$COMPUTE_EFF_COST`` closure the sampling server runs.
+
+    Under ``balance="auto"`` the verdict couples to the ledger's observed
+    per-destination recv-byte imbalance: the closure executes while every
+    stage participant is blocked in the rendezvous (the ledger is quiescent),
+    so the hot-destination tail factor it reads is deterministic.
+    """
+    a = ctx.args
+
+    def compute(samples, sizes, lv=level):
+        recv_imb = (ctx.cluster.ledger.recv_imbalance(a.dsts)
+                    if a.balance == "auto" else 1.0)
+        return compute_eff_cost(
+            ctx.topology, lv, samples,
+            group_bytes=sum(sizes) // max(1, ctx.topology.num_workers
+                                          // ctx.topology.level(lv).group_size),
+            group_size=ctx.topology.level(lv).group_size,
+            combiner=a.comb_fn, recv_imbalance=recv_imb)
+
+    return compute
+
+
 def _network_aware_sender(ctx: WorkerContext, bufs: Msgs) -> None:
     a = ctx.args
     bufs = ctx.COMB(bufs)                                          # local combine
@@ -180,12 +216,7 @@ def _network_aware_sender(ctx: WorkerContext, bufs: Msgs) -> None:
             samp = ctx.SAMP(bufs, a.rate, fallback=True)           # $RATE
             ec = ctx.GATHER_SAMPLES(                               # $COMPUTE_EFF_COST
                 level, samp, bufs.nbytes,
-                compute=lambda samples, sizes, lv=level: compute_eff_cost(
-                    ctx.topology, lv, samples,
-                    group_bytes=sum(sizes) // max(1, ctx.topology.num_workers
-                                                  // ctx.topology.level(lv).group_size),
-                    group_size=ctx.topology.level(lv).group_size,
-                    combiner=a.comb_fn))
+                compute=_eff_cost_compute(ctx, level))
         ctx.decisions.append((level, ec))
         if ec.beneficial and len(nbrs) > 1:
             parts = ctx.PART(bufs, nbrs)
@@ -202,6 +233,173 @@ def _network_aware_sender(ctx: WorkerContext, bufs: Msgs) -> None:
         ctx.SEND(d, parts[d])
 
 
+# ---------------------------------------------------------------------------
+# Streaming (chunk-pipelined) program rewrites — see repro.core.streaming
+# ---------------------------------------------------------------------------
+
+def _local_stream(own_chunks: list[Msgs]):
+    """Iterator-shaped stream over this worker's own (local, free) partitions."""
+    it = iter(list(own_chunks) + [EndOfStream(len(own_chunks))])
+    return lambda: next(it)
+
+
+def _recv_stream(ctx: WorkerContext, src: int):
+    return lambda: ctx.RECV_CHUNK(src)
+
+
+def _fetch_stream(ctx: WorkerContext, src: int):
+    state = {"c": 0}
+
+    def nxt():
+        got = ctx.FETCH_CHUNK(src, state["c"])
+        if not isinstance(got, EndOfStream):
+            state["c"] += 1
+        return got
+
+    return nxt
+
+
+def _stream_fold(ctx: WorkerContext, streams, tag: str, *,
+                 count_units: bool = False) -> tuple[int, Msgs]:
+    """Fold ordered chunk streams into a running accumulator.
+
+    ``streams`` is an ordered list of ``next()`` callables, each yielding
+    ``Msgs`` chunks then :class:`EndOfStream` — ordered exactly as the barrier
+    receiver concatenates its sources, which (with the combiner's sequential
+    fold) is what keeps the accumulator byte-identical to the barrier output.
+    Every completed fold checkpoints the accumulator (chunk-granular recovery);
+    on a retry the fold resumes from the checkpointed cursor and re-sent
+    chunks before it are drained and discarded.  Returns ``(pre_bytes, acc)``
+    where ``pre_bytes`` is the total folded input (the OBSERVE numerator).
+    """
+    ck = ctx.RESUME_STREAM(tag)
+    start_i, skip, pre, acc = ((ck.peer_idx, ck.folded, ck.pre_bytes, ck.acc)
+                               if ck is not None else (0, 0, 0, None))
+    for i, nxt in enumerate(streams):
+        if i < start_i:
+            folded = None                  # fully folded on a prior attempt
+        else:
+            folded = skip if i == start_i else 0
+        c = 0
+        while True:
+            got = nxt()
+            if isinstance(got, EndOfStream):
+                break
+            if folded is None or c < folded:
+                c += 1                     # re-sent chunk already in the acc
+                continue
+            acc = ctx.COMB_INC(acc, got, chunk=c)
+            pre += got.nbytes
+            c += 1
+            if count_units:
+                ctx.chunks_done += 1
+            ctx.CKPT_STREAM(tag, i, c, pre, acc)
+    return pre, (acc if acc is not None else Msgs.empty())
+
+
+def _chunked_send(ctx: WorkerContext, bufs: Msgs, *, publish: bool = False,
+                  count_units: bool = False) -> None:
+    """The streamed global send: fixed-budget chunks, then end-of-stream."""
+    dsts = ctx.args.dsts
+    cp = ctx.chunk_plan
+    nch = cp.nchunks(bufs)
+    for c in range(nch):
+        piece = cp.chunk(bufs, c)
+        if publish:
+            ctx.PART(piece, dsts, publish=True, chunk=c)
+        else:
+            parts = ctx.PART(piece, dsts)
+            for d in dsts:
+                ctx.SEND(d, parts[d], chunk=c)
+        if count_units:
+            ctx.chunks_done += 1
+    if publish:
+        ctx.PUBLISH_EOS(nch)
+    else:
+        for d in dsts:
+            ctx.SEND_EOS(d, nch)
+
+
+def _streaming_push_sender(ctx: WorkerContext, bufs: Msgs) -> None:
+    _chunked_send(ctx, bufs, count_units=True)
+
+
+def _streaming_push_receiver(ctx: WorkerContext) -> Msgs:
+    streams = [_recv_stream(ctx, s) for s in ctx.args.srcs]
+    _, out = _stream_fold(ctx, streams, "global", count_units=True)
+    return out
+
+
+def _streaming_pull_sender(ctx: WorkerContext, bufs: Msgs) -> None:
+    _chunked_send(ctx, bufs, publish=True, count_units=True)
+
+
+def _streaming_pull_receiver(ctx: WorkerContext) -> Msgs:
+    streams = [_fetch_stream(ctx, s) for s in ctx.args.srcs]
+    _, out = _stream_fold(ctx, streams, "global", count_units=True)
+    return out
+
+
+def _streaming_coordinated_receiver(ctx: WorkerContext) -> Msgs:
+    ring = list(ctx.args.srcs)
+    i = ring.index(ctx.wid)
+    order = [ring[(i - t) % len(ring)] for t in range(len(ring))]
+    streams = [_fetch_stream(ctx, s) for s in order]
+    _, out = _stream_fold(ctx, streams, "global", count_units=True)
+    return out
+
+
+def _streaming_local_exchange(ctx: WorkerContext, bufs: Msgs, nbrs: list[int],
+                              level: str) -> tuple[int, Msgs]:
+    """One hierarchical stage as a chunked sub-epoch: chunk-partition to the
+    neighbor group, fold own partitions then each neighbor's stream — the
+    same source order the barrier stage concatenates in."""
+    cp = ctx.chunk_plan
+    nch = cp.nchunks(bufs)
+    own: list[Msgs] = []
+    for c in range(nch):
+        parts = ctx.PART(cp.chunk(bufs, c), nbrs)
+        for n in nbrs:
+            if n != ctx.wid:
+                ctx.SEND(n, parts[n], chunk=c)
+        own.append(parts[ctx.wid])
+    for n in nbrs:
+        if n != ctx.wid:
+            ctx.SEND_EOS(n, nch)
+    streams = [_local_stream(own)] + [_recv_stream(ctx, n)
+                                      for n in nbrs if n != ctx.wid]
+    return _stream_fold(ctx, streams, level)
+
+
+def _streaming_network_aware_sender(ctx: WorkerContext, bufs: Msgs) -> None:
+    a = ctx.args
+    bufs = ctx.COMB(bufs)                                          # local combine
+    for level in ctx.local_level_names():
+        restored = ctx.RESUME(level)
+        if restored is not None:
+            bufs = restored
+            continue
+        nbrs, ec = ctx.PLAN_STAGE(level)
+        if ec is None:
+            nbrs = ctx.FIND_NBRS(level, a.srcs)
+            samp = ctx.SAMP(bufs, a.rate, fallback=True)
+            ec = ctx.GATHER_SAMPLES(level, samp, bufs.nbytes,
+                                    compute=_eff_cost_compute(ctx, level))
+        ctx.decisions.append((level, ec))
+        if ec.beneficial:
+            if len(nbrs) > 1:
+                pre, merged = _streaming_local_exchange(ctx, bufs, nbrs, level)
+                ctx.OBSERVE(level, pre, merged.nbytes)
+                bufs = merged
+            # per-stage end-of-stream: closes this stage's pipelined sub-epoch;
+            # every stage participant joins (even one alone in its group), so
+            # the rendezvous fills exactly like the barrier stage's would
+            ctx.STREAM_EOS(level, ctx._stage_participants(
+                ctx.topology.level_index(level)))
+        bufs = ctx.CKPT(level, bufs)
+    _chunked_send(ctx, bufs, count_units=True)                     # global stream
+
+
 TEMPLATES: dict[str, ShuffleTemplate] = {}
 
 
@@ -212,13 +410,19 @@ def register_template(t: ShuffleTemplate) -> ShuffleTemplate:
 
 register_template(ShuffleTemplate(
     "vanilla_push", _vanilla_push_sender, _push_receiver, "push",
-    "Send messages from sources to destinations."))
+    "Send messages from sources to destinations.",
+    stream_sender=_streaming_push_sender,
+    stream_receiver=_streaming_push_receiver))
 register_template(ShuffleTemplate(
     "vanilla_pull", _vanilla_pull_sender, _pull_receiver, "pull",
-    "Receivers fetch partitioned messages from sources."))
+    "Receivers fetch partitioned messages from sources.",
+    stream_sender=_streaming_pull_sender,
+    stream_receiver=_streaming_pull_receiver))
 register_template(ShuffleTemplate(
     "coordinated", _coordinated_sender, _coordinated_receiver, "pull",
-    "Optimize shuffle bandwidth on NUMA nodes [21]."))
+    "Optimize shuffle bandwidth on NUMA nodes [21].",
+    stream_sender=_streaming_pull_sender,
+    stream_receiver=_streaming_coordinated_receiver))
 register_template(ShuffleTemplate(
     "bruck", _bruck_sender, _bruck_receiver, "push",
     "Schedule flows to avoid single-process bottleneck [38]."))
@@ -228,7 +432,9 @@ register_template(ShuffleTemplate(
     rebalanceable=False))        # re-partitions en route; see ShuffleTemplate
 register_template(ShuffleTemplate(
     "network_aware", _network_aware_sender, _push_receiver, "push/pull",
-    "Adaptively shuffle data at data center scale (Figure 3)."))
+    "Adaptively shuffle data at data center scale (Figure 3).",
+    stream_sender=_streaming_network_aware_sender,
+    stream_receiver=_streaming_push_receiver))
 
 
 # ---------------------------------------------------------------------------
@@ -247,6 +453,7 @@ class ShuffleResult:
     repaired: bool = False                # plan came from resilience.repair?
     attempts: int = 1                     # execution attempts (>1 => recovered)
     recovery: dict | None = None          # restart/resume/speculation details
+    streamed: bool = False                # ran as chunk-pipelined sub-epochs?
 
 
 def aggregate_observed(per_worker: list[list[tuple]]) -> dict[str, float]:
@@ -326,6 +533,15 @@ def run_shuffle(
     template/plan cache lives there too); sender+receiver programs run per worker.
     When ``args.plan`` carries a CompiledPlan, adaptive templates replay its frozen
     decisions instead of re-instantiating (see :mod:`repro.core.plancache`).
+
+    When ``args.stream`` carries a ChunkPlan and the template is streamable,
+    this is the *streaming driver*: workers run the template's chunk-pipelined
+    program rewrites, and the global barrier is replaced by the end-of-stream
+    rendezvous that closes the pipelined epoch.  A skew-rebalanced run falls
+    back to the barrier programs uniformly (every participant sees the same
+    broadcast decision): the hot-key scatter is positional over the *whole*
+    buffer and the owner-merge is a barrier-shaped stage, so chunk slicing
+    would change where scattered rows land.
     """
     template = (manager.get_template(args.template_id, wid=None) if manager
                 else TEMPLATES[args.template_id])
@@ -333,6 +549,7 @@ def run_shuffle(
     rc = args.recovery
     attempt = rc.attempt if rc is not None else 0
     speculated = rc.speculated if rc is not None else frozenset()
+    may_stream = args.stream is not None and template.streamable
     before = cluster.ledger.snapshot()
 
     def worker_fn(wid: int):
@@ -349,12 +566,20 @@ def run_shuffle(
         try:
             skew_dec = skew_instantiate(ctx, bufs.get(wid, Msgs.empty()),
                                         template)
+            streamed = may_stream and not (skew_dec is not None
+                                           and skew_dec.triggered)
+            sender = template.stream_sender if streamed else template.sender
+            receiver = template.stream_receiver if streamed else template.receiver
             if wid in args.srcs:
-                template.sender(ctx, bufs.get(wid, Msgs.empty()))
+                sender(ctx, bufs.get(wid, Msgs.empty()))
             if wid in args.dsts:
-                out = template.receiver(ctx)
+                out = receiver(ctx)
                 if skew_dec is not None and skew_dec.triggered:
                     out = owner_merge(ctx, out, skew_dec)
+            if streamed:
+                # end-of-stream rendezvous: the lightweight replacement for
+                # the global barrier — closes the pipelined epoch
+                ctx.STREAM_EOS("global", len(participants))
         except ShuffleAborted:
             # exited without delivering: peers blocked on this worker must not
             # wait out their RPC timeout for data that will never come
@@ -363,7 +588,7 @@ def run_shuffle(
         if manager is not None:
             manager.record_end(wid, args.shuffle_id, args.template_id,
                                attempt=attempt)
-        return (out, ctx.decisions, ctx.observed)
+        return (out, ctx.decisions, ctx.observed, streamed)
 
     try:
         raw = cluster.run_workers(participants, worker_fn,
@@ -371,7 +596,7 @@ def run_shuffle(
     except BaseException:
         cluster.end_shuffle(args.shuffle_id, aborted=True)
         raise
-    cluster.ledger.advance_epoch()        # shuffle completion is a barrier
+    cluster.ledger.advance_epoch()        # any non-streamed residue is a barrier
     cluster.end_shuffle(args.shuffle_id)  # free per-invocation control state
     after = cluster.ledger.snapshot()
     stats = cluster.ledger.delta(before, after)
@@ -386,5 +611,7 @@ def run_shuffle(
         decisions = max((r[1] for r in raw.values() if r is not None),
                         key=len, default=[])
     observed = aggregate_observed([r[2] for r in raw.values() if r is not None])
+    streamed = any(r[3] for r in raw.values() if r is not None)
     return ShuffleResult(bufs=out_bufs, decisions=decisions, stats=stats,
-                         observed=observed, cached=args.plan is not None)
+                         observed=observed, cached=args.plan is not None,
+                         streamed=streamed)

@@ -122,6 +122,12 @@ def run_shuffle_vectorized(
         raise ValueError("vectorized execution requires a CompiledPlan")
     if args.template_id not in VECTORIZABLE:
         raise ValueError(f"template {args.template_id!r} is not vectorizable")
+    skew_active = plan.skew is not None and plan.skew.triggered
+    if args.stream is not None and not skew_active:
+        # chunk-pipelined replay: byte-identical to the threaded streaming
+        # driver (a rebalanced plan falls through to the barrier replay below,
+        # exactly like the threaded driver falls back to barrier programs)
+        return _run_streamed_vectorized(cluster, args, bufs, manager)
     topo = cluster.topology
     ledger = cluster.ledger
     sid = args.shuffle_id
@@ -145,14 +151,18 @@ def run_shuffle_vectorized(
     def _first_casualty(stage_idx: int, workers) -> tuple[int, str] | None:
         """A worker about to execute this stage that is dead or whose injected
         fault has matured — the same death point as the threaded executor's
-        first-primitive-of-the-stage check."""
+        first-primitive-of-the-stage check.  Chunk-scoped faults
+        (``after_chunk``) never mature at stage boundaries (they only fire
+        inside a streamed global exchange, which the barrier replay never
+        runs)."""
         for w in workers:
             if resume.get(w, -1) >= stage_idx:
                 continue                      # resuming past it: nothing to run
             if w in cluster.failed_workers:
                 return w, "is failed"
             fi = cluster.fault_injections.get(w)
-            if fi is not None and stage_idx > fi.after_stage:
+            if fi is not None and fi.after_chunk is None \
+                    and stage_idx > fi.after_stage:
                 return w, f"killed by fault injection (after stage {fi.after_stage})"
         return None
 
@@ -291,4 +301,266 @@ def run_shuffle_vectorized(
         observed=aggregate_observed([observed]),
         cached=True,
         vectorized=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunk-pipelined replay
+# ---------------------------------------------------------------------------
+
+def _fold_chunks(args: ShuffleArgs, ledger, wid: int, acc: Msgs | None,
+                 piece: Msgs, chunk: int) -> Msgs:
+    """The batched mirror of ``WorkerContext.COMB_INC``: accumulator rows
+    concat ahead of the chunk, only the chunk's bytes are charged (pipelined
+    combine lane), and the combiner's sequential fold continues exactly."""
+    batch = piece if acc is None else Msgs.concat([acc, piece])
+    if args.comb_fn is None:
+        return batch
+    ledger.charge_combine(wid, piece.nbytes, chunk=chunk)
+    return combine_msgs(args.comb_fn, batch)
+
+
+def _run_streamed_vectorized(
+    cluster: LocalCluster,
+    args: ShuffleArgs,
+    bufs: dict[int, Msgs],
+    manager=None,
+) -> ShuffleResult:
+    """Replay a streamed CompiledPlan chunk-by-chunk, single-threaded.
+
+    Mirrors the threaded streaming driver exactly: stable chunked partitions,
+    fold order (own partitions first for local stages; source order — or ring
+    order for ``coordinated`` — for the global stream), per-chunk ledger
+    charges into the pipelined lanes, ``end_stream`` where the threaded
+    end-of-stream rendezvous fires, and chunk-granular stream checkpoints
+    under resilience.  ``after_chunk`` fault injections mature at the same
+    chunk-unit boundaries as the threaded executor (sender units first, then
+    fold units), so mid-chunk kills recover byte-identically on both
+    executors.
+    """
+    plan = args.plan
+    cp = args.stream
+    topo = cluster.topology
+    ledger = cluster.ledger
+    sid = args.shuffle_id
+    rc = args.recovery
+    attempt = rc.attempt if rc is not None else 0
+    resume = dict(rc.resume_stages) if rc is not None else {}
+    srcs, dsts = list(args.srcs), list(args.dsts)
+    participants = sorted(set(srcs) | set(dsts))
+    if manager is not None:
+        manager.get_template(args.template_id, wid=None)
+        for w in participants:
+            manager.record_start(w, sid, args.template_id, attempt=attempt)
+    before = ledger.snapshot()
+    observed: list[tuple] = []
+
+    def _chunk_budget(w: int) -> int | None:
+        fi = cluster.fault_injections.get(w)
+        return None if fi is None or fi.after_chunk is None else fi.after_chunk
+
+    def _stage_casualty(stage_idx: int, workers) -> tuple[int, str] | None:
+        for w in workers:
+            if resume.get(w, -1) >= stage_idx:
+                continue
+            if w in cluster.failed_workers:
+                return w, "is failed"
+            fi = cluster.fault_injections.get(w)
+            if fi is not None and fi.after_chunk is None \
+                    and stage_idx > fi.after_stage:
+                return w, f"killed by fault injection (after stage {fi.after_stage})"
+        return None
+
+    def _abort(w: int, why: str, stage_name: str) -> None:
+        cluster.failed_workers.add(w)
+        cluster.abort_event(sid).set()
+        cluster.end_shuffle(sid, aborted=True)
+        raise ShuffleAborted(
+            f"worker {w} {why} (vectorized streamed, stage {stage_name!r})",
+            shuffle_id=sid)
+
+    # ---- local hierarchy stages (network_aware), each a streamed sub-epoch --
+    if args.template_id == "network_aware":
+        state = {w: (None if resume.get(w, -1) >= 0
+                     else _comb(args, ledger, w, bufs.get(w, Msgs.empty())))
+                 for w in srcs}
+        for li, ld in enumerate(plan.levels):
+            bad = _stage_casualty(li, srcs)
+            if bad is not None:
+                _abort(*bad, ld.level)
+            for w in srcs:
+                if resume.get(w, -1) == li:
+                    state[w] = rc.store.load(sid, w, li)
+            execute = [w for w in srcs if resume.get(w, -1) < li]
+            if ld.eff_cost.beneficial and execute:
+                ledger.advance_epoch()    # the stage barrier (PLAN_STAGE's epoch)
+                staged = {}
+                for w in execute:
+                    nbrs = list(ld.nbrs.get(w, (w,)))
+                    if len(nbrs) > 1:
+                        chunks = [partition(piece, nbrs, args.part_fn)
+                                  for piece in cp.chunks(state[w])]
+                        staged[w] = (nbrs, chunks)
+                for w, (nbrs, chunks) in staged.items():
+                    peers = [n for n in nbrs if n != w]
+                    for c, parts in enumerate(chunks):
+                        ledger.charge_transfers(
+                            w,
+                            np.fromiter((topo.crossing_level(w, n) for n in peers),
+                                        dtype=np.int64, count=len(peers)),
+                            np.fromiter((parts[n].nbytes for n in peers),
+                                        dtype=np.int64, count=len(peers)),
+                            dsts=np.asarray(peers, dtype=np.int64), chunk=c)
+                for w, (nbrs, chunks) in staged.items():
+                    # fold own partitions first, then each neighbor's chunk
+                    # stream in group order — the barrier concat order
+                    acc, pre = None, 0
+                    for c, parts in enumerate(chunks):
+                        acc = _fold_chunks(args, ledger, w, acc, parts[w], c)
+                        pre += parts[w].nbytes
+                    for n in nbrs:
+                        if n == w:
+                            continue
+                        for c, parts in enumerate(staged[n][1]):
+                            acc = _fold_chunks(args, ledger, w, acc, parts[w], c)
+                            pre += parts[w].nbytes
+                    state[w] = acc if acc is not None else Msgs.empty()
+                    observed.append((ld.level, pre, state[w].nbytes))
+                ledger.end_stream()       # the stage's end-of-stream rendezvous
+            if rc is not None:
+                for w in execute:
+                    rc.store.save(sid, w, li, ld.level, state[w])
+                    if rc.record_stage is not None:
+                        rc.record_stage(w, ld.level)
+    else:
+        state = {w: bufs.get(w, Msgs.empty()) for w in srcs}
+
+    # stage-scoped faults that mature at the global exchange, incl. dead
+    # receivers (chunk-scoped faults mature inside the stream, below)
+    bad = _stage_casualty(len(plan.levels), srcs)
+    if bad is None:
+        dead_dst = next((d for d in dsts if d in cluster.failed_workers), None)
+        if dead_dst is not None:
+            bad = (dead_dst, "is failed")
+    if bad is not None:
+        _abort(*bad, "global")
+
+    # ---- global streamed exchange ------------------------------------------
+    nch = {s: cp.nchunks(state[s]) for s in srcs}
+    # sender cuts: how much of each stream exists before a chunk fault fires.
+    # A sender completes chunk units 0..budget, then dies at its next
+    # primitive — the next chunk's PART, or the EOS send when all chunks went.
+    casualty = None
+    sent, eos_sent = {}, {}
+    for s in srcs:
+        b = _chunk_budget(s)
+        if b is None or b >= nch[s]:
+            sent[s], eos_sent[s] = nch[s], True
+        else:
+            sent[s] = min(nch[s], b + 1)
+            eos_sent[s] = False
+            if casualty is None:
+                casualty = s
+    parts_by_src = {
+        s: [partition(cp.chunk(state[s], c), dsts, args.part_fn)
+            for c in range(sent[s])]
+        for s in srcs}
+
+    receiver_pays = args.template_id in ("vanilla_pull", "coordinated")
+    if not receiver_pays:                 # push: the sender pays, per chunk
+        for s in srcs:
+            for c in range(sent[s]):
+                parts = parts_by_src[s][c]
+                ledger.charge_transfers(
+                    s,
+                    np.fromiter((topo.crossing_level(s, d) for d in dsts),
+                                dtype=np.int64, count=len(dsts)),
+                    np.fromiter((parts[d].nbytes for d in dsts),
+                                dtype=np.int64, count=len(dsts)),
+                    dsts=np.asarray(dsts, dtype=np.int64), chunk=c)
+    if args.template_id == "coordinated":
+        n = len(srcs)
+        fold_order = {d: [srcs[(srcs.index(d) - t) % n] for t in range(n)]
+                      for d in dsts}
+    else:
+        fold_order = {d: srcs for d in dsts}
+
+    out: dict[int, Msgs] = {}
+    abort_receiver = None                 # (wid, why) when a fold unit died
+    for d in dsts:
+        order = fold_order[d]
+        ck = (rc.store.load_stream(sid, d, "global")
+              if rc is not None and attempt > 0 else None)
+        if ck is not None and rc.record_stage is not None:
+            rc.record_stage(
+                d, f"stream-resume:global:{ck.peer_idx}:{ck.folded}")
+        start_i, skip, pre, acc = ((ck.peer_idx, ck.folded, ck.pre_bytes, ck.acc)
+                                   if ck is not None else (0, 0, 0, None))
+        # fold-unit budget: sender units of this worker were consumed first
+        b = _chunk_budget(d)
+        base_units = nch[d] if d in srcs else 0
+        fold_budget = None if b is None or b < base_units else b - base_units + 1
+        cursor = (start_i, skip)
+        units = 0
+        complete = True
+        for i, s in enumerate(order):
+            for c in range(sent[s]):
+                if receiver_pays:         # pull: the fetch charges, per chunk
+                    ledger.charge_transfer(d, topo.crossing_level(s, d),
+                                           parts_by_src[s][c][d].nbytes,
+                                           dst=d, chunk=c)
+                if i < start_i or (i == start_i and c < skip):
+                    continue              # re-sent chunk already in the acc
+                if fold_budget is not None and units >= fold_budget:
+                    complete = False      # this worker's chunk fault matured
+                    if abort_receiver is None:
+                        abort_receiver = (d, "killed by fault injection "
+                                             f"(after chunk {b})")
+                    break
+                acc = _fold_chunks(args, ledger, d, acc, parts_by_src[s][c][d],
+                                   c)
+                pre += parts_by_src[s][c][d].nbytes
+                units += 1
+                cursor = (i, c + 1)
+            else:
+                if not eos_sent[s]:       # sender died mid-stream: the
+                    complete = False      # receiver blocks here, then aborts
+                    break
+                continue
+            break
+        if complete and fold_budget is not None and units >= fold_budget:
+            # the fault matures at the very next primitive — the end-of-stream
+            # rendezvous — exactly where the threaded worker would die
+            complete = False
+            if abort_receiver is None:
+                abort_receiver = (d, "killed by fault injection "
+                                     f"(after chunk {b})")
+        if rc is not None:
+            rc.store.save_stream(sid, d, "global", cursor[0], cursor[1], pre,
+                                 acc)
+        if complete:
+            out[d] = acc if acc is not None else Msgs.empty()
+
+    if abort_receiver is not None:
+        _abort(abort_receiver[0], abort_receiver[1], "global")
+    if casualty is not None:
+        _abort(casualty, "killed by fault injection "
+                         f"(after chunk {_chunk_budget(casualty)})", "global")
+
+    ledger.end_stream()                   # the end-of-stream rendezvous
+    ledger.advance_epoch()                # residual non-streamed charges
+    if rc is not None:
+        cluster.end_shuffle(sid)          # symmetric with the threaded driver
+    after = ledger.snapshot()
+    if manager is not None:
+        for w in participants:
+            manager.record_end(w, sid, args.template_id, attempt=attempt)
+    return ShuffleResult(
+        bufs=out,
+        decisions=list(plan.decisions),
+        stats=ledger.delta(before, after),
+        observed=aggregate_observed([observed]),
+        cached=True,
+        vectorized=True,
+        streamed=True,
     )

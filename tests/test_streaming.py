@@ -1,0 +1,564 @@
+"""Streaming shuffle: chunk-pipelined epochs (ISSUE 4 acceptance).
+
+The contract under test: a streamed shuffle — senders PART/SEND fixed-budget
+chunks, receivers incrementally combine into a running accumulator, an
+end-of-stream rendezvous replaces the barrier — is *byte-identical* to the
+barrier path for every streamable template, on both executors, across chunk
+boundaries (chunk > data, one-row chunks, ragged last chunk), including under
+a mid-chunk worker kill recovered at chunk granularity; and pipelined modelled
+time beats the barrier on data-dominated multi-stage workloads.
+"""
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import (MIN, SUM, CheckpointStore, ChunkPlan, CostLedger, Msgs,
+                        TeShuService, adaptive_sketch_capacity, datacenter,
+                        eff_cost_from_ratio, local_skew_stats,
+                        stats_signature)
+from repro.core.messages import HASH_PART
+from repro.core.skew import (HOT_KEY_FRACTION, MAX_SKETCH_CAPACITY,
+                             MIN_SKETCH_CAPACITY, HeavyHitterSketch)
+
+STREAMABLE = ("vanilla_push", "vanilla_pull", "coordinated", "network_aware")
+WORKERS = list(range(8))
+
+
+def _topo(**kw):
+    kw.setdefault("oversubscription", 10.0)
+    kw.setdefault("combine_bytes_per_s", 64e9)
+    return datacenter(2, 2, 2, **kw)
+
+
+def _bufs(n=400, key_space=64, width=2, seed=7):
+    rng = np.random.default_rng(seed)
+    return {w: Msgs(rng.integers(0, key_space, n), rng.random((n, width)))
+            for w in WORKERS}
+
+
+def _copy(bufs):
+    return {w: m.copy() for w, m in bufs.items()}
+
+
+def _assert_identical(a: dict, b: dict):
+    assert set(a) == set(b)
+    for w in a:
+        np.testing.assert_array_equal(a[w].keys, b[w].keys)
+        np.testing.assert_array_equal(a[w].vals, b[w].vals)   # bit-identical
+
+
+# ---------------------------------------------------------------------------
+# ChunkPlan
+# ---------------------------------------------------------------------------
+
+def test_chunk_plan_slicing_covers_buffer_in_order():
+    cp = ChunkPlan(chunk_bytes=24 * 7)            # 7 rows of width 2
+    m = Msgs(np.arange(100), np.arange(200.0).reshape(100, 2))
+    assert cp.rows_per_chunk(2) == 7
+    assert cp.nchunks(m) == 15                    # ragged last chunk (2 rows)
+    got = Msgs.concat(list(cp.chunks(m)))
+    np.testing.assert_array_equal(got.keys, m.keys)
+    np.testing.assert_array_equal(got.vals, m.vals)
+    assert cp.chunk(m, 14).n == 2
+
+
+def test_chunk_plan_empty_buffer_keeps_width():
+    cp = ChunkPlan(chunk_bytes=1024)
+    empty = Msgs.empty(width=3)
+    assert cp.nchunks(empty) == 1                 # one empty chunk, width intact
+    assert cp.chunk(empty, 0).width == 3
+
+
+def test_chunk_plan_extremes_and_validation():
+    m = Msgs(np.arange(10), np.ones((10, 1)))
+    assert ChunkPlan(chunk_bytes=10**9).nchunks(m) == 1     # chunk > data
+    assert ChunkPlan(chunk_bytes=1).rows_per_chunk(1) == 1  # one-row chunks
+    assert ChunkPlan(chunk_bytes=1).nchunks(m) == 10
+    with pytest.raises(ValueError):
+        ChunkPlan(chunk_bytes=0)
+    with pytest.raises(ValueError):
+        ChunkPlan(max_inflight=0)
+    sig = ChunkPlan(chunk_bytes=64 * 1024, max_inflight=4).signature()
+    assert sig[0] == "stream" and len(sig) == 3
+
+
+# ---------------------------------------------------------------------------
+# The foundation: incremental combine is an exact continuation of the fold
+# ---------------------------------------------------------------------------
+
+def _fold_matches_oneshot(keys, vals, chunk_rows, comb):
+    msgs = Msgs(keys, vals)
+    oneshot = comb(msgs)
+    acc = None
+    for c in range(0, msgs.n, chunk_rows):
+        piece = Msgs(keys[c:c + chunk_rows], vals[c:c + chunk_rows])
+        batch = piece if acc is None else Msgs.concat([acc, piece])
+        acc = comb(batch)
+    np.testing.assert_array_equal(oneshot.keys, acc.keys)
+    np.testing.assert_array_equal(oneshot.vals, acc.vals)
+
+
+@pytest.mark.parametrize("comb", [SUM, MIN])
+@pytest.mark.parametrize("chunk_rows", [1, 7, 1000])
+def test_incremental_combine_bit_exact(comb, chunk_rows):
+    rng = np.random.default_rng(0)
+    _fold_matches_oneshot(rng.integers(0, 37, 800),
+                          rng.random((800, 3)) * 1e3 - 500, chunk_rows, comb)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 50), st.integers(1, 200), st.integers(0, 2**31))
+def test_incremental_combine_bit_exact_property(chunk_rows, n, seed):
+    rng = np.random.default_rng(seed)
+    _fold_matches_oneshot(rng.integers(0, 11, n),
+                          rng.standard_normal((n, 2)) * 10.0**rng.integers(-8, 8),
+                          chunk_rows, SUM)
+
+
+# ---------------------------------------------------------------------------
+# Ledger: pipelined lanes
+# ---------------------------------------------------------------------------
+
+def test_stream_lanes_pipeline_bound():
+    topo = _topo()
+    led = CostLedger(topo)
+    bw = topo.levels[2].bw_bytes_per_s
+    cbw = topo.levels[0].combine_bytes_per_s
+    for c in range(4):                    # worker 0: 4 transfer + 4 combine chunks
+        led.charge_transfer(0, 2, 1000, dst=1, chunk=c)
+        led.charge_combine(0, 4000, chunk=c)
+    x, comb = 4 * 1000 / bw, 4 * 4000 / cbw
+    expect = max(x, comb) + min(x, comb) / 4 + topo.levels[2].latency_s
+    assert led.modelled_time() == pytest.approx(expect)
+    led.end_stream()
+    assert led.modelled_time() == pytest.approx(expect)   # folded, lanes clear
+    led.end_stream()                                      # idempotent no-op
+    assert led.modelled_time() == pytest.approx(expect)
+    assert led.bytes_at_level(2) == 4000                  # byte totals unchanged
+
+
+def test_stream_single_chunk_degenerates_to_barrier_sum():
+    led = CostLedger(_topo())
+    led.charge_transfer(0, 2, 8000, dst=1, chunk=0)
+    led.charge_combine(0, 8000, chunk=0)
+    led_b = CostLedger(_topo())
+    led_b.charge_transfer(0, 2, 8000, dst=1)
+    led_b.charge_combine(0, 8000)
+    assert led.modelled_time() == pytest.approx(led_b.modelled_time())
+
+
+def test_recv_imbalance_from_ledger():
+    led = CostLedger(_topo())
+    assert led.recv_imbalance([0, 1]) == 1.0              # no traffic yet
+    led.charge_transfer(0, 2, 3000, dst=1)
+    led.charge_transfer(0, 2, 1000, dst=2)
+    assert led.recv_imbalance([1, 2]) == pytest.approx(3000 / 2000)
+    assert led.recv_imbalance([5]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Byte-identity: streamed == barrier, every streamable template, both
+# executors, across chunk-size boundaries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("template", STREAMABLE)
+def test_streamed_byte_identical_to_barrier(template):
+    bufs = _bufs()
+    barrier = TeShuService(_topo()).shuffle(template, _copy(bufs), WORKERS,
+                                            WORKERS, comb_fn=SUM, rate=0.05)
+    assert not barrier.streamed
+    # chunk budgets: many ragged chunks / one-row chunks / chunk > data
+    for chunk_bytes in (1500, 24, 10**9):
+        svc = TeShuService(_topo(), streaming="auto", chunk_bytes=chunk_bytes)
+        fresh = svc.shuffle(template, _copy(bufs), WORKERS, WORKERS,
+                            comb_fn=SUM, rate=0.05, execution="threaded")
+        assert fresh.streamed and not fresh.vectorized
+        _assert_identical(barrier.bufs, fresh.bufs)
+        hit = svc.shuffle(template, _copy(bufs), WORKERS, WORKERS,
+                          comb_fn=SUM, rate=0.05)
+        assert hit.streamed and hit.cached and hit.vectorized
+        _assert_identical(barrier.bufs, hit.bufs)
+
+
+@pytest.mark.parametrize("comb", [None, MIN])
+def test_streamed_byte_identical_other_combiners(comb):
+    bufs = _bufs(n=240)
+    barrier = TeShuService(_topo()).shuffle("vanilla_push", _copy(bufs),
+                                            WORKERS, WORKERS, comb_fn=comb)
+    svc = TeShuService(_topo(), streaming="auto", chunk_bytes=600)
+    for _ in range(2):                                    # fresh, then cached
+        res = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                          comb_fn=comb)
+        assert res.streamed
+        _assert_identical(barrier.bufs, res.bufs)
+
+
+def test_streamed_byte_identical_deterministic_sweep():
+    """In-container stand-in for the hypothesis property: random workloads x
+    random chunk budgets, exact byte equality against the barrier path."""
+    rng = np.random.default_rng(123)
+    for trial in range(6):
+        n = int(rng.integers(1, 300))
+        ks = int(rng.integers(1, 200))
+        width = int(rng.integers(1, 4))
+        chunk_bytes = int(rng.integers(1, 4000))
+        bufs = {w: Msgs(rng.integers(0, ks, n),
+                        rng.standard_normal((n, width)) * 1e6)
+                for w in WORKERS}
+        barrier = TeShuService(_topo()).shuffle("vanilla_push", _copy(bufs),
+                                                WORKERS, WORKERS, comb_fn=SUM)
+        svc = TeShuService(_topo(), streaming="auto", chunk_bytes=chunk_bytes)
+        res = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                          comb_fn=SUM)
+        assert res.streamed
+        _assert_identical(barrier.bufs, res.bufs)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 150), st.integers(1, 100), st.integers(1, 2500),
+       st.integers(0, 2**31), st.sampled_from(STREAMABLE))
+def test_streamed_byte_identical_property(n, key_space, chunk_bytes, seed,
+                                          template):
+    rng = np.random.default_rng(seed)
+    bufs = {w: Msgs(rng.integers(0, key_space, n), rng.random((n, 1)))
+            for w in WORKERS}
+    barrier = TeShuService(_topo()).shuffle(template, _copy(bufs), WORKERS,
+                                            WORKERS, comb_fn=SUM, rate=0.05)
+    svc = TeShuService(_topo(), streaming="auto", chunk_bytes=chunk_bytes)
+    res = svc.shuffle(template, _copy(bufs), WORKERS, WORKERS, comb_fn=SUM,
+                      rate=0.05)
+    assert res.streamed
+    _assert_identical(barrier.bufs, res.bufs)
+
+
+def test_streamed_byte_totals_match_barrier():
+    """The streamed data plane moves exactly the barrier's bytes — chunking
+    changes *when* bytes are charged (pipelined lanes), never how many."""
+    bufs = _bufs()
+    off = TeShuService(_topo())
+    off.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS, comb_fn=SUM)
+    on = TeShuService(_topo(), streaming="auto", chunk_bytes=800)
+    on.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS, comb_fn=SUM)
+    a, b = off.stats(), on.stats()
+    assert a["total_bytes"] == b["total_bytes"]
+    assert a["bytes_per_level"] == b["bytes_per_level"]
+    assert a["recv_bytes_per_worker"] == b["recv_bytes_per_worker"]
+
+
+# ---------------------------------------------------------------------------
+# Plan cache integration
+# ---------------------------------------------------------------------------
+
+def test_streaming_keys_and_freezes_chunk_plan():
+    bufs = _bufs(n=200)
+    svc = TeShuService(_topo(), streaming="auto", chunk_bytes=1024)
+    svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS, comb_fn=SUM)
+    res = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM)
+    assert res.streamed and res.cached
+    (key, plan), = svc.plan_cache.scan()
+    assert plan.stream == ChunkPlan(chunk_bytes=1024)
+    # a barrier call on the same workload must not alias the streamed plan
+    res_off = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                          comb_fn=SUM, streaming="off")
+    assert not res_off.streamed and not res_off.cached
+    assert len(svc.plan_cache) == 2
+    _assert_identical(res.bufs, res_off.bufs)
+
+
+def test_signature_separates_streaming_modes_and_buckets():
+    bufs = _bufs(n=100)
+    base = stats_signature(bufs, HASH_PART, SUM, 0.01)
+    on = stats_signature(bufs, HASH_PART, SUM, 0.01, streaming="auto",
+                         stream=ChunkPlan(chunk_bytes=1024))
+    assert base != on
+    assert stats_signature(bufs, HASH_PART, SUM, 0.01, streaming="auto",
+                           stream=ChunkPlan(chunk_bytes=64 * 1024)) != on
+    # within a log2 bucket the policy aliases (byte-identity makes it safe)
+    assert stats_signature(bufs, HASH_PART, SUM, 0.01, streaming="auto",
+                           stream=ChunkPlan(chunk_bytes=1030)) == on
+    # counts stay last (plan repair's participant-subset contract)
+    assert isinstance(on[-1], tuple) and isinstance(on[-1][0], tuple)
+
+
+def test_non_streamable_template_resolves_to_off():
+    bufs = _bufs(n=144, seed=3)
+    workers = list(range(4))          # two_level needs a square grid
+    b4 = {w: bufs[w] for w in workers}
+    svc = TeShuService(_topo(), streaming="auto", chunk_bytes=512)
+    for template in ("bruck", "two_level"):
+        res = svc.shuffle(template, _copy(b4), workers, workers, comb_fn=SUM)
+        assert not res.streamed
+        ref = TeShuService(_topo()).shuffle(template, _copy(b4), workers,
+                                            workers, comb_fn=SUM)
+        _assert_identical(ref.bufs, res.bufs)
+
+
+# ---------------------------------------------------------------------------
+# Interaction with skew rebalancing
+# ---------------------------------------------------------------------------
+
+def test_streaming_defers_to_skew_rebalance():
+    """A triggered hot-key scatter is positional over the whole buffer, so the
+    run falls back to barrier programs — uniformly, on both executors — and
+    stays byte-identical to the balance-only path."""
+    rng = np.random.default_rng(11)
+    ranks = np.arange(1, 400)
+    cdf = np.cumsum(ranks**-1.2) / np.sum(ranks**-1.2)
+    zipf = {w: Msgs(np.searchsorted(cdf, rng.random(3000)).astype(np.int64),
+                    rng.random((3000, 1))) for w in WORKERS}
+    ref = TeShuService(_topo(), balance="auto").shuffle(
+        "vanilla_push", _copy(zipf), WORKERS, WORKERS, comb_fn=SUM)
+    dec = dict(ref.decisions).get("rebalance")
+    assert dec is not None and dec.triggered
+    svc = TeShuService(_topo(), balance="auto", streaming="auto",
+                       chunk_bytes=2048)
+    fresh = svc.shuffle("vanilla_push", _copy(zipf), WORKERS, WORKERS,
+                        comb_fn=SUM)
+    assert not fresh.streamed                  # deferred to the barrier model
+    _assert_identical(ref.bufs, fresh.bufs)
+    hit = svc.shuffle("vanilla_push", _copy(zipf), WORKERS, WORKERS,
+                      comb_fn=SUM)
+    assert hit.cached and not hit.streamed
+    _assert_identical(ref.bufs, hit.bufs)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-granular recovery: mid-chunk worker kill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execution", ["threaded", "auto"])
+def test_mid_chunk_kill_recovers_byte_identical(execution):
+    bufs = _bufs(n=600)
+    ref = TeShuService(_topo()).shuffle("vanilla_push", _copy(bufs), WORKERS,
+                                        WORKERS, comb_fn=SUM)
+    svc = TeShuService(_topo(), execution=execution, streaming="auto",
+                       chunk_bytes=2048, resilience="recover")
+    svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS, comb_fn=SUM)
+    svc.inject_fault(3, after_chunk=2)
+    res = svc.shuffle("vanilla_push", _copy(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM)
+    assert res.attempts == 2 and res.streamed
+    _assert_identical(ref.bufs, res.bufs)
+    # chunk granularity: the retry resumed folds from a nonzero stream cursor
+    resumes = [r.stage for r in svc.manager.records(kind="stage")
+               if r.stage and r.stage.startswith("stream-resume:global:")]
+    assert resumes and any(not s.endswith(":0:0") for s in resumes)
+
+
+@pytest.mark.parametrize("execution", ["threaded", "auto"])
+def test_mid_chunk_kill_multi_stage_template(execution):
+    rng = np.random.default_rng(9)
+    bufs = {w: Msgs(np.repeat(rng.integers(0, 256, 60), 10),
+                    rng.random((600, 1))) for w in WORKERS}
+    ref = TeShuService(_topo()).shuffle("network_aware", _copy(bufs), WORKERS,
+                                        WORKERS, comb_fn=SUM, rate=0.05)
+    svc = TeShuService(_topo(), execution=execution, streaming="auto",
+                       chunk_bytes=512, resilience="recover")
+    svc.shuffle("network_aware", _copy(bufs), WORKERS, WORKERS, comb_fn=SUM,
+                rate=0.05)
+    svc.inject_fault(5, after_chunk=1)
+    res = svc.shuffle("network_aware", _copy(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM, rate=0.05)
+    assert res.attempts == 2 and res.streamed
+    _assert_identical(ref.bufs, res.bufs)
+
+
+def test_stream_checkpoint_store_roundtrip():
+    store = CheckpointStore()
+    acc = Msgs(np.arange(5), np.ones((5, 1)))
+    store.save_stream(1, 3, "global", 2, 4, 960, acc)
+    ck = store.load_stream(1, 3, "global")
+    assert (ck.peer_idx, ck.folded, ck.pre_bytes) == (2, 4, 960)
+    ck.acc.vals[:] = -1                       # copies: no aliasing
+    assert store.load_stream(1, 3, "global").acc.vals.sum() == 5
+    assert store.load_stream(1, 3, "server") is None
+    assert store.stats()["stream_checkpoints"] == 1
+    store.clear(1)
+    assert store.load_stream(1, 3, "global") is None
+
+
+# ---------------------------------------------------------------------------
+# Modelled time: pipelined <= barrier, strictly below when data-dominated
+# ---------------------------------------------------------------------------
+
+def _modelled(template, streaming, bufs, topo, **kw):
+    svc = TeShuService(topo, streaming=streaming, **kw)
+    W = list(range(topo.num_workers))
+    svc.shuffle(template, _copy(bufs), W, W, comb_fn=SUM, rate=0.02)  # warm
+    svc.reset_stats()
+    res = svc.shuffle(template, _copy(bufs), W, W, comb_fn=SUM, rate=0.02)
+    assert res.streamed == (streaming == "auto")
+    return svc.stats()["modelled_time_s"]
+
+
+@pytest.mark.parametrize("template", ["vanilla_push", "network_aware"])
+def test_pipelined_modelled_time_beats_barrier(template):
+    # every worker holds the same key pool permuted: no intra-worker dedup
+    # (the exchanges stay data-heavy) but heavy cross-worker duplication
+    # (hierarchical combining stays beneficial — both stages trigger)
+    topo = datacenter(4, 2, 2, oversubscription=8.0)
+    rng = np.random.default_rng(3)
+    pool = np.arange(30000)
+    bufs = {w: Msgs(rng.permutation(pool), rng.random((30000, 1)))
+            for w in range(topo.num_workers)}
+    t_off = _modelled(template, "off", bufs, topo)
+    t_on = _modelled(template, "auto", bufs, topo, chunk_bytes=64 * 1024)
+    assert t_on < t_off, (template, t_on, t_off)
+
+
+def test_single_chunk_stream_no_worse_than_barrier():
+    """chunk > data: one chunk per stream degenerates the pipeline bound to
+    the BSP sum — streaming must never cost data time (latency-scale epoch
+    bookkeeping aside)."""
+    bufs = _bufs(n=200)
+    topo = _topo()
+    t_off = _modelled("vanilla_push", "off", bufs, topo)
+    t_on = _modelled("vanilla_push", "auto", bufs, topo, chunk_bytes=10**9)
+    assert t_on == pytest.approx(t_off, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# feed()/drain() continuous ingest
+# ---------------------------------------------------------------------------
+
+def test_feed_drain_matches_barrier_totals():
+    topo = _topo()
+    svc = TeShuService(topo, streaming="auto", chunk_bytes=512)
+    sess = svc.open_stream("vanilla_push", WORKERS, WORKERS, comb_fn=SUM)
+    rng = np.random.default_rng(2)
+    feeds = [{w: Msgs(rng.integers(0, 40, 90), 1.0 * rng.integers(0, 100, (90, 1)))
+              for w in WORKERS} for _ in range(3)]
+    for f in feeds:
+        assert sess.feed(_copy(f)) > 0
+    out = sess.drain()
+    assert out["chunks"] == sess.chunks_fed and out["rows"] == 3 * 8 * 90
+    assert out["stats"]["modelled_time_s"] > 0
+    # equivalent one-shot shuffle of the concatenated feeds (integer payloads:
+    # sums are exact under any fold order)
+    merged = {w: Msgs.concat([f[w] for f in feeds]) for w in WORKERS}
+    ref = TeShuService(topo).shuffle("vanilla_push", merged, WORKERS, WORKERS,
+                                     comb_fn=SUM)
+    for d in WORKERS:
+        np.testing.assert_array_equal(ref.bufs[d].keys, out["bufs"][d].keys)
+        np.testing.assert_array_equal(ref.bufs[d].vals, out["bufs"][d].vals)
+    with pytest.raises(RuntimeError):
+        sess.feed(feeds[0])
+    with pytest.raises(RuntimeError):
+        sess.drain()
+
+
+def test_feed_drain_bounded_state_and_guards():
+    svc = TeShuService(_topo(), streaming="auto", chunk_bytes=240)
+    with pytest.raises(ValueError):
+        svc.open_stream("bruck", WORKERS, WORKERS)
+    sess = svc.open_stream("vanilla_push", WORKERS[:4], WORKERS, comb_fn=SUM)
+    with pytest.raises(ValueError):
+        sess.feed({7: Msgs(np.arange(3), np.ones((3, 1)))})   # not a source
+    rng = np.random.default_rng(0)
+    sizes = []
+    for _ in range(4):                    # accumulator stays O(distinct keys)
+        sess.feed({w: Msgs(rng.integers(0, 16, 500), rng.random((500, 1)))
+                   for w in WORKERS[:4]})
+        sizes.append(max(m.n for m in sess.acc.values() if m is not None))
+    assert max(sizes) <= 16
+    out = sess.drain()
+    assert sum(m.n for m in out["bufs"].values()) <= 16
+
+
+# ---------------------------------------------------------------------------
+# Satellite: adaptive sketch capacity
+# ---------------------------------------------------------------------------
+
+def test_adaptive_sketch_capacity_bounds():
+    # detection floor: hot keys stay detectable at any fan-out
+    assert adaptive_sketch_capacity(100, 256) >= 256 / HOT_KEY_FRACTION
+    # sqrt-of-universe scaling, clamped
+    assert adaptive_sketch_capacity(2**16 - 1, 8) == 256
+    assert adaptive_sketch_capacity(2**40, 8) == MAX_SKETCH_CAPACITY
+    assert adaptive_sketch_capacity(100, 2) == MIN_SKETCH_CAPACITY
+    assert adaptive_sketch_capacity(0, 2) == MIN_SKETCH_CAPACITY
+
+
+def test_local_skew_stats_adaptive_capacity_and_exactness():
+    rng = np.random.default_rng(4)
+    small = Msgs(rng.integers(0, 50, 5000), np.ones((5000, 1)))
+    st_small = local_skew_stats(small, HASH_PART, 8)
+    assert st_small.sketch.capacity == MIN_SKETCH_CAPACITY
+    assert st_small.sketch.error_bound == 0       # universe fits: exact
+    big = Msgs(rng.integers(0, 2**32, 5000), np.ones((5000, 1)))
+    st_big = local_skew_stats(big, HASH_PART, 8)
+    assert st_big.sketch.capacity == MAX_SKETCH_CAPACITY
+
+
+def test_adaptive_capacity_merge_preserves_error_bound():
+    rng = np.random.default_rng(6)
+    a_keys = rng.integers(0, 300, 20000)
+    b_keys = rng.integers(0, 2**20, 20000)
+    a = HeavyHitterSketch.from_keys(a_keys, adaptive_sketch_capacity(299, 8))
+    b = HeavyHitterSketch.from_keys(b_keys, adaptive_sketch_capacity(2**20, 8))
+    merged = a.merge(b)
+    assert merged.capacity == max(a.capacity, b.capacity)
+    assert merged.error_bound <= a.error_bound + b.error_bound
+    pooled = np.concatenate([a_keys, b_keys])
+    uniq, cnt = np.unique(pooled, return_counts=True)
+    true = dict(zip(uniq.tolist(), cnt.tolist()))
+    for k, c in merged.counts.items():            # undercount within the bound
+        assert 0 < c <= true[k]
+        assert true[k] - c <= merged.error_bound
+
+
+# ---------------------------------------------------------------------------
+# Satellite: skew-aware EFF/COST coupling
+# ---------------------------------------------------------------------------
+
+def test_recv_imbalance_scales_eff_term():
+    topo = _topo()
+    base = eff_cost_from_ratio(topo, "server", 0.5, 1e6, 2)
+    hot = eff_cost_from_ratio(topo, "server", 0.5, 1e6, 2, recv_imbalance=3.0)
+    assert hot.eff == pytest.approx(3.0 * base.eff)
+    assert hot.cost == base.cost                  # only the tail savings scale
+    assert hot.recv_imbalance == 3.0 and base.recv_imbalance == 1.0
+    # clamped: observed imbalance below 1 never penalizes
+    assert eff_cost_from_ratio(topo, "server", 0.5, 1e6, 2,
+                               recv_imbalance=0.25).eff == base.eff
+
+
+def test_hot_destination_flips_borderline_combine_decision():
+    """A stage whose EFF/COST verdict is borderline-negative on balanced
+    history becomes beneficial once the ledger shows a hot destination: the
+    bytes a combine removes shorten the tail the epoch is gated on."""
+    topo = _topo()
+    r_hat, group_bytes, g = 0.95, 1e6, 4
+    cold = eff_cost_from_ratio(topo, "rack", r_hat, group_bytes, g)
+    hot = eff_cost_from_ratio(topo, "rack", r_hat, group_bytes, g,
+                              recv_imbalance=4.0)
+    assert not cold.beneficial and hot.beneficial
+
+
+def test_repair_carries_frozen_recv_imbalance():
+    """A verdict that was beneficial only because of the hot-destination
+    factor must stay so through plan repair: the repaired EffCost is exactly
+    what instantiation computed on the degraded topology, imbalance included."""
+    from repro.core import (compile_plan, plan_key, repair_plan, degrade_links)
+    topo = _topo()
+    bufs = _bufs(n=100)
+    ec = eff_cost_from_ratio(topo, "rack", 0.95, 1e6, 4, recv_imbalance=4.0)
+    assert ec.beneficial
+    key = plan_key("network_aware", topo, tuple(WORKERS), tuple(WORKERS),
+                   stats_signature(bufs, HASH_PART, SUM, 0.05))
+    plan = compile_plan(key, "network_aware", topo, WORKERS, WORKERS,
+                        [("rack", ec)])
+    deg = degrade_links(topo, "server", 0.5)   # global-EFF untouched boundary
+    deg = degrade_links(deg, "global", 0.5)    # ...and one that repairs rack
+    key2 = plan_key("network_aware", deg, tuple(WORKERS), tuple(WORKERS),
+                    stats_signature(bufs, HASH_PART, SUM, 0.05))
+    repaired, levels = repair_plan(plan, key2, deg)
+    assert "rack" in levels
+    got = repaired.level("rack").eff_cost
+    assert got.recv_imbalance == 4.0
+    assert got == eff_cost_from_ratio(deg, "rack", 0.95, 1e6, 4,
+                                      recv_imbalance=4.0)
