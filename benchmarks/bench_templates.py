@@ -13,8 +13,9 @@ import time
 import numpy as np
 
 from repro.core import (HASH_PART, SUM, TEMPLATES, Msgs, ShuffleArgs,
-                        TeShuService, datacenter, dst_load_imbalance, fat_tree,
-                        multipod_dcn, run_shuffle, template_loc)
+                        TeShuCluster, TeShuService, datacenter,
+                        dst_load_imbalance, fat_tree, multipod_dcn,
+                        run_shuffle, template_loc)
 
 from .common import CsvOut, paper_topology, zipf_shards
 
@@ -284,10 +285,92 @@ def streaming_profile(iters: int = 3, *, smoke: bool = False,
     return out
 
 
+def multitenant_profile(*, smoke: bool = False,
+                        json_path: str | None = None) -> CsvOut:
+    """Cross-tenant admission scheduling: weighted-fair vs FIFO mean CCT.
+
+    Concurrent tenants submit shuffles to one :class:`TeShuCluster` and
+    ``run_pending()`` executes them in scheduled order.  Two workload mixes:
+
+    * ``uniform``     — three tenants, equal-size uniform-keyed shuffles
+      (scheduling cannot help: wfair must merely not hurt);
+    * ``mixed_skew``  — a large uniform ETL tenant submits *first*, then a
+      medium Zipf(1.2) tenant and a small high-priority ad-hoc tenant: the
+      FIFO head-of-line-blocking regime, where weighted-fair ordering
+      strictly cuts mean coflow completion time.
+
+    The perf-trajectory quantity is ``mean_cct_ms`` — realized per-coflow
+    completion times in ledger modelled seconds, averaged — per (mix,
+    policy).  When ``json_path`` is set the rows are also written
+    machine-readable (``BENCH_multitenant.json``), consumed by the CI smoke
+    job, which gates on wfair <= FIFO for both mixes and strictly below on
+    ``mixed_skew``.
+    """
+    out = CsvOut("multitenant_profile",
+                 ["mix", "policy", "tenants", "coflows", "first_scheduled",
+                  "mean_cct_ms", "makespan_ms", "wall_ms"])
+    topo = datacenter(4, 2, 1)            # 8 workers across 2 servers
+    nw = topo.num_workers
+    workers = list(range(nw))
+    scale = 1 if smoke else 4
+
+    def submit_mix(cl: TeShuCluster, mix: str) -> None:
+        if mix == "uniform":
+            for i, name in enumerate(("t0", "t1", "t2")):
+                t = cl.tenant(name)
+                t.submit("vanilla_push",
+                         zipf_shards(nw, 4_000 * scale, 20_000, alpha=0.0,
+                                     seed=50 + i),
+                         workers, workers, comb_fn=SUM, stage="s")
+        else:                             # mixed_skew: big-first arrivals
+            etl = cl.tenant("etl")
+            ml = cl.tenant("ml")
+            adhoc = cl.tenant("adhoc", priority=2.0)
+            etl.submit("vanilla_push",
+                       zipf_shards(nw, 20_000 * scale, 20_000, alpha=0.0,
+                                   seed=60),
+                       workers, workers, comb_fn=SUM, stage="stage-1")
+            ml.submit("vanilla_push",
+                      zipf_shards(nw, 5_000 * scale, 500, alpha=1.2, seed=61),
+                      workers, workers, comb_fn=SUM, stage="step-9")
+            adhoc.submit("vanilla_push",
+                         zipf_shards(nw, 800 * scale, 2_000, alpha=0.0,
+                                     seed=62),
+                         workers, workers, comb_fn=SUM, stage="join-2")
+
+    rows = []
+    for mix in ("uniform", "mixed_skew"):
+        for policy in ("fifo", "wfair"):
+            cl = TeShuCluster(topo, admission=policy)
+            submit_mix(cl, mix)
+            t0 = time.perf_counter()
+            cl.run_pending()
+            wall = time.perf_counter() - t0
+            sched = cl.last_schedule()
+            row = dict(
+                mix=mix, policy=policy, tenants=len(cl.tenants()),
+                coflows=len(sched["ccts"]),
+                first_scheduled=sched["planned"][0].coflow_id[0],
+                mean_cct_ms=sched["mean_cct_s"] * 1e3,
+                makespan_ms=sched["makespan_s"] * 1e3,
+                wall_ms=wall * 1e3)
+            rows.append(row)
+            out.add(**row)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"meta": {"bench": "multitenant_profile", "workers": nw,
+                                "scale": scale, "template": "vanilla_push",
+                                "smoke": smoke},
+                       "rows": rows}, f, indent=2)
+            f.write("\n")
+    return out
+
+
 def run() -> list[CsvOut]:
     return [table3(), template_profile(), plan_cache_profile(),
             skew_profile(json_path="BENCH_skew.json"),
-            streaming_profile(json_path="BENCH_streaming.json")]
+            streaming_profile(json_path="BENCH_streaming.json"),
+            multitenant_profile(json_path="BENCH_multitenant.json")]
 
 
 if __name__ == "__main__":
@@ -296,18 +379,25 @@ if __name__ == "__main__":
                     help="run only the skew benchmark")
     ap.add_argument("--streaming-only", action="store_true",
                     help="run only the streaming benchmark")
+    ap.add_argument("--multitenant-only", action="store_true",
+                    help="run only the multi-tenant scheduling benchmark")
     ap.add_argument("--smoke", action="store_true",
                     help="small-scale run (CI)")
     ap.add_argument("--skew-json", default="BENCH_skew.json",
                     help="path for the machine-readable skew output")
     ap.add_argument("--streaming-json", default="BENCH_streaming.json",
                     help="path for the machine-readable streaming output")
+    ap.add_argument("--multitenant-json", default="BENCH_multitenant.json",
+                    help="path for the machine-readable multitenant output")
     args = ap.parse_args()
     if args.skew_only:
         skew_profile(smoke=args.smoke, json_path=args.skew_json).emit()
     elif args.streaming_only:
         streaming_profile(smoke=args.smoke,
                           json_path=args.streaming_json).emit()
+    elif args.multitenant_only:
+        multitenant_profile(smoke=args.smoke,
+                            json_path=args.multitenant_json).emit()
     else:
         for t in run():
             t.emit()

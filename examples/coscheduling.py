@@ -1,8 +1,11 @@
 """Co-scheduling shuffles across tenants (paper §6, implemented).
 
 Three tenants (a Spark-like job, a Pregel job, an ad-hoc query) submit
-shuffles concurrently; the manager plans them as coflows under three
-policies and reports mean coflow-completion time and makespan.
+shuffles concurrently; the manager plans them as coflows under four policies
+(FIFO, SEBF, max-min fair, weighted-fair queuing) and reports mean
+coflow-completion time and makespan.  For the full service-integrated path —
+tenants submitting into a cluster's admission queue and `run_pending()`
+executing the scheduled order — see ``examples/multitenant.py``.
 
     PYTHONPATH=src python examples/coscheduling.py
 """
@@ -26,7 +29,7 @@ def main() -> None:
         make_request("pregel-pr", "superstep-3", nw, 6_000, seed=2),   # medium
         make_request("adhoc-sql", "join-1", nw, 800, seed=3, weight=2.0),  # small, prioritized
     ]
-    for policy in ("fifo", "sebf", "fair"):
+    for policy in ("fifo", "sebf", "fair", "wfair"):
         sched = CoflowScheduler(topo, policy)
         plan = sched.plan(requests)
         print(f"[{policy}]  mean CCT {sched.mean_cct(plan)*1e3:7.2f} ms   "

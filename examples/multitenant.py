@@ -1,0 +1,77 @@
+"""Multi-tenant shuffle-as-a-service: one cluster, many applications.
+
+Three applications share one :class:`TeShuCluster`: a Spark-like ETL job
+(big, uniform), a Pregel job (medium, skewed), and an ad-hoc SQL tenant
+(small, prioritized).  The tour shows
+
+1. per-tenant handles with private plan-cache namespaces (the ETL tenant's
+   iterative workload hits its own cache; the others stay cold),
+2. tenant-tagged ledger lanes and journal records, and
+3. the admission queue: the same three submissions run FIFO vs weighted-fair,
+   and the realized mean coflow-completion time is compared.
+
+    PYTHONPATH=src python examples/multitenant.py
+"""
+import numpy as np
+
+from repro.core import SUM, Msgs, TeShuCluster, datacenter
+
+
+def make_bufs(nw, n, keys, alpha, seed):
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, keys + 1, dtype=np.float64)
+    w = ranks ** -alpha if alpha > 0 else np.ones(keys)
+    cdf = np.cumsum(w) / np.sum(w)
+    return {wid: Msgs(np.searchsorted(cdf, rng.random(n)).astype(np.int64),
+                      rng.random((n, 1)))
+            for wid in range(nw)}
+
+
+def main() -> None:
+    topo = datacenter(4, 2, 2, oversubscription=4.0)
+    nw = topo.num_workers
+    workers = list(range(nw))
+
+    cluster = TeShuCluster(topo, admission="wfair")
+    etl = cluster.tenant("spark-etl", quota=32)
+    pregel = cluster.tenant("pregel-pr")
+    adhoc = cluster.tenant("adhoc-sql", priority=2.0)
+
+    # --- direct calls: isolation without ceremony --------------------------
+    print("== direct shuffles, private plan caches ==")
+    for _ in range(3):                     # iterative: superstep after superstep
+        etl.shuffle("network_aware", make_bufs(nw, 6_000, 4096, 0.0, 1),
+                    workers, workers, comb_fn=SUM)
+    pregel.shuffle("network_aware", make_bufs(nw, 2_000, 512, 1.2, 2),
+                   workers, workers, comb_fn=SUM)
+    for t in (etl, pregel, adhoc):
+        cs = t.cache_stats()
+        print(f"  {t.tenant_id:10s} cache hits={cs['hits']} "
+              f"misses={cs['misses']} size={cs['size']}  "
+              f"lane={t.stats()['bytes'] / 1e6:7.2f} MB")
+
+    # --- admission: FIFO vs weighted-fair ----------------------------------
+    print("\n== admission queue: big ETL submits first ==")
+    for policy in ("fifo", "wfair"):
+        cl = TeShuCluster(topo, admission=policy)
+        t_etl = cl.tenant("spark-etl")
+        t_pre = cl.tenant("pregel-pr")
+        t_ad = cl.tenant("adhoc-sql", priority=2.0)
+        t_etl.submit("vanilla_push", make_bufs(nw, 40_000, 4096, 0.0, 3),
+                     workers, workers, comb_fn=SUM, stage="stage-7")
+        t_pre.submit("vanilla_push", make_bufs(nw, 6_000, 512, 1.2, 4),
+                     workers, workers, comb_fn=SUM, stage="superstep-3")
+        t_ad.submit("vanilla_push", make_bufs(nw, 800, 2048, 0.0, 5),
+                    workers, workers, comb_fn=SUM, stage="join-1")
+        cl.run_pending()
+        sched = cl.last_schedule()
+        print(f"  [{policy}]  mean CCT {sched['mean_cct_s'] * 1e3:7.3f} ms   "
+              f"makespan {sched['makespan_s'] * 1e3:7.3f} ms")
+        for (tenant, stage), cct in sorted(sched["ccts"].items(),
+                                           key=lambda kv: kv[1]):
+            print(f"      {tenant:10s}/{stage:12s} done at "
+                  f"{cct * 1e3:7.3f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,8 @@
 """TeShu core: the paper's contribution — templated, adaptive, sampled shuffles."""
 from .adaptive import (EffCost, compute_eff_cost, eff_cost_from_ratio,
                        reduction_drift)
-from .coscheduler import CoflowRequest, CoflowScheduler, ScheduleEntry
+from .coscheduler import (POLICIES, CoflowRequest, CoflowScheduler,
+                          ScheduleEntry)
 from .manager import ShuffleManager, ShuffleRecord
 from .messages import (COMBINERS, HASH_PART, MAX, MIN, SUM, Combiner, Msgs, PartFn,
                        partition, range_part, splitmix64)
@@ -18,7 +19,10 @@ from .sampling import (estimate_reduction_ratio,
                        estimate_reduction_ratio_with_fallback, group_of,
                        num_groups_for_rate, partition_aware_sample,
                        random_sample, reduction_ratio, sample_with_fallback)
-from .service import TeShuService, dst_load_imbalance
+from .service import (TeShuCluster, TenantClient, TeShuService,
+                      dst_load_imbalance)
+from .tenancy import (DEFAULT_TENANT, AdmissionQueue, ShuffleSubmission,
+                      TenantRegistry, TenantSpec)
 from .skew import (DEFAULT_SKEW_THRESHOLD, HeavyHitterSketch, LocalSkewStats,
                    MAX_SKETCH_CAPACITY, MIN_SKETCH_CAPACITY, SkewDecision,
                    adaptive_sketch_capacity, imbalance, local_skew_stats,
@@ -55,6 +59,8 @@ __all__ = [
     "owner_merge_plan", "plan_rebalance", "scatter_part_fn",
     "dst_load_imbalance",
     "DEFAULT_CHUNK_BYTES", "DEFAULT_MAX_INFLIGHT", "ChunkPlan", "StreamSession",
+    "POLICIES", "DEFAULT_TENANT", "AdmissionQueue", "ShuffleSubmission",
+    "TenantRegistry", "TenantSpec", "TeShuCluster", "TenantClient",
     "TeShuService", "TEMPLATES", "ShuffleResult",
     "ShuffleTemplate", "register_template", "run_shuffle", "template_loc",
     "NetworkTopology", "Level", "datacenter", "degrade_links", "fat_tree",

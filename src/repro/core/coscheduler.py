@@ -12,13 +12,22 @@ same cluster, the manager can schedule their shuffle invocations *jointly*:
   - ``sebf``: smallest-effective-bottleneck-first (Varys-style) — schedule the
     coflow whose slowest worker finishes soonest, minimizing mean CCT;
   - ``fair``: weighted max-min fair sharing of each boundary's bandwidth
-    across tenants (no starvation, predictable per-tenant throughput).
+    across tenants (no starvation, predictable per-tenant throughput);
+  - ``wfair``: weighted fair queuing's serial approximation — coflows are
+    served in increasing *virtual finish time* ``bottleneck_time / weight``,
+    so a tenant's priority (and the admission layer's load-deficit boost,
+    derived from the ledger's sampled per-tenant byte lanes) directly buys
+    schedule position.  With equal weights this degenerates to SEBF; it is
+    the multi-tenant service's default admission policy.
 
 The scheduler runs against the same topology cost model the adaptive templates
-use: each coflow's demand is its per-worker, per-boundary byte matrix (from
-the shuffle plans), and serving order/shares translate into modelled
-completion times.  This is a *planning* layer: it decides execution order and
-bandwidth shares; execution itself still goes through `TeShuService.shuffle`.
+use: each coflow's demand is its per-worker, per-boundary byte matrix — either
+exact, or estimated from a deterministic row sample (``demand_rate``, the
+admission layer's cheap path) — and serving order/shares translate into
+modelled completion times.  This is a *planning* layer: it decides execution
+order and bandwidth shares; execution itself still goes through the service
+(``TeShuCluster.run_pending`` drains its admission queue through a plan from
+this scheduler).
 """
 from __future__ import annotations
 
@@ -48,18 +57,32 @@ class CoflowRequest:
         return (self.tenant, self.stage)
 
 
-def _boundary_bytes(req: CoflowRequest, topo: NetworkTopology) -> np.ndarray:
-    """bytes[level] this shuffle pushes across each topology boundary."""
+def _boundary_bytes(req: CoflowRequest, topo: NetworkTopology,
+                    rate: float | None = None) -> np.ndarray:
+    """bytes[level] this shuffle pushes across each topology boundary.
+
+    ``rate`` switches to the sampled estimator: every ``round(1/rate)``-th row
+    of each buffer is partitioned (deterministic stride — no RNG, so repeated
+    admission passes agree) and the per-boundary bytes are scaled back up.
+    The admission layer plans on these estimates; scheduling needs demand
+    *ratios*, not exact bytes, so a few percent of the rows suffice.
+    """
     nw = topo.num_workers
     out = np.zeros(len(topo.levels))
+    stride = 1 if rate is None else max(1, int(round(1.0 / max(rate, 1e-9))))
     for src, msgs in req.bufs.items():
         if msgs.n == 0:
             continue
-        parts = partition(msgs, list(range(nw)), req.part_fn)
+        if stride > 1:
+            sample = msgs.take(np.arange(0, msgs.n, stride))
+            scale = msgs.n / sample.n
+        else:
+            sample, scale = msgs, 1.0
+        parts = partition(sample, list(range(nw)), req.part_fn)
         for dst, m in parts.items():
             lv = topo.crossing_level(src, dst)
             if lv >= 0:
-                out[lv] += m.nbytes
+                out[lv] += m.nbytes * scale
     return out
 
 
@@ -82,14 +105,19 @@ class ScheduleEntry:
     share: float
 
 
+POLICIES = ("fifo", "sebf", "fair", "wfair")
+
+
 class CoflowScheduler:
     """Plan an execution order / bandwidth shares for pending shuffles."""
 
-    def __init__(self, topology: NetworkTopology, policy: str = "sebf"):
-        if policy not in ("fifo", "sebf", "fair"):
+    def __init__(self, topology: NetworkTopology, policy: str = "sebf",
+                 demand_rate: float | None = None):
+        if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}")
         self.topology = topology
         self.policy = policy
+        self.demand_rate = demand_rate      # None = exact demand matrices
 
     # -- demand aggregation ----------------------------------------------------
     def coflows(self, requests: Sequence[CoflowRequest]
@@ -99,7 +127,8 @@ class CoflowScheduler:
             c = out.setdefault(r.coflow_id, {
                 "demand": np.zeros(len(self.topology.levels)),
                 "arrival": r.arrival, "weight": r.weight, "n": 0})
-            c["demand"] += _boundary_bytes(r, self.topology)
+            c["demand"] += _boundary_bytes(r, self.topology,
+                                           rate=self.demand_rate)
             c["arrival"] = min(c["arrival"], r.arrival)
             c["n"] += 1
         return out
@@ -112,6 +141,13 @@ class CoflowScheduler:
         order = list(cf.items())
         if self.policy == "fifo":
             order.sort(key=lambda kv: kv[1]["arrival"])
+        elif self.policy == "wfair":
+            # weighted fair queuing, serial service: increasing virtual finish
+            # time demand/weight — priority (and the admission layer's load
+            # deficit boost) buys schedule position; equal weights => SEBF
+            order.sort(key=lambda kv: _bottleneck_time(kv[1]["demand"],
+                                                       self.topology)
+                       / max(kv[1]["weight"], 1e-9))
         else:                                   # sebf: shortest bottleneck first
             order.sort(key=lambda kv: _bottleneck_time(kv[1]["demand"],
                                                        self.topology))

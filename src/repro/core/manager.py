@@ -27,6 +27,7 @@ import time
 from typing import Iterable
 
 from .plancache import PlanCache
+from .tenancy import DEFAULT_TENANT
 from .templates import TEMPLATES, ShuffleTemplate
 
 
@@ -40,7 +41,10 @@ class ShuffleRecord:
     recovery's restart-set evidence), ``failure`` (detector diagnosis),
     ``recovery`` (restart/resume decision for a retry attempt), ``speculation``
     (straggler work duplicated onto backups).  Old journals (no ``stage`` /
-    ``attempt`` / ``info`` fields) still replay: the new fields default.
+    ``attempt`` / ``info`` / ``tenant`` fields) still replay: the new fields
+    default — in particular, records written before the multi-tenant service
+    existed belong to :data:`~repro.core.tenancy.DEFAULT_TENANT`, which is
+    exactly the tenant the single-application facade runs as.
     """
 
     wid: int
@@ -51,6 +55,7 @@ class ShuffleRecord:
     stage: str | None = None
     attempt: int = 0
     info: dict | None = None
+    tenant: str = DEFAULT_TENANT
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -60,6 +65,8 @@ class ShuffleRecord:
             del d["info"]
         if self.attempt == 0:
             del d["attempt"]
+        if self.tenant == DEFAULT_TENANT:
+            del d["tenant"]         # single-tenant journals keep the seed format
         return json.dumps(d)
 
     @staticmethod
@@ -118,43 +125,56 @@ class ShuffleManager:
                 j.write(rec.to_json() + "\n")
 
     def record_start(self, wid: int, shuffle_id: int, template_id: str,
-                     attempt: int = 0) -> None:
+                     attempt: int = 0, tenant: str = DEFAULT_TENANT) -> None:
         self._append(ShuffleRecord(wid, shuffle_id, template_id, "start",
-                                   self._clock(), attempt=attempt))
+                                   self._clock(), attempt=attempt, tenant=tenant))
 
     def record_end(self, wid: int, shuffle_id: int, template_id: str,
-                   attempt: int = 0) -> None:
+                   attempt: int = 0, tenant: str = DEFAULT_TENANT) -> None:
         self._append(ShuffleRecord(wid, shuffle_id, template_id, "end",
-                                   self._clock(), attempt=attempt))
+                                   self._clock(), attempt=attempt, tenant=tenant))
 
     # ---- resilience records (journal-driven recovery, §6) ----------------------
     def record_stage(self, wid: int, shuffle_id: int, template_id: str,
-                     stage: str, attempt: int = 0) -> None:
+                     stage: str, attempt: int = 0,
+                     tenant: str = DEFAULT_TENANT) -> None:
         """A worker finished one hierarchy stage (and checkpointed it).  On a
         recovery attempt these records are the proof of *which* participants
         re-executed — the §6 "restart a subset" contract is asserted on them."""
         self._append(ShuffleRecord(wid, shuffle_id, template_id, "stage",
-                                   self._clock(), stage=stage, attempt=attempt))
+                                   self._clock(), stage=stage, attempt=attempt,
+                                   tenant=tenant))
 
-    def record_failure(self, shuffle_id: int, info: dict, attempt: int = 0) -> None:
+    def record_failure(self, shuffle_id: int, info: dict, attempt: int = 0,
+                       tenant: str = DEFAULT_TENANT) -> None:
         self._append(ShuffleRecord(-1, shuffle_id, "", "failure", self._clock(),
-                                   attempt=attempt, info=info))
+                                   attempt=attempt, info=info, tenant=tenant))
 
-    def record_recovery(self, shuffle_id: int, info: dict, attempt: int = 0) -> None:
+    def record_recovery(self, shuffle_id: int, info: dict, attempt: int = 0,
+                        tenant: str = DEFAULT_TENANT) -> None:
         self._append(ShuffleRecord(-1, shuffle_id, "", "recovery", self._clock(),
-                                   attempt=attempt, info=info))
+                                   attempt=attempt, info=info, tenant=tenant))
 
     def record_speculation(self, shuffle_id: int, info: dict,
-                           attempt: int = 0) -> None:
+                           attempt: int = 0,
+                           tenant: str = DEFAULT_TENANT) -> None:
         self._append(ShuffleRecord(-1, shuffle_id, "", "speculation",
-                                   self._clock(), attempt=attempt, info=info))
+                                   self._clock(), attempt=attempt, info=info,
+                                   tenant=tenant))
 
     def records(self, shuffle_id: int | None = None,
-                kind: str | None = None) -> list[ShuffleRecord]:
+                kind: str | None = None,
+                tenant: str | None = None) -> list[ShuffleRecord]:
         with self._lock:
             return [r for r in self._records
                     if (shuffle_id is None or r.shuffle_id == shuffle_id)
-                    and (kind is None or r.kind == kind)]
+                    and (kind is None or r.kind == kind)
+                    and (tenant is None or r.tenant == tenant)]
+
+    def tenants(self) -> list[str]:
+        """Every tenant that appears in the journal (replayed or live)."""
+        with self._lock:
+            return sorted({r.tenant for r in self._records})
 
     def stage_records(self, shuffle_id: int,
                       attempt: int | None = None) -> list[ShuffleRecord]:

@@ -44,6 +44,7 @@ from .adaptive import EffCost, reduction_drift
 from .messages import Combiner, Msgs, PartFn, splitmix64
 from .skew import SkewDecision
 from .streaming import ChunkPlan
+from .tenancy import DEFAULT_TENANT
 from .topology import NetworkTopology
 
 # Levels whose observed reduction drifts by more than this (absolute) from the
@@ -275,12 +276,40 @@ def compile_plan(
 # The cache
 # ---------------------------------------------------------------------------
 
+# The counter set every namespace (and the pooled view) carries; one literal
+# so adding a counter cannot silently diverge the three stats surfaces.
+_STATS_KEYS = ("hits", "misses", "invalidations", "refreshes", "evictions",
+               "repairs")
+
+
+class _Namespace:
+    """One tenant's private plan store: its own LRU order, budget, counters."""
+
+    __slots__ = ("plans", "hits_by_key", "capacity", "stats")
+
+    def __init__(self, capacity: int):
+        self.plans: OrderedDict[tuple, CompiledPlan] = OrderedDict()
+        self.hits_by_key: dict[tuple, int] = {}
+        self.capacity = capacity
+        self.stats = dict.fromkeys(_STATS_KEYS, 0)
+
+
 class PlanCache:
-    """LRU cache of :class:`CompiledPlan` with drift-based invalidation.
+    """Tenant-namespaced LRU cache of :class:`CompiledPlan` with drift-based
+    invalidation.
+
+    Every operation takes a ``tenant`` namespace (default: the single-tenant
+    facade's :data:`~repro.core.tenancy.DEFAULT_TENANT`); namespaces are fully
+    isolated — a lookup never returns another tenant's plan, and each
+    namespace runs its own LRU under its own entry budget, so one tenant's
+    churn cannot evict another's working set.  ``capacity`` is the budget a
+    namespace gets unless :meth:`set_budget` assigns it one (the service maps
+    the tenant's ``quota`` knob to that call).
 
     Thread-safe: the manager serving multiple application threads shares one
-    instance.  ``stats()`` exposes hit/miss/invalidation counters (surfaced by the
-    service, the launch drivers, and the benchmarks).
+    instance.  ``stats()`` exposes pooled hit/miss/invalidation counters plus
+    a per-tenant breakdown (surfaced by the service, the launch drivers, and
+    the benchmarks).
     """
 
     def __init__(self, capacity: int = 256, *,
@@ -293,85 +322,120 @@ class PlanCache:
         self.drift_tolerance = drift_tolerance
         self.skew_drift_tolerance = skew_drift_tolerance
         self.refresh_every = refresh_every          # 0 = never force re-instantiation
-        self._plans: OrderedDict[tuple, CompiledPlan] = OrderedDict()
-        self._hits_by_key: dict[tuple, int] = {}
+        self._spaces: dict[str, _Namespace] = {}
         self._lock = threading.Lock()
-        self._stats = {"hits": 0, "misses": 0, "invalidations": 0, "refreshes": 0,
-                       "evictions": 0, "repairs": 0}
+
+    def _space(self, tenant: str) -> _Namespace:
+        ns = self._spaces.get(tenant)
+        if ns is None:
+            ns = self._spaces[tenant] = _Namespace(self.capacity)
+        return ns
+
+    def set_budget(self, tenant: str, capacity: int) -> None:
+        """Assign ``tenant``'s namespace its own LRU entry budget (shrinking
+        below the current size evicts LRU-first immediately)."""
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1: {capacity}")
+        with self._lock:
+            ns = self._space(tenant)
+            ns.capacity = capacity
+            while len(ns.plans) > ns.capacity:
+                old, _ = ns.plans.popitem(last=False)
+                ns.hits_by_key.pop(old, None)
+                ns.stats["evictions"] += 1
 
     # ---- lookup --------------------------------------------------------------
-    def get(self, key: tuple) -> CompiledPlan | None:
+    def get(self, key: tuple, tenant: str = DEFAULT_TENANT) -> CompiledPlan | None:
         with self._lock:
-            plan = self._plans.get(key)
+            ns = self._space(tenant)
+            plan = ns.plans.get(key)
             if plan is None:
-                self._stats["misses"] += 1
+                ns.stats["misses"] += 1
                 return None
-            hits = self._hits_by_key.get(key, 0) + 1
+            hits = ns.hits_by_key.get(key, 0) + 1
             if self.refresh_every and hits > self.refresh_every:
                 # Periodic refresh: drop the entry so rejected stages (which emit
                 # no drift observations) get re-evaluated from fresh samples.
-                del self._plans[key]
-                del self._hits_by_key[key]
-                self._stats["refreshes"] += 1
-                self._stats["misses"] += 1
+                del ns.plans[key]
+                del ns.hits_by_key[key]
+                ns.stats["refreshes"] += 1
+                ns.stats["misses"] += 1
                 return None
-            self._hits_by_key[key] = hits
-            self._plans.move_to_end(key)
-            self._stats["hits"] += 1
+            ns.hits_by_key[key] = hits
+            ns.plans.move_to_end(key)
+            ns.stats["hits"] += 1
             return plan
 
-    def put(self, key: tuple, plan: CompiledPlan, *, repaired: bool = False) -> None:
+    def put(self, key: tuple, plan: CompiledPlan, *, repaired: bool = False,
+            tenant: str = DEFAULT_TENANT) -> None:
         with self._lock:
+            ns = self._space(tenant)
             if repaired:
-                self._stats["repairs"] += 1
-            self._plans[key] = plan
-            self._plans.move_to_end(key)
-            self._hits_by_key.setdefault(key, 0)
-            while len(self._plans) > self.capacity:
-                old, _ = self._plans.popitem(last=False)
-                self._hits_by_key.pop(old, None)
-                self._stats["evictions"] += 1
+                ns.stats["repairs"] += 1
+            ns.plans[key] = plan
+            ns.plans.move_to_end(key)
+            ns.hits_by_key.setdefault(key, 0)
+            while len(ns.plans) > ns.capacity:
+                old, _ = ns.plans.popitem(last=False)
+                ns.hits_by_key.pop(old, None)
+                ns.stats["evictions"] += 1
 
-    def scan(self) -> list[tuple[tuple, CompiledPlan]]:
-        """Snapshot of (key, plan) pairs, MRU last.  Used by the resilience
-        layer's plan repair to find a healthy-topology base plan for a degraded
-        scenario; does not touch hit/miss accounting or LRU order."""
+    def scan(self, tenant: str = DEFAULT_TENANT) -> list[tuple[tuple, CompiledPlan]]:
+        """Snapshot of (key, plan) pairs, MRU last, within one tenant's
+        namespace.  Used by the resilience layer's plan repair to find a
+        healthy-topology base plan for a degraded scenario — repair never
+        crosses tenant namespaces; does not touch hit/miss accounting or LRU
+        order."""
         with self._lock:
-            return list(self._plans.items())
+            return list(self._space(tenant).plans.items())
 
-    def invalidate(self, key: tuple) -> bool:
+    def invalidate(self, key: tuple, tenant: str = DEFAULT_TENANT) -> bool:
         with self._lock:
-            if key in self._plans:
-                del self._plans[key]
-                self._hits_by_key.pop(key, None)
-                self._stats["invalidations"] += 1
+            ns = self._space(tenant)
+            if key in ns.plans:
+                del ns.plans[key]
+                ns.hits_by_key.pop(key, None)
+                ns.stats["invalidations"] += 1
                 return True
             return False
 
-    def clear(self) -> None:
+    def clear(self, tenant: str | None = None) -> None:
+        """Empty one tenant's namespace, or every namespace when ``None``.
+
+        Only the cached plans are dropped — each namespace keeps its budget
+        (the service's ``quota`` assignment) and its counters, so flushing
+        plans never lets a tenant escape its quota."""
         with self._lock:
-            self._plans.clear()
-            self._hits_by_key.clear()
+            if tenant is None:
+                spaces = list(self._spaces.values())
+            else:
+                ns = self._spaces.get(tenant)
+                spaces = [ns] if ns is not None else []
+            for ns in spaces:
+                ns.plans.clear()
+                ns.hits_by_key.clear()
 
     # ---- drift ---------------------------------------------------------------
-    def observe(self, key: tuple, observed: dict[str, float]) -> bool:
+    def observe(self, key: tuple, observed: dict[str, float],
+                tenant: str = DEFAULT_TENANT) -> bool:
         """Feed measured per-level reduction ratios from a cached execution.
 
         Returns True (and drops the entry) if any level's observation drifted
         beyond ``drift_tolerance`` from the plan's baseline.
         """
         with self._lock:
-            plan = self._plans.get(key)
+            plan = self._space(tenant).plans.get(key)
         if plan is None:
             return False
         for level_name, r_obs in observed.items():
             ld = plan.level(level_name)
             if ld is not None and reduction_drift(ld.baseline_r, r_obs,
                                                   tolerance=self.drift_tolerance):
-                return self.invalidate(key)
+                return self.invalidate(key, tenant)
         return False
 
-    def observe_loads(self, key: tuple, observed_imbalance: float) -> bool:
+    def observe_loads(self, key: tuple, observed_imbalance: float,
+                      tenant: str = DEFAULT_TENANT) -> bool:
         """Feed the measured per-destination load imbalance (max/mean received
         bytes) from a cached execution.
 
@@ -383,23 +447,53 @@ class PlanCache:
         drops the entry) on drift.
         """
         with self._lock:
-            plan = self._plans.get(key)
+            plan = self._space(tenant).plans.get(key)
         if plan is None or plan.skew is None or plan.baseline_imbalance is None:
             return False
         if abs(plan.baseline_imbalance - observed_imbalance) \
                 > self.skew_drift_tolerance:
-            return self.invalidate(key)
+            return self.invalidate(key, tenant)
         return False
 
     # ---- introspection -------------------------------------------------------
-    def stats(self) -> dict:
+    def stats(self, tenant: str | None = None) -> dict:
+        """Pooled counters + total size, plus a ``tenants`` per-namespace
+        breakdown; with ``tenant`` given, that namespace's counters alone."""
         with self._lock:
-            return dict(self._stats, size=len(self._plans))
+            if tenant is not None:
+                ns = self._spaces.get(tenant)
+                if ns is None:
+                    return dict(dict.fromkeys(_STATS_KEYS, 0), size=0,
+                                capacity=self.capacity)
+                return dict(ns.stats, size=len(ns.plans), capacity=ns.capacity)
+            pooled = dict.fromkeys(_STATS_KEYS, 0)
+            size = 0
+            per_tenant: dict[str, dict] = {}
+            for t, ns in self._spaces.items():
+                for k in pooled:
+                    pooled[k] += ns.stats[k]
+                size += len(ns.plans)
+                per_tenant[t] = dict(ns.stats, size=len(ns.plans),
+                                     capacity=ns.capacity)
+            return dict(pooled, size=size, tenants=per_tenant)
+
+    def has(self, key: tuple, tenant: str = DEFAULT_TENANT) -> bool:
+        """Membership within one tenant's namespace (no LRU/stats effects).
+        This is the lookup-predicate form; ``in`` aggregates across tenants."""
+        with self._lock:
+            ns = self._spaces.get(tenant)
+            return ns is not None and key in ns.plans
 
     def __len__(self) -> int:
+        """Total cached plans across ALL namespaces (introspection aggregate;
+        use :meth:`stats` for the per-tenant breakdown)."""
         with self._lock:
-            return len(self._plans)
+            return sum(len(ns.plans) for ns in self._spaces.values())
 
     def __contains__(self, key: tuple) -> bool:
+        """True if ANY tenant's namespace holds ``key`` — an introspection
+        aggregate, not a lookup predicate: a hit here does not mean
+        ``get(key, tenant)`` will succeed for a given tenant (use
+        :meth:`has` for namespace-scoped membership)."""
         with self._lock:
-            return key in self._plans
+            return any(key in ns.plans for ns in self._spaces.values())

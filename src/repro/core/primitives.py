@@ -26,6 +26,7 @@ from .messages import Combiner, Msgs, PartFn, partition
 from .sampling import partition_aware_sample, sample_with_fallback
 from .skew import (DEFAULT_SKEW_THRESHOLD, LocalSkewStats, merge_skew_stats,
                    plan_rebalance)
+from .tenancy import DEFAULT_TENANT
 from .topology import NetworkTopology
 
 
@@ -74,6 +75,12 @@ class CostLedger:
         # hash-partitioned hot key lands on is the shuffle's tail).  Sample
         # shipments are control-plane traffic and are never counted here.
         self._recv_bytes: dict[int, int] = {}
+        # per-tenant lanes: every charge is tagged with the tenant whose
+        # shuffle issued it, so a shared cluster can report (and the admission
+        # layer can schedule on) each tenant's observed byte load and the
+        # serialized seconds of transfer/combine work it charged.
+        self._tenant_bytes: dict[str, int] = {}
+        self._tenant_cost: dict[str, float] = {}
         # current (open) epoch: per-worker serialized cost + levels crossed
         self._cur_cost: dict[int, float] = collections.defaultdict(float)
         self._cur_levels: set[int] = set()
@@ -85,14 +92,22 @@ class CostLedger:
         self._stream_levels: set[int] = set()
         self._closed_time = 0.0                              # folded epochs
 
+    def _charge_lane(self, tenant: str | None, nbytes: int, cost: float) -> None:
+        """Fold a charge into its tenant's lane (lock held by the caller)."""
+        t = DEFAULT_TENANT if tenant is None else tenant
+        self._tenant_bytes[t] = self._tenant_bytes.get(t, 0) + nbytes
+        self._tenant_cost[t] = self._tenant_cost.get(t, 0.0) + cost
+
     def charge_transfer(self, wid: int, level: int, nbytes: int, *, sample: bool = False,
-                        dst: int | None = None, chunk: int | None = None) -> None:
+                        dst: int | None = None, chunk: int | None = None,
+                        tenant: str | None = None) -> None:
         if level < 0 or nbytes == 0:
             return
         with self._lock:
             self._bytes_per_level[level] += nbytes
             self._total_bytes += nbytes
             cost = nbytes / self.topology.levels[level].bw_bytes_per_s
+            self._charge_lane(tenant, nbytes, cost)
             if chunk is None:
                 self._cur_cost[wid] += cost
                 self._cur_levels.add(level)
@@ -108,7 +123,8 @@ class CostLedger:
 
     def charge_transfers(self, wid: int, levels: np.ndarray, nbytes: np.ndarray,
                          *, sample: bool = False, dsts: np.ndarray | None = None,
-                         chunk: int | None = None) -> None:
+                         chunk: int | None = None,
+                         tenant: str | None = None) -> None:
         """Batched charge for one worker: vectorized aggregation, one lock pass.
 
         The vectorized executor produces per-destination (level, bytes) arrays in
@@ -130,6 +146,7 @@ class CostLedger:
         with self._lock:
             self._bytes_per_level += per_level
             self._total_bytes += total
+            self._charge_lane(tenant, total, cost)
             if chunk is None:
                 self._cur_cost[wid] += cost
                 self._cur_levels.update(int(l) for l in np.nonzero(per_level)[0])
@@ -145,9 +162,11 @@ class CostLedger:
                     self._recv_bytes[int(d)] = (self._recv_bytes.get(int(d), 0)
                                                 + int(b))
 
-    def charge_combine(self, wid: int, nbytes: int, *, chunk: int | None = None) -> None:
+    def charge_combine(self, wid: int, nbytes: int, *, chunk: int | None = None,
+                       tenant: str | None = None) -> None:
         cost = nbytes / self.topology.levels[0].combine_bytes_per_s
         with self._lock:
+            self._charge_lane(tenant, 0, cost)   # combine moves no wire bytes
             if chunk is None:
                 self._cur_cost[wid] += cost
             else:
@@ -221,6 +240,12 @@ class CostLedger:
             return (self._closed_time + self._open_epoch_time()
                     + self._open_stream_time())
 
+    def tenant_bytes(self) -> dict[str, int]:
+        """Per-tenant data+sample bytes charged so far (the sampled load
+        statistic the admission layer's fairness weights feed on)."""
+        with self._lock:
+            return dict(self._tenant_bytes)
+
     def snapshot(self) -> dict:
         with self._lock:
             return {
@@ -229,6 +254,8 @@ class CostLedger:
                                     for i, lv in enumerate(self.topology.levels)},
                 "sample_bytes": self.sample_bytes,
                 "recv_bytes_per_worker": dict(self._recv_bytes),
+                "bytes_per_tenant": dict(self._tenant_bytes),
+                "cost_per_tenant": dict(self._tenant_cost),
                 "modelled_time_s": (self._closed_time + self._open_epoch_time()
                                     + self._open_stream_time()),
             }
@@ -237,6 +264,8 @@ class CostLedger:
     def delta(before: dict, after: dict) -> dict:
         """Difference of two snapshots — the per-shuffle stats block."""
         recv_before = before.get("recv_bytes_per_worker", {})
+        tb_before = before.get("bytes_per_tenant", {})
+        tc_before = before.get("cost_per_tenant", {})
         return {
             "total_bytes": after["total_bytes"] - before["total_bytes"],
             "sample_bytes": after["sample_bytes"] - before["sample_bytes"],
@@ -247,6 +276,12 @@ class CostLedger:
             "recv_bytes_per_worker": {
                 w: b - recv_before.get(w, 0)
                 for w, b in after.get("recv_bytes_per_worker", {}).items()},
+            "bytes_per_tenant": {
+                t: b - tb_before.get(t, 0)
+                for t, b in after.get("bytes_per_tenant", {}).items()},
+            "cost_per_tenant": {
+                t: c - tc_before.get(t, 0.0)
+                for t, c in after.get("cost_per_tenant", {}).items()},
         }
 
 
@@ -372,6 +407,7 @@ class ShuffleArgs:
     comb_fn: Combiner | None
     rate: float = 0.01            # $RATE
     seed: int = 0
+    tenant: str = DEFAULT_TENANT  # owning tenant: journal + ledger-lane tag
     balance: str = "off"          # "off" | "auto": skew-aware instantiation
     skew_threshold: float = DEFAULT_SKEW_THRESHOLD
     plan: "object | None" = None  # CompiledPlan (kept untyped: no core cycle)
@@ -471,17 +507,23 @@ class LocalCluster:
                     nparticipants, abort_event=self.abort_event(key[0]))
             return rv
 
-    def end_shuffle(self, shuffle_id: int, *, aborted: bool = False) -> None:
+    def end_shuffle(self, shuffle_id: int, *, aborted: bool = False,
+                    participants: Sequence[int] | None = None) -> None:
         """Free per-invocation control state (rendezvous, publish boards).
 
         All such state is keyed ``(shuffle_id, ...)``; without this, a long-lived
         service running one shuffle per superstep/step — exactly the regime the
         plan cache targets — grows memory linearly with shuffle count.
 
-        ``aborted=True`` (failure/timeout path) additionally discards all
-        mailboxes: they are keyed ``(src, dst)`` with no shuffle id, so undelivered
+        ``aborted=True`` (failure/timeout path) additionally discards mailboxes:
+        they are keyed ``(src, dst)`` with no shuffle id, so undelivered
         messages from the aborted run would otherwise be RECV'd by a retry and
-        silently corrupt its output.
+        silently corrupt its output.  When the aborted shuffle's
+        ``participants`` are known, only the queues *between* them are dropped
+        (its messages can live nowhere else) — a concurrent shuffle on a
+        disjoint worker set (another tenant's, in the multi-tenant service)
+        keeps its in-flight queues untouched.  Without a participant set the
+        cleanup falls back to orphaning every queue.
         """
         with self._rv_lock:
             for k in [k for k in self._rendezvous if k[0] == shuffle_id]:
@@ -493,7 +535,15 @@ class LocalCluster:
         self._abort_ev.pop(shuffle_id, None)
         self._unreachable.pop(shuffle_id, None)
         if aborted:
-            self._mail = {}   # orphan old queues; lingering workers can't pollute
+            if participants is None:
+                self._mail = {}   # orphan old queues; lingerers can't pollute
+            else:
+                ps = set(participants)
+                # in-place removal: concurrent shuffles keep inserting into
+                # (and draining) this dict, so never swap the object out
+                for k in [k for k in list(self._mail)
+                          if k[0] in ps and k[1] in ps]:
+                    self._mail.pop(k, None)
 
     def run_workers(self, wids: Sequence[int], fn: Callable[[int], object],
                     timeout: float | None = None,
@@ -600,7 +650,8 @@ class WorkerContext:
         self._check_fault()
         level = self.topology.crossing_level(self.wid, dst)
         self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes,
-                                            sample=sample, dst=dst, chunk=chunk)
+                                            sample=sample, dst=dst, chunk=chunk,
+                                            tenant=self.args.tenant)
         self.cluster._mailbox(self.wid, dst).put(msgs)
 
     def SEND_EOS(self, dst: int, nchunks: int) -> None:
@@ -651,7 +702,8 @@ class WorkerContext:
         msgs = self.cluster._published[key].get(self.wid, Msgs.empty())
         level = self.topology.crossing_level(src, self.wid)
         self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes,
-                                            dst=self.wid)
+                                            dst=self.wid,
+                                            tenant=self.args.tenant)
         return msgs
 
     def FETCH_CHUNK(self, src: int, chunk: int,
@@ -682,7 +734,8 @@ class WorkerContext:
         msgs = self.cluster._published[key].get(self.wid, Msgs.empty())
         level = self.topology.crossing_level(src, self.wid)
         self.cluster.ledger.charge_transfer(self.wid, level, msgs.nbytes,
-                                            dst=self.wid, chunk=chunk)
+                                            dst=self.wid, chunk=chunk,
+                                            tenant=self.args.tenant)
         return msgs
 
     def PART(self, msgs: Msgs, dsts: Sequence[int], part_fn: PartFn | None = None,
@@ -709,7 +762,8 @@ class WorkerContext:
         batch = Msgs.concat(list(msgs)) if not isinstance(msgs, Msgs) else msgs
         if comb is None:
             return batch
-        self.cluster.ledger.charge_combine(self.wid, batch.nbytes)
+        self.cluster.ledger.charge_combine(self.wid, batch.nbytes,
+                                           tenant=self.args.tenant)
         return comb(batch)
 
     def COMB_INC(self, acc: Msgs | None, msgs: Msgs, *,
@@ -728,7 +782,8 @@ class WorkerContext:
         batch = msgs if acc is None else Msgs.concat([acc, msgs])
         if comb is None:
             return batch
-        self.cluster.ledger.charge_combine(self.wid, msgs.nbytes, chunk=chunk)
+        self.cluster.ledger.charge_combine(self.wid, msgs.nbytes, chunk=chunk,
+                                           tenant=self.args.tenant)
         return comb(batch)
 
     def SAMP(self, msgs: Msgs, rate: float | None = None,
@@ -896,7 +951,8 @@ class WorkerContext:
         level = self.topology.crossing_level(self.wid, server)
         nbytes = (sum(s.nbytes for s in sample) if isinstance(sample, list)
                   else sample.nbytes)
-        self.cluster.ledger.charge_transfer(self.wid, level, nbytes, sample=True)
+        self.cluster.ledger.charge_transfer(self.wid, level, nbytes, sample=True,
+                                            tenant=self.args.tenant)
         try:                     # stage-scoped when the tag names a level (the
             n = self._stage_participants(self.topology.level_index(tag))
         except KeyError:         # adaptive template's use); else every src
@@ -925,7 +981,8 @@ class WorkerContext:
         server = participants[0]
         level = self.topology.crossing_level(self.wid, server)
         self.cluster.ledger.charge_transfer(self.wid, level, stats.nbytes,
-                                            sample=True)
+                                            sample=True,
+                                            tenant=self.args.tenant)
         rv = self.cluster.rendezvous((self.args.shuffle_id, "skew"),
                                      len(participants))
 

@@ -28,6 +28,7 @@ from typing import Callable
 from ..manager import ShuffleManager
 from ..messages import Msgs
 from ..primitives import LocalCluster
+from ..tenancy import DEFAULT_TENANT
 from ..topology import NetworkTopology
 
 from .detector import FailureReport
@@ -188,22 +189,26 @@ class RecoveryCoordinator:
         self.store = store
 
     def _stage_recorder(self, shuffle_id: int, template_id: str,
-                        attempt: int) -> Callable[[int, str], None]:
+                        attempt: int,
+                        tenant: str = DEFAULT_TENANT) -> Callable[[int, str], None]:
         def record(wid: int, stage: str) -> None:
             self.manager.record_stage(wid, shuffle_id, template_id, stage,
-                                      attempt=attempt)
+                                      attempt=attempt, tenant=tenant)
         return record
 
     def initial_context(self, shuffle_id: int, template_id: str,
-                        speculated: frozenset = frozenset()) -> RecoveryContext:
+                        speculated: frozenset = frozenset(),
+                        tenant: str = DEFAULT_TENANT) -> RecoveryContext:
         return RecoveryContext(
             store=self.store, attempt=0, speculated=speculated,
-            record_stage=self._stage_recorder(shuffle_id, template_id, 0))
+            record_stage=self._stage_recorder(shuffle_id, template_id, 0,
+                                              tenant=tenant))
 
     def prepare_retry(self, shuffle_id: int, template_id: str, srcs,
                       topology: NetworkTopology, report: FailureReport,
                       attempt: int,
-                      speculated: frozenset = frozenset()) -> RecoveryContext:
+                      speculated: frozenset = frozenset(),
+                      tenant: str = DEFAULT_TENANT) -> RecoveryContext:
         """Restart the dead, compute the minimal restart set, journal it.
 
         The restart set (workers that will re-execute at least one stage) is
@@ -222,8 +227,9 @@ class RecoveryCoordinator:
             "restart_set": restart,
             "resume_stages": {str(w): s for w, s in sorted(resume.items())},
             "failure_kind": report.kind,
-        }, attempt=attempt)
+        }, attempt=attempt, tenant=tenant)
         return RecoveryContext(
             store=self.store, attempt=attempt, resume_stages=resume,
             speculated=speculated,
-            record_stage=self._stage_recorder(shuffle_id, template_id, attempt))
+            record_stage=self._stage_recorder(shuffle_id, template_id, attempt,
+                                              tenant=tenant))

@@ -25,6 +25,7 @@ from ..adaptive import eff_cost_from_ratio
 from ..messages import PartFn
 from ..plancache import CompiledPlan, LevelDecision, PlanCache
 from ..skew import estimate_slot_loads, plan_rebalance
+from ..tenancy import DEFAULT_TENANT
 from ..topology import Level, NetworkTopology
 
 
@@ -143,19 +144,22 @@ def _signature_shrinks_to(big_sig: tuple, small_sig: tuple) -> bool:
 
 
 def try_repair(cache: PlanCache, key: tuple, topology: NetworkTopology,
-               part_fn: PartFn | None = None) -> CompiledPlan | None:
+               part_fn: PartFn | None = None,
+               tenant: str = DEFAULT_TENANT) -> CompiledPlan | None:
     """On a cache miss, try to derive the missing plan from a cached relative.
 
     ``key`` is the (missed) full plan key ``(template, fingerprint, srcs,
     dsts, signature)``.  Candidates must match the template and differ only by
     topology fingerprint (link degradation, same signature) or by a
     participant superset (worker loss, signature minus the lost workers'
-    count entries).  On success the repaired plan is cached under ``key`` —
-    so the *next* identical failure scenario is a plain cache hit — and the
-    cache's ``repairs`` counter increments.
+    count entries).  Candidates come from ``tenant``'s namespace alone —
+    repair never adapts (or leaks) another tenant's plans.  On success the
+    repaired plan is cached under ``key`` in the same namespace — so the
+    *next* identical failure scenario is a plain cache hit — and the cache's
+    ``repairs`` counter increments.
     """
     template_id, fingerprint, srcs, dsts, signature = key
-    for cand_key, plan in reversed(cache.scan()):       # MRU candidates first
+    for cand_key, plan in reversed(cache.scan(tenant)):  # MRU candidates first
         c_template, c_fp, c_srcs, c_dsts, c_sig = cand_key
         if c_template != template_id:
             continue
@@ -173,6 +177,6 @@ def try_repair(cache: PlanCache, key: tuple, topology: NetworkTopology,
                                       **kwargs)
         except ValueError:
             continue
-        cache.put(key, repaired, repaired=True)
+        cache.put(key, repaired, repaired=True, tenant=tenant)
         return repaired
     return None

@@ -1,8 +1,40 @@
-"""The TeShu service facade: the ``shuffle(...)`` call of Table 1.
+"""The TeShu service layer: a cluster-wide shuffle service, many tenants.
 
-An infrastructure provider deploys one :class:`TeShuService` per cluster (here, per
-simulated :class:`LocalCluster`); applications invoke :meth:`shuffle` exactly as in
-the paper — worker set, template id, shuffle id, buffers, partFunc, combFunc.
+The paper frames TeShu as "an extensible unified service layer common to all
+data analytics": an infrastructure provider deploys **one** shuffle service
+per cluster, and *many* applications program against it.  The public API is
+therefore two-level:
+
+* :class:`TeShuCluster` — the cluster-scoped deployment: owns the topology,
+  the worker pool (:class:`LocalCluster`), the Shuffle Manager + journal, the
+  plan cache, the resilience machinery, the tenant registry, and the
+  admission queue.  Operators construct this once.
+* :class:`TenantClient` — a per-application handle obtained via
+  ``cluster.tenant(tenant_id, quota=..., priority=...)``.  It carries the
+  ``shuffle()`` / ``open_stream()`` call surface of Table 1, plus the knob
+  stack (execution / resilience / balance / streaming), resolved per call →
+  per tenant → cluster default.  Everything a tenant does is tagged with its
+  id: journal records, ledger lanes, and a *private* plan-cache namespace
+  with its own LRU budget (``quota``) — one tenant's churn can never evict,
+  hit, or repair from another tenant's plans.
+
+**Admission & cross-tenant scheduling.**  Concurrent shuffle requests can be
+queued (``TenantClient.submit``) and drained through
+``TeShuCluster.run_pending()``: submissions sharing a (tenant, stage) tag
+form a coflow, the :class:`~repro.core.coscheduler.CoflowScheduler` plans
+them under the cluster's admission policy (default ``"wfair"`` — weighted
+fair queuing whose weights combine each tenant's ``priority`` with a deficit
+boost from the ledger's sampled per-tenant load statistics), and the cluster
+executes them in scheduled order instead of FIFO interleaving.  The realized
+per-coflow completion times (modelled time at each coflow's last shuffle)
+are reported via ``last_schedule()``.
+
+**The single-tenant facade.**  :class:`TeShuService` — the seed API — is
+retained as a thin deprecated facade: it *is* a ``TeShuCluster`` that
+registers the :data:`~repro.core.tenancy.DEFAULT_TENANT` at construction and
+forwards ``shuffle()`` / ``open_stream()`` to it.  Every existing caller
+keeps working unchanged; new code should construct a ``TeShuCluster`` and
+take explicit tenant handles.
 
 On top of the paper's flow the service runs the plan-compilation cache
 (:mod:`repro.core.plancache`): every call computes the plan key (template x
@@ -13,15 +45,14 @@ entirely, and (when valid) executes on the batched data plane
 (:mod:`repro.core.vectorized`).  Observed reduction ratios from cached runs feed
 drift invalidation.
 
-Execution modes (constructor default, overridable per call):
+Execution modes (cluster default, overridable per tenant and per call):
 
 * ``"auto"``    — cache + vectorized execution where valid (the fast path);
 * ``"threaded"``— cache, but always the thread-per-worker reference executor;
 * ``"fresh"``   — paper-faithful: re-instantiate every call, never consult the
   cache (plans are still compiled and stored, so switching back to ``auto`` hits).
 
-Streaming modes (constructor default, overridable per call) pick the execution
-model (:mod:`repro.core.streaming`):
+Streaming modes pick the execution model (:mod:`repro.core.streaming`):
 
 * ``"off"``     — barrier shuffles (the paper's model): one synchronized
   exchange, receivers combine once everything arrived;
@@ -30,10 +61,10 @@ model (:mod:`repro.core.streaming`):
   end-of-stream rendezvous replaces the barrier, and modelled time reflects
   the transfer/combine overlap.  Output stays byte-identical to ``"off"``.
   ``open_stream()`` additionally exposes the ``feed()``/``drain()``
-  continuous-ingest API for open-ended sources.
+  continuous-ingest API for open-ended sources, with *enforced* backpressure
+  (``max_inflight`` bounds the transferred-but-unfolded chunk window).
 
-Resilience modes (constructor default, overridable per call) gate the
-:mod:`repro.core.resilience` pipeline:
+Resilience modes gate the :mod:`repro.core.resilience` pipeline:
 
 * ``"off"``     — seed behavior: a failure surfaces as ``ShuffleAborted``
   (a ``TimeoutError``), nothing is diagnosed or retried;
@@ -41,15 +72,22 @@ Resilience modes (constructor default, overridable per call) gate the
   exception carries the :class:`FailureReport` as ``.report`` but still raises;
 * ``"recover"`` — full pipeline: speculation for stragglers, plan repair for
   degraded topologies, and journal+checkpoint driven retries that restart only
-  the affected participant subset (§6), on either executor.
+  the affected participant subset (§6), on either executor.  Recovery is
+  tenant-scoped: only the failed tenant's participants restart — a concurrent
+  shuffle of another tenant (disjoint workers) is never touched.
 """
 from __future__ import annotations
 
 import itertools
+import threading
+from collections import OrderedDict
 from typing import Sequence
 
+import numpy as np
+
+from .coscheduler import POLICIES, CoflowRequest, CoflowScheduler
 from .manager import ShuffleManager
-from .messages import Combiner, Msgs, PartFn, HASH_PART
+from .messages import HASH_PART, Combiner, Msgs, PartFn
 from .plancache import PlanCache, compile_plan, plan_key, stats_signature
 from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs
 from .resilience import (CheckpointStore, FailureDetector, RecoveryCoordinator,
@@ -57,6 +95,7 @@ from .resilience import (CheckpointStore, FailureDetector, RecoveryCoordinator,
 from .skew import DEFAULT_SKEW_THRESHOLD, imbalance
 from .streaming import (DEFAULT_CHUNK_BYTES, DEFAULT_MAX_INFLIGHT, ChunkPlan,
                         StreamSession)
+from .tenancy import DEFAULT_TENANT, AdmissionQueue, TenantRegistry, TenantSpec
 from .templates import ShuffleResult, run_shuffle
 from .topology import NetworkTopology
 from .vectorized import can_vectorize, run_shuffle_vectorized
@@ -65,6 +104,16 @@ EXECUTION_MODES = ("auto", "threaded", "fresh")
 RESILIENCE_MODES = ("off", "detect", "recover")
 BALANCE_MODES = ("off", "auto")
 STREAMING_MODES = ("off", "auto")
+
+# The per-call / per-tenant / cluster-default knob stack.  Every knob here may
+# be set on the cluster (the fleet default), overridden at tenant registration
+# (the application's default), and overridden again on an individual call.
+_KNOBS = ("execution", "resilience", "balance", "skew_threshold", "streaming",
+          "chunk_bytes", "max_inflight", "max_retries")
+
+# next_shuffle_id tags at most this many recent ids with their owning tenant
+# (shuffle_owner); older tags fall off — the journal keeps the full history.
+_OWNER_TAG_CAPACITY = 4096
 
 
 def dst_load_imbalance(stats: dict, dsts) -> float | None:
@@ -77,84 +126,365 @@ def dst_load_imbalance(stats: dict, dsts) -> float | None:
     return imbalance(loads)
 
 
-class TeShuService:
-    def __init__(self, topology: NetworkTopology, *, journal_path: str | None = None,
-                 replicas: Sequence[str] = (), plan_cache: PlanCache | None = None,
+def _check_mode(name: str, value: str, allowed: tuple) -> str:
+    if value not in allowed:
+        raise ValueError(f"{name} must be one of {allowed}: {value}")
+    return value
+
+
+def _check_knobs(knobs: dict) -> dict:
+    """Validate a tenant-knob dict (shared by registration and TenantClient),
+    dropping None values.  Raises before any cluster state is touched, so a
+    rejected registration leaves no phantom tenant behind."""
+    out = {}
+    for k, v in knobs.items():
+        if k not in _KNOBS:
+            raise TypeError(f"unknown tenant knob {k!r} (knobs: {_KNOBS})")
+        if v is not None:
+            out[k] = v
+    for name, allowed in (("execution", EXECUTION_MODES),
+                          ("resilience", RESILIENCE_MODES),
+                          ("balance", BALANCE_MODES),
+                          ("streaming", STREAMING_MODES)):
+        if name in out:
+            _check_mode(name, out[name], allowed)
+    for name, floor in (("chunk_bytes", 1), ("max_inflight", 1),
+                        ("max_retries", 0)):
+        if name in out and out[name] < floor:
+            raise ValueError(f"{name} must be >= {floor}: {out[name]}")
+    return out
+
+
+class TenantClient:
+    """A tenant's handle onto a :class:`TeShuCluster`: the Table-1 call
+    surface, scoped to (and tagged with) one tenant id.
+
+    Obtained via :meth:`TeShuCluster.tenant`; do not construct directly.
+    Knobs passed at registration become this tenant's defaults; anything left
+    unset inherits the cluster default; every knob can still be overridden
+    per call.
+    """
+
+    def __init__(self, cluster: "TeShuCluster", spec: TenantSpec,
+                 knobs: dict | None = None):
+        self._cluster = cluster
+        self.spec = spec
+        self._knobs = _check_knobs(knobs or {})
+
+    @property
+    def tenant_id(self) -> str:
+        return self.spec.tenant_id
+
+    def knob(self, name: str, call_value=None):
+        """Resolve a knob: per-call value > tenant default > cluster default."""
+        if call_value is not None:
+            return call_value
+        if name in self._knobs:
+            return self._knobs[name]
+        return getattr(self._cluster, name)
+
+    # ---- Table-1 surface ------------------------------------------------------
+    def shuffle(self, template_id: str, bufs: dict[int, Msgs],
+                srcs: Sequence[int], dsts: Sequence[int], *,
+                part_fn: PartFn = HASH_PART, comb_fn: Combiner | None = None,
+                rate: float = 0.01, shuffle_id: int | None = None,
+                seed: int = 0, execution: str | None = None,
+                resilience: str | None = None, balance: str | None = None,
+                skew_threshold: float | None = None,
+                streaming: str | None = None, chunk_bytes: int | None = None,
+                max_inflight: int | None = None,
+                max_retries: int | None = None) -> ShuffleResult:
+        return self._cluster._shuffle(
+            self, template_id, bufs, srcs, dsts, part_fn=part_fn,
+            comb_fn=comb_fn, rate=rate, shuffle_id=shuffle_id, seed=seed,
+            execution=execution, resilience=resilience, balance=balance,
+            skew_threshold=skew_threshold, streaming=streaming,
+            chunk_bytes=chunk_bytes, max_inflight=max_inflight,
+            max_retries=max_retries)
+
+    def open_stream(self, template_id: str, srcs: Sequence[int],
+                    dsts: Sequence[int], *, part_fn: PartFn = HASH_PART,
+                    comb_fn: Combiner | None = None,
+                    chunk_bytes: int | None = None,
+                    max_inflight: int | None = None,
+                    shuffle_id: int | None = None) -> StreamSession:
+        """Open a continuous-ingest shuffle: ``feed()`` source buffers as they
+        arrive, ``drain()`` the combined per-destination accumulators at end
+        of source.  ``max_inflight`` is enforced backpressure — see
+        :class:`repro.core.streaming.StreamSession`."""
+        cl = self._cluster
+        template = cl.manager.get_template(template_id, wid=None)
+        if not template.streamable:
+            raise ValueError(
+                f"template {template_id!r} is not streamable (declares no "
+                "chunk-pipelined programs)")
+        chunk = ChunkPlan(
+            chunk_bytes=self.knob("chunk_bytes", chunk_bytes),
+            max_inflight=self.knob("max_inflight", max_inflight))
+        return StreamSession(
+            cl.cluster, cl.manager, template,
+            cl.next_shuffle_id(self.tenant_id) if shuffle_id is None
+            else shuffle_id,
+            srcs, dsts, part_fn, comb_fn, chunk, tenant=self.tenant_id)
+
+    def submit(self, template_id: str, bufs: dict[int, Msgs],
+               srcs: Sequence[int], dsts: Sequence[int], *,
+               stage: str | None = None, **kwargs) -> int:
+        """Queue a shuffle for the next admission/scheduling pass instead of
+        executing it now; returns a ticket resolved by
+        :meth:`TeShuCluster.run_pending`.  Submissions sharing a ``stage``
+        tag form one coflow (they complete together as far as the scheduler
+        is concerned); ``kwargs`` are the :meth:`shuffle` keywords."""
+        return self._cluster._admission.submit(
+            self.tenant_id, stage, template_id, bufs, srcs, dsts, kwargs)
+
+    # ---- per-tenant introspection --------------------------------------------
+    def stats(self) -> dict:
+        """This tenant's ledger lane (bytes + serialized seconds charged)."""
+        snap = self._cluster.cluster.ledger.snapshot()
+        return {
+            "tenant": self.tenant_id,
+            "bytes": snap["bytes_per_tenant"].get(self.tenant_id, 0),
+            "cost_s": snap["cost_per_tenant"].get(self.tenant_id, 0.0),
+        }
+
+    def cache_stats(self) -> dict:
+        """This tenant's plan-cache namespace counters (private LRU)."""
+        return self._cluster.plan_cache.stats(self.tenant_id)
+
+    def records(self, shuffle_id: int | None = None, kind: str | None = None):
+        """This tenant's journal records."""
+        return self._cluster.manager.records(shuffle_id, kind,
+                                             tenant=self.tenant_id)
+
+
+class TeShuCluster:
+    """The cluster-scoped TeShu deployment: one per (simulated) cluster.
+
+    Owns every shared resource — topology, worker pool, manager + journal,
+    plan cache, resilience machinery — plus the tenant registry and the
+    admission queue.  Applications get :class:`TenantClient` handles via
+    :meth:`tenant`; the constructor knobs are the *cluster defaults* each
+    tenant (and each call) may override.
+
+    ``admission`` picks the cross-tenant coflow policy ``run_pending()``
+    schedules under (any of :data:`repro.core.coscheduler.POLICIES`);
+    ``admission_rate`` is the row-sampling rate its demand estimator uses.
+
+    Note on pinned shuffle ids: ids allocated by the cluster are unique across
+    all tenants; a caller pinning explicit ``shuffle_id`` values is
+    responsible for keeping them unique across *concurrently running*
+    shuffles (per-invocation control state is keyed by id).
+    """
+
+    def __init__(self, topology: NetworkTopology, *,
+                 journal_path: str | None = None,
+                 replicas: Sequence[str] = (),
+                 plan_cache: PlanCache | None = None,
                  execution: str = "auto", resilience: str = "off",
-                 balance: str = "off", skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
-                 streaming: str = "off", chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 balance: str = "off",
+                 skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
+                 streaming: str = "off",
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  max_inflight: int = DEFAULT_MAX_INFLIGHT,
-                 max_retries: int = 2):
-        if execution not in EXECUTION_MODES:
-            raise ValueError(f"execution must be one of {EXECUTION_MODES}: {execution}")
-        if resilience not in RESILIENCE_MODES:
-            raise ValueError(
-                f"resilience must be one of {RESILIENCE_MODES}: {resilience}")
-        if balance not in BALANCE_MODES:
-            raise ValueError(f"balance must be one of {BALANCE_MODES}: {balance}")
-        if streaming not in STREAMING_MODES:
-            raise ValueError(
-                f"streaming must be one of {STREAMING_MODES}: {streaming}")
+                 max_retries: int = 2,
+                 admission: str = "wfair",
+                 admission_rate: float = 0.05):
+        _check_mode("execution", execution, EXECUTION_MODES)
+        _check_mode("resilience", resilience, RESILIENCE_MODES)
+        _check_mode("balance", balance, BALANCE_MODES)
+        _check_mode("streaming", streaming, STREAMING_MODES)
+        _check_mode("admission", admission, POLICIES)
+        self.topology = topology
+        self.cluster = LocalCluster(topology)
+        self.manager = ShuffleManager(journal_path=journal_path,
+                                      replicas=replicas, plan_cache=plan_cache)
+        self.execution = execution
+        self.resilience = resilience
         self.balance = balance
         self.skew_threshold = skew_threshold
         self.streaming = streaming
         self.chunk_bytes = chunk_bytes
         self.max_inflight = max_inflight
-        self.topology = topology
-        self.cluster = LocalCluster(topology)
-        self.manager = ShuffleManager(journal_path=journal_path, replicas=replicas,
-                                      plan_cache=plan_cache)
-        self.execution = execution
-        self.resilience = resilience
         self.max_retries = max_retries
+        self.admission_policy = admission
+        self.admission_rate = admission_rate
         self.checkpoints = CheckpointStore()
         self.detector = FailureDetector(self.cluster, self.manager)
         self.coordinator = RecoveryCoordinator(self.cluster, self.manager,
                                                self.checkpoints)
         self.speculation = SpeculationPolicy()
+        self.registry = TenantRegistry()
+        self._clients: dict[str, TenantClient] = {}
+        self._clients_lock = threading.Lock()
+        self._admission = AdmissionQueue()
+        self._run_pending_lock = threading.Lock()
         self._ids = itertools.count(1)
+        # shuffle id -> tenant tag, bounded (introspection only: the journal
+        # is the durable record) so a long-lived service never grows with
+        # shuffle count
+        self._owner: "OrderedDict[int, str]" = OrderedDict()
+        self._owner_lock = threading.Lock()
+        self._last_schedule: dict | None = None
 
-    def next_shuffle_id(self) -> int:
-        return next(self._ids)
+    # ---- tenants --------------------------------------------------------------
+    def tenant(self, tenant_id: str = DEFAULT_TENANT, *,
+               quota: int | None = None, priority: float | None = None,
+               **knobs) -> TenantClient:
+        """Create-or-fetch the :class:`TenantClient` for ``tenant_id``.
+
+        ``quota`` bounds the tenant's private plan-cache namespace (entries;
+        unset = the namespace inherits the cache's default capacity);
+        ``priority`` is its scheduling weight.  Remaining keyword knobs
+        (``execution``, ``resilience``, ``balance``, ``skew_threshold``,
+        ``streaming``, ``chunk_bytes``, ``max_inflight``, ``max_retries``)
+        become the tenant's defaults.  Re-fetching an existing tenant with
+        explicit arguments updates them; omitted ones are kept.
+        """
+        # validate knobs BEFORE touching cluster state: a rejected call must
+        # not leave a phantom tenant behind (register() itself validates
+        # quota/priority before mutating anything)
+        knobs = _check_knobs(knobs)
+        spec = self.registry.register(tenant_id, quota=quota, priority=priority)
+        if quota is not None:
+            self.plan_cache.set_budget(tenant_id, quota)
+        with self._clients_lock:
+            client = self._clients.get(tenant_id)
+            if client is None:
+                client = TenantClient(self, spec, knobs)
+                self._clients[tenant_id] = client
+            elif knobs:
+                # update in place: handles returned from earlier tenant()
+                # calls observe new knobs, exactly like quota/priority updates
+                # (the registry mutates the shared spec the same way)
+                client._knobs.update(knobs)
+        return client
+
+    def tenants(self) -> list[str]:
+        return self.registry.ids()
+
+    def next_shuffle_id(self, tenant: str = DEFAULT_TENANT) -> int:
+        sid = next(self._ids)
+        with self._owner_lock:
+            self._owner[sid] = tenant
+            while len(self._owner) > _OWNER_TAG_CAPACITY:
+                self._owner.popitem(last=False)
+        return sid
+
+    def shuffle_owner(self, shuffle_id: int) -> str | None:
+        """Which tenant a recent cluster-allocated shuffle id belongs to
+        (None once the tag aged out; the journal keeps the full history)."""
+        with self._owner_lock:
+            return self._owner.get(shuffle_id)
 
     @property
     def plan_cache(self) -> PlanCache:
         return self.manager.plan_cache
 
-    def shuffle(
-        self,
-        template_id: str,
-        bufs: dict[int, Msgs],
-        srcs: Sequence[int],
-        dsts: Sequence[int],
-        *,
-        part_fn: PartFn = HASH_PART,
-        comb_fn: Combiner | None = None,
-        rate: float = 0.01,
-        shuffle_id: int | None = None,
-        seed: int = 0,
-        execution: str | None = None,
-        resilience: str | None = None,
-        balance: str | None = None,
-        skew_threshold: float | None = None,
-        streaming: str | None = None,
-        chunk_bytes: int | None = None,
-        max_inflight: int | None = None,
-    ) -> ShuffleResult:
-        execution = self.execution if execution is None else execution
-        if execution not in EXECUTION_MODES:
-            raise ValueError(f"execution must be one of {EXECUTION_MODES}: {execution}")
-        resilience = self.resilience if resilience is None else resilience
-        if resilience not in RESILIENCE_MODES:
-            raise ValueError(
-                f"resilience must be one of {RESILIENCE_MODES}: {resilience}")
-        balance = self.balance if balance is None else balance
-        if balance not in BALANCE_MODES:
-            raise ValueError(f"balance must be one of {BALANCE_MODES}: {balance}")
-        streaming = self.streaming if streaming is None else streaming
-        if streaming not in STREAMING_MODES:
-            raise ValueError(
-                f"streaming must be one of {STREAMING_MODES}: {streaming}")
+    # ---- admission / cross-tenant scheduling ----------------------------------
+    def pending(self) -> int:
+        return len(self._admission)
+
+    def run_pending(self, policy: str | None = None
+                    ) -> "dict[int, ShuffleResult | Exception]":
+        """Drain the admission queue through the coflow scheduler and execute.
+
+        Submissions are grouped into coflows by (tenant, stage); the
+        :class:`CoflowScheduler` orders them under ``policy`` (default: the
+        cluster's admission policy) with per-tenant effective weights =
+        registry priority x deficit boost from the ledger's per-tenant byte
+        lanes; execution then follows the scheduled order.  Returns a result
+        per ticket: a :class:`ShuffleResult` on success, or — isolation
+        across tenants — the *exception* a failing shuffle raised (one
+        tenant's failure never discards or skips another tenant's queued
+        work).  The realized schedule — including each coflow's completion
+        time in modelled seconds since the pass started and any failures —
+        is available from :meth:`last_schedule`.
+
+        Passes are serialized (overlapping calls queue on an internal lock,
+        each draining whatever is pending when it enters).  Completion times
+        are read off the shared ledger clock, so a *direct* ``shuffle()``
+        running concurrently with a pass inflates the reported CCTs by its
+        own modelled time; schedule tenants through the queue (or keep
+        direct traffic off the cluster) while a pass you intend to measure
+        is running.
+        """
+        policy = self.admission_policy if policy is None else policy
+        _check_mode("admission", policy, POLICIES)
+        with self._run_pending_lock:
+            return self._run_pending_locked(policy)
+
+    def _run_pending_locked(self, policy: str
+                            ) -> "dict[int, ShuffleResult | Exception]":
+        subs = self._admission.drain()
+        if not subs:
+            return {}
+        weights = self.registry.effective_weights(
+            self.cluster.ledger.tenant_bytes())
+        reqs = [CoflowRequest(
+            tenant=s.tenant, stage=s.stage, bufs=s.bufs,
+            part_fn=s.kwargs.get("part_fn", HASH_PART),
+            arrival=float(s.arrival),
+            weight=weights.get(s.tenant, 1.0)) for s in subs]
+        sched = CoflowScheduler(self.topology, policy,
+                                demand_rate=self.admission_rate)
+        entries = sched.plan(reqs)
+        by_coflow: dict[tuple[str, str], list] = {}
+        for s in subs:
+            by_coflow.setdefault(s.coflow_id, []).append(s)
+        t0 = self.cluster.ledger.modelled_time()
+        results: dict[int, ShuffleResult] = {}
+        failures: dict[int, str] = {}
+        ccts: dict[tuple[str, str], float] = {}
+        for e in entries:
+            for s in by_coflow.get(e.coflow_id, ()):
+                client = self._clients[s.tenant]
+                try:
+                    results[s.ticket] = client.shuffle(
+                        s.template_id, s.bufs, s.srcs, s.dsts, **s.kwargs)
+                except Exception as exc:  # noqa: BLE001 — isolation: one
+                    # tenant's failing shuffle must not destroy the rest of
+                    # the drained batch; the caller gets the exception back
+                    results[s.ticket] = exc
+                    failures[s.ticket] = f"{type(exc).__name__}: {exc}"
+            ccts[e.coflow_id] = self.cluster.ledger.modelled_time() - t0
+        self._last_schedule = {
+            "policy": policy,
+            "weights": {t: float(w) for t, w in sorted(weights.items())},
+            "planned": entries,
+            "ccts": ccts,
+            "failures": failures,
+            "mean_cct_s": float(np.mean(list(ccts.values()))) if ccts else 0.0,
+            "makespan_s": max(ccts.values(), default=0.0),
+        }
+        return results
+
+    def last_schedule(self) -> dict | None:
+        """The most recent ``run_pending`` pass: policy, effective weights,
+        planned entries, and realized per-coflow completion times."""
+        return self._last_schedule
+
+    # ---- the shuffle path ------------------------------------------------------
+    def _shuffle(self, client: TenantClient, template_id: str,
+                 bufs: dict[int, Msgs], srcs: Sequence[int],
+                 dsts: Sequence[int], *, part_fn: PartFn,
+                 comb_fn: Combiner | None, rate: float,
+                 shuffle_id: int | None, seed: int,
+                 execution: str | None, resilience: str | None,
+                 balance: str | None, skew_threshold: float | None,
+                 streaming: str | None, chunk_bytes: int | None,
+                 max_inflight: int | None,
+                 max_retries: int | None = None) -> ShuffleResult:
+        tenant = client.tenant_id
+        execution = _check_mode("execution", client.knob("execution", execution),
+                                EXECUTION_MODES)
+        resilience = _check_mode("resilience",
+                                 client.knob("resilience", resilience),
+                                 RESILIENCE_MODES)
+        balance = _check_mode("balance", client.knob("balance", balance),
+                              BALANCE_MODES)
+        streaming = _check_mode("streaming", client.knob("streaming", streaming),
+                                STREAMING_MODES)
         template = self.manager.get_template(template_id, wid=None)
         if balance == "auto" and not template.rebalanceable:
             # a template that re-partitions en route never carries a skew
@@ -166,65 +496,44 @@ class TeShuService:
             # template always runs the barrier, so key it that way
             streaming = "off"
         chunk = ChunkPlan(
-            chunk_bytes=self.chunk_bytes if chunk_bytes is None else chunk_bytes,
-            max_inflight=(self.max_inflight if max_inflight is None
-                          else max_inflight)) if streaming == "auto" else None
+            chunk_bytes=client.knob("chunk_bytes", chunk_bytes),
+            max_inflight=client.knob("max_inflight", max_inflight)) \
+            if streaming == "auto" else None
         args = ShuffleArgs(
             template_id=template_id,
-            shuffle_id=self.next_shuffle_id() if shuffle_id is None else shuffle_id,
+            shuffle_id=(self.next_shuffle_id(tenant) if shuffle_id is None
+                        else shuffle_id),
             srcs=tuple(srcs), dsts=tuple(dsts),
             part_fn=part_fn, comb_fn=comb_fn, rate=rate, seed=seed,
-            balance=balance,
-            skew_threshold=(self.skew_threshold if skew_threshold is None
-                            else skew_threshold))
+            tenant=tenant, balance=balance,
+            skew_threshold=client.knob("skew_threshold", skew_threshold))
 
         key = plan_key(template_id, self.topology, args.srcs, args.dsts,
                        stats_signature(bufs, part_fn, comb_fn, rate,
                                        balance=balance,
                                        skew_threshold=args.skew_threshold,
                                        streaming=streaming, stream=chunk))
-        plan = self.plan_cache.get(key) if execution != "fresh" else None
+        plan = (self.plan_cache.get(key, tenant) if execution != "fresh"
+                else None)
         repaired = False
         if plan is None and execution != "fresh" and resilience != "off":
             # no plan for this exact scenario — maybe a healthy-topology (or
-            # full-worker-set) relative exists that repair can adapt
+            # full-worker-set) relative exists that repair can adapt (within
+            # this tenant's namespace only)
             plan = try_repair(self.plan_cache, key, self.topology,
-                              part_fn=part_fn)
+                              part_fn=part_fn, tenant=tenant)
             repaired = plan is not None
         args.plan = plan
         # a cached plan replays the chunking policy it froze; a fresh streamed
-        # run uses the service knobs (and freezes them at compile time)
+        # run uses the resolved knobs (and freezes them at compile time)
         args.stream = (plan.stream if plan is not None and plan.stream is not None
                        else chunk)
 
         if resilience == "off":
             return self._run_plain(args, bufs, key, execution)
         return self._run_resilient(args, bufs, key, execution, resilience,
-                                   repaired)
-
-    def open_stream(self, template_id: str, srcs: Sequence[int],
-                    dsts: Sequence[int], *, part_fn: PartFn = HASH_PART,
-                    comb_fn: Combiner | None = None,
-                    chunk_bytes: int | None = None,
-                    max_inflight: int | None = None,
-                    shuffle_id: int | None = None) -> StreamSession:
-        """Open a continuous-ingest shuffle: ``feed()`` source buffers as they
-        arrive, ``drain()`` the combined per-destination accumulators at end
-        of source.  The native path for open-ended workloads where a barrier
-        would never close; see :class:`repro.core.streaming.StreamSession`."""
-        template = self.manager.get_template(template_id, wid=None)
-        if not template.streamable:
-            raise ValueError(
-                f"template {template_id!r} is not streamable (declares no "
-                "chunk-pipelined programs)")
-        chunk = ChunkPlan(
-            chunk_bytes=self.chunk_bytes if chunk_bytes is None else chunk_bytes,
-            max_inflight=(self.max_inflight if max_inflight is None
-                          else max_inflight))
-        return StreamSession(
-            self.cluster, self.manager, template,
-            self.next_shuffle_id() if shuffle_id is None else shuffle_id,
-            srcs, dsts, part_fn, comb_fn, chunk)
+                                   repaired,
+                                   client.knob("max_retries", max_retries))
 
     # ---- execution paths ------------------------------------------------------
     def _execute(self, args: ShuffleArgs, bufs: dict[int, Msgs],
@@ -240,16 +549,16 @@ class TeShuService:
             key, args.template_id, self.topology, args.srcs, args.dsts,
             res.decisions, res.observed,
             baseline_imbalance=dst_load_imbalance(res.stats, args.dsts),
-            stream=args.stream))
+            stream=args.stream), tenant=args.tenant)
 
     def _observe(self, args: ShuffleArgs, key: tuple, res: ShuffleResult) -> None:
         """Feed drift signals from a cached run: per-level reduction ratios,
         and — for skew-instantiated plans — the measured destination load
         imbalance vs the baseline the plan froze."""
-        self.plan_cache.observe(key, res.observed)
+        self.plan_cache.observe(key, res.observed, tenant=args.tenant)
         obs = dst_load_imbalance(res.stats, args.dsts)
         if obs is not None:
-            self.plan_cache.observe_loads(key, obs)
+            self.plan_cache.observe_loads(key, obs, tenant=args.tenant)
 
     def _run_plain(self, args: ShuffleArgs, bufs: dict[int, Msgs], key: tuple,
                    execution: str) -> ShuffleResult:
@@ -264,17 +573,19 @@ class TeShuService:
         return res
 
     def _run_resilient(self, args: ShuffleArgs, bufs: dict[int, Msgs], key: tuple,
-                       execution: str, resilience: str,
-                       repaired: bool) -> ShuffleResult:
+                       execution: str, resilience: str, repaired: bool,
+                       max_retries: int) -> ShuffleResult:
         sid = args.shuffle_id
+        tenant = args.tenant
         participants = sorted(set(args.srcs) | set(args.dsts))
         recover = resilience == "recover"
-        attempts = (self.max_retries + 1) if recover else 1
+        attempts = (max(0, max_retries) + 1) if recover else 1
         recovery_info: dict = {}
         rc = self.coordinator.initial_context(
             sid, args.template_id,
             speculated=self._speculate(sid, participants, attempt=0,
-                                       enabled=recover))
+                                       enabled=recover, tenant=tenant),
+            tenant=tenant)
         try:
             for attempt in range(attempts):
                 args.recovery = rc
@@ -284,8 +595,10 @@ class TeShuService:
                     if missing:
                         # a dst died without blocking anyone (e.g. pure
                         # receiver): its output is simply absent — still a
-                        # failure
-                        self.cluster.end_shuffle(sid, aborted=True)
+                        # failure.  Cleanup stays scoped to this shuffle's
+                        # participants: other tenants' in-flight queues live on.
+                        self.cluster.end_shuffle(sid, aborted=True,
+                                                 participants=participants)
                         raise ShuffleAborted(
                             f"dsts {sorted(missing)} produced no output",
                             shuffle_id=sid)
@@ -293,7 +606,7 @@ class TeShuService:
                     report = self.detector.classify(sid, participants)
                     e.report = report
                     self.manager.record_failure(sid, report.to_info(),
-                                                attempt=attempt)
+                                                attempt=attempt, tenant=tenant)
                     if not recover or attempt == attempts - 1:
                         raise
                     rc = self.coordinator.prepare_retry(
@@ -301,7 +614,8 @@ class TeShuService:
                         report, attempt + 1,
                         speculated=self._speculate(sid, participants,
                                                    attempt=attempt + 1,
-                                                   enabled=True))
+                                                   enabled=True, tenant=tenant),
+                        tenant=tenant)
                     recovery_info = {
                         "restarted": sorted(report.dead),
                         "resume_stages": dict(rc.resume_stages),
@@ -331,7 +645,7 @@ class TeShuService:
             self.checkpoints.clear(sid)
 
     def _speculate(self, shuffle_id: int, participants, attempt: int,
-                   enabled: bool) -> frozenset:
+                   enabled: bool, tenant: str = DEFAULT_TENANT) -> frozenset:
         """Backup-task planning; only ``"recover"`` may alter execution —
         ``"detect"`` must observe stragglers, not paper over them."""
         if not enabled or not self.cluster.worker_delays:
@@ -340,7 +654,8 @@ class TeShuService:
         if not tasks:
             return frozenset()
         self.manager.record_speculation(
-            shuffle_id, {"tasks": [t.to_info() for t in tasks]}, attempt=attempt)
+            shuffle_id, {"tasks": [t.to_info() for t in tasks]},
+            attempt=attempt, tenant=tenant)
         return frozenset(t.wid for t in tasks)
 
     # ---- ops hooks -----------------------------------------------------------
@@ -377,3 +692,54 @@ class TeShuService:
 
     def checkpoint_stats(self) -> dict:
         return self.checkpoints.stats()
+
+
+class TeShuService(TeShuCluster):
+    """**Deprecated facade**: the seed-era single-application service.
+
+    A ``TeShuService`` *is* a :class:`TeShuCluster` that registers the
+    :data:`~repro.core.tenancy.DEFAULT_TENANT` at construction and forwards
+    ``shuffle()`` / ``open_stream()`` to its client — one implicit tenant,
+    exactly the old semantics (journal lines, plan keys, and ledger stats are
+    unchanged for this tenant).  Existing callers keep working; new code
+    should construct a :class:`TeShuCluster` and take explicit
+    ``cluster.tenant(...)`` handles, which is where quotas, priorities, and
+    cross-tenant scheduling live.
+    """
+
+    def __init__(self, topology: NetworkTopology, *,
+                 journal_path: str | None = None,
+                 replicas: Sequence[str] = (),
+                 plan_cache: PlanCache | None = None,
+                 execution: str = "auto", resilience: str = "off",
+                 balance: str = "off",
+                 skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
+                 streaming: str = "off",
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 max_inflight: int = DEFAULT_MAX_INFLIGHT,
+                 max_retries: int = 2):
+        super().__init__(topology, journal_path=journal_path, replicas=replicas,
+                         plan_cache=plan_cache, execution=execution,
+                         resilience=resilience, balance=balance,
+                         skew_threshold=skew_threshold, streaming=streaming,
+                         chunk_bytes=chunk_bytes, max_inflight=max_inflight,
+                         max_retries=max_retries)
+        self.tenant(DEFAULT_TENANT)
+
+    def _default_client(self) -> TenantClient:
+        # hot path: a plain dict read (clients are only ever replaced under
+        # the lock, never deleted, so the current object is always visible);
+        # re-resolving via tenant() would pay two lock round-trips per call
+        client = self._clients.get(DEFAULT_TENANT)
+        return client if client is not None else self.tenant(DEFAULT_TENANT)
+
+    def shuffle(self, template_id: str, bufs: dict[int, Msgs],
+                srcs: Sequence[int], dsts: Sequence[int], **kwargs
+                ) -> ShuffleResult:
+        return self._default_client().shuffle(template_id, bufs, srcs, dsts,
+                                              **kwargs)
+
+    def open_stream(self, template_id: str, srcs: Sequence[int],
+                    dsts: Sequence[int], **kwargs) -> StreamSession:
+        return self._default_client().open_stream(template_id, srcs, dsts,
+                                                  **kwargs)

@@ -34,17 +34,20 @@ would never close.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Iterator, Sequence
 
 from .messages import Combiner, Msgs, PartFn, partition
+from .tenancy import DEFAULT_TENANT
 
 # Default per-chunk byte budget.  64 KiB keeps several chunks in flight for
 # the bench/test workloads without drowning the simulated cluster in messages.
 DEFAULT_CHUNK_BYTES = 64 * 1024
-# Sender window: how many un-folded chunks the policy allows in flight.  The
-# simulated mailboxes are unbounded, so this is a *modelled* budget (frozen
-# into plans, keyed into signatures) rather than an enforced backpressure.
+# Sender window: how many un-folded chunks the policy allows in flight.
+# :class:`StreamSession` *enforces* it as backpressure — ``feed()`` never
+# leaves more than this many chunks transferred-but-unfolded; excess chunks
+# are spilled into the fold before the producer may continue.
 DEFAULT_MAX_INFLIGHT = 4
 
 
@@ -121,12 +124,22 @@ class StreamSession:
     within each feed), so a session's drained output equals a one-shot
     streamed shuffle of the concatenated feeds fed in the same order.
 
-    Obtained via :meth:`repro.core.service.TeShuService.open_stream`.
+    **Backpressure.**  The :class:`ChunkPlan`'s ``max_inflight`` is *enforced*,
+    not merely modelled: a transferred chunk sits in the inflight window until
+    it is folded, and ``feed()`` refuses to run ahead — the moment the window
+    is full, the producer is held while the oldest inflight chunks are spilled
+    into the destination fold (the synchronous analogue of blocking on the
+    receiver).  ``inflight`` never exceeds ``max_inflight``;
+    ``backpressure_stalls`` counts how often the producer was held.
+
+    Obtained via :meth:`repro.core.service.TenantClient.open_stream` (or the
+    single-tenant facade's ``TeShuService.open_stream``).
     """
 
     def __init__(self, cluster, manager, template, shuffle_id: int,
                  srcs: Sequence[int], dsts: Sequence[int], part_fn: PartFn,
-                 comb_fn: Combiner | None, chunk_plan: ChunkPlan):
+                 comb_fn: Combiner | None, chunk_plan: ChunkPlan,
+                 tenant: str = DEFAULT_TENANT):
         self.cluster = cluster
         self.manager = manager
         self.template = template
@@ -136,17 +149,29 @@ class StreamSession:
         self.part_fn = part_fn
         self.comb_fn = comb_fn
         self.chunk_plan = chunk_plan
+        self.tenant = tenant
         # pull templates charge transfers to the receiver (it pays the wait)
         self.receiver_pays = template.mode == "pull"
         self.acc: dict[int, Msgs | None] = {d: None for d in self.dsts}
         self.chunks_fed = 0
         self.rows_fed = 0
         self.closed = False
+        # inflight window: chunks transferred but not yet folded, oldest first
+        self._inflight: collections.deque[tuple[int, dict[int, Msgs]]] = \
+            collections.deque()
+        self.backpressure_stalls = 0
+        self.max_inflight_observed = 0
         self._participants = sorted(set(self.srcs) | set(self.dsts))
         self._before = cluster.ledger.snapshot()
         if manager is not None:
             for w in self._participants:
-                manager.record_start(w, shuffle_id, template.template_id)
+                manager.record_start(w, shuffle_id, template.template_id,
+                                     tenant=tenant)
+
+    @property
+    def inflight(self) -> int:
+        """Chunks transferred but not yet folded (bounded by ``max_inflight``)."""
+        return len(self._inflight)
 
     def _fold(self, dst: int, part: Msgs, chunk: int) -> None:
         acc = self.acc[dst]
@@ -154,15 +179,25 @@ class StreamSession:
         if self.comb_fn is None:
             self.acc[dst] = batch
             return
-        self.cluster.ledger.charge_combine(dst, part.nbytes, chunk=chunk)
+        self.cluster.ledger.charge_combine(dst, part.nbytes, chunk=chunk,
+                                           tenant=self.tenant)
         self.acc[dst] = self.comb_fn(batch)
+
+    def _fold_oldest(self) -> None:
+        c, parts = self._inflight.popleft()
+        for d in self.dsts:
+            self._fold(d, parts[d], c)
 
     def feed(self, bufs: dict[int, Msgs]) -> int:
         """Ingest one batch of source buffers; returns the chunks streamed.
 
         Each source's buffer is cut into :class:`ChunkPlan` chunks; every
         chunk is partitioned, its transfers charged to the pipelined lanes,
-        and its partitions folded into the destination accumulators.
+        and its partitions enter the inflight window.  When the window would
+        exceed ``max_inflight`` the producer stalls: the oldest chunks are
+        folded into the destination accumulators (in exact arrival order, so
+        the drained bytes never depend on the window size) until the new
+        chunk fits.
         """
         if self.closed:
             raise RuntimeError("stream session already drained")
@@ -178,8 +213,18 @@ class StreamSession:
                 for d in self.dsts:
                     payer = d if self.receiver_pays else w
                     ledger.charge_transfer(payer, topo.crossing_level(w, d),
-                                           parts[d].nbytes, dst=d, chunk=c)
-                    self._fold(d, parts[d], c)
+                                           parts[d].nbytes, dst=d, chunk=c,
+                                           tenant=self.tenant)
+                # spill BEFORE appending: the window never holds more than
+                # max_inflight chunks, even transiently (a comb_fn running
+                # during the spill observes the invariant too)
+                if len(self._inflight) >= self.chunk_plan.max_inflight:
+                    self.backpressure_stalls += 1
+                    while len(self._inflight) >= self.chunk_plan.max_inflight:
+                        self._fold_oldest()
+                self._inflight.append((c, parts))
+                self.max_inflight_observed = max(self.max_inflight_observed,
+                                                 len(self._inflight))
                 self.chunks_fed += 1
                 self.rows_fed += piece.n
                 fed += 1
@@ -194,12 +239,15 @@ class StreamSession:
         if self.closed:
             raise RuntimeError("stream session already drained")
         self.closed = True
+        while self._inflight:                 # flush the window
+            self._fold_oldest()
         self.cluster.ledger.end_stream()
         after = self.cluster.ledger.snapshot()
         if self.manager is not None:
             for w in self._participants:
                 self.manager.record_end(w, self.shuffle_id,
-                                        self.template.template_id)
+                                        self.template.template_id,
+                                        tenant=self.tenant)
         width = max((m.width for m in self.acc.values() if m is not None),
                     default=1)
         bufs = {d: (m if m is not None else Msgs.empty(width))

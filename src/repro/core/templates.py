@@ -555,7 +555,7 @@ def run_shuffle(
     def worker_fn(wid: int):
         if manager is not None:
             manager.record_start(wid, args.shuffle_id, args.template_id,
-                                 attempt=attempt)
+                                 attempt=attempt, tenant=args.tenant)
         delay = cluster.worker_delays.get(wid, 0.0)
         if delay and wid not in speculated:
             # a speculated straggler's work races a backup copy on a healthy
@@ -587,14 +587,15 @@ def run_shuffle(
             raise
         if manager is not None:
             manager.record_end(wid, args.shuffle_id, args.template_id,
-                               attempt=attempt)
+                               attempt=attempt, tenant=args.tenant)
         return (out, ctx.decisions, ctx.observed, streamed)
 
     try:
         raw = cluster.run_workers(participants, worker_fn,
                                   abort_event=cluster.abort_event(args.shuffle_id))
     except BaseException:
-        cluster.end_shuffle(args.shuffle_id, aborted=True)
+        cluster.end_shuffle(args.shuffle_id, aborted=True,
+                            participants=participants)
         raise
     cluster.ledger.advance_epoch()        # any non-streamed residue is a barrier
     cluster.end_shuffle(args.shuffle_id)  # free per-invocation control state

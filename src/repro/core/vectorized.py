@@ -106,7 +106,7 @@ def _comb(args: ShuffleArgs, ledger, wid: int, batches) -> Msgs:
     batch = batches if isinstance(batches, Msgs) else Msgs.concat(list(batches))
     if args.comb_fn is None:
         return batch
-    ledger.charge_combine(wid, batch.nbytes)
+    ledger.charge_combine(wid, batch.nbytes, tenant=args.tenant)
     return combine_msgs(args.comb_fn, batch)
 
 
@@ -144,7 +144,8 @@ def run_shuffle_vectorized(
     if manager is not None:
         manager.get_template(args.template_id, wid=None)
         for w in participants:
-            manager.record_start(w, sid, args.template_id, attempt=attempt)
+            manager.record_start(w, sid, args.template_id, attempt=attempt,
+                                 tenant=args.tenant)
     before = ledger.snapshot()
     observed: list[tuple] = []
 
@@ -169,7 +170,7 @@ def run_shuffle_vectorized(
     def _abort(w: int, why: str, stage_name: str) -> None:
         cluster.failed_workers.add(w)
         cluster.abort_event(sid).set()
-        cluster.end_shuffle(sid, aborted=True)
+        cluster.end_shuffle(sid, aborted=True, participants=participants)
         raise ShuffleAborted(
             f"worker {w} {why} (vectorized, stage {stage_name!r})",
             shuffle_id=sid)
@@ -204,7 +205,8 @@ def run_shuffle_vectorized(
                                     dtype=np.int64, count=len(peers)),
                         np.fromiter((parts[n].nbytes for n in peers),
                                     dtype=np.int64, count=len(peers)),
-                        dsts=np.asarray(peers, dtype=np.int64))
+                        dsts=np.asarray(peers, dtype=np.int64),
+                        tenant=args.tenant)
                 for w, (nbrs, parts) in staged.items():
                     got = [parts[w]] + [staged[n][1][w] for n in nbrs if n != w]
                     pre = sum(g.nbytes for g in got)
@@ -240,7 +242,8 @@ def run_shuffle_vectorized(
                             dtype=np.int64, count=len(dsts)),
                 np.fromiter((parts_by_src[w][d].nbytes for d in dsts),
                             dtype=np.int64, count=len(dsts)),
-                dsts=np.asarray(dsts, dtype=np.int64))
+                dsts=np.asarray(dsts, dtype=np.int64),
+                tenant=args.tenant)
         fetch_order = {d: srcs for d in dsts}
         charge_receiver = False
     elif args.template_id == "vanilla_pull":
@@ -262,7 +265,8 @@ def run_shuffle_vectorized(
                             dtype=np.int64, count=len(got)),
                 np.fromiter((g.nbytes for g in got), dtype=np.int64,
                             count=len(got)),
-                dsts=np.full(len(got), d, dtype=np.int64))
+                dsts=np.full(len(got), d, dtype=np.int64),
+                tenant=args.tenant)
         out[d] = _comb(args, ledger, d, got)
 
     # ---- owner merge (rebalanced plans) ------------------------------------
@@ -280,7 +284,8 @@ def run_shuffle_vectorized(
                 rows = out[s].take(np.nonzero(mask)[0])
                 out[s] = out[s].take(np.nonzero(~mask)[0])
                 ledger.charge_transfer(s, topo.crossing_level(s, owner),
-                                       rows.nbytes, dst=owner)
+                                       rows.nbytes, dst=owner,
+                                       tenant=args.tenant)
                 got.append(rows)
             inbox[owner] = got
         for owner, got in inbox.items():
@@ -293,7 +298,8 @@ def run_shuffle_vectorized(
     after = ledger.snapshot()
     if manager is not None:
         for w in participants:
-            manager.record_end(w, sid, args.template_id, attempt=attempt)
+            manager.record_end(w, sid, args.template_id, attempt=attempt,
+                               tenant=args.tenant)
     return ShuffleResult(
         bufs=out,
         decisions=list(plan.decisions),
@@ -316,7 +322,7 @@ def _fold_chunks(args: ShuffleArgs, ledger, wid: int, acc: Msgs | None,
     batch = piece if acc is None else Msgs.concat([acc, piece])
     if args.comb_fn is None:
         return batch
-    ledger.charge_combine(wid, piece.nbytes, chunk=chunk)
+    ledger.charge_combine(wid, piece.nbytes, chunk=chunk, tenant=args.tenant)
     return combine_msgs(args.comb_fn, batch)
 
 
@@ -351,7 +357,8 @@ def _run_streamed_vectorized(
     if manager is not None:
         manager.get_template(args.template_id, wid=None)
         for w in participants:
-            manager.record_start(w, sid, args.template_id, attempt=attempt)
+            manager.record_start(w, sid, args.template_id, attempt=attempt,
+                                 tenant=args.tenant)
     before = ledger.snapshot()
     observed: list[tuple] = []
 
@@ -374,7 +381,7 @@ def _run_streamed_vectorized(
     def _abort(w: int, why: str, stage_name: str) -> None:
         cluster.failed_workers.add(w)
         cluster.abort_event(sid).set()
-        cluster.end_shuffle(sid, aborted=True)
+        cluster.end_shuffle(sid, aborted=True, participants=participants)
         raise ShuffleAborted(
             f"worker {w} {why} (vectorized streamed, stage {stage_name!r})",
             shuffle_id=sid)
@@ -410,7 +417,8 @@ def _run_streamed_vectorized(
                                         dtype=np.int64, count=len(peers)),
                             np.fromiter((parts[n].nbytes for n in peers),
                                         dtype=np.int64, count=len(peers)),
-                            dsts=np.asarray(peers, dtype=np.int64), chunk=c)
+                            dsts=np.asarray(peers, dtype=np.int64), chunk=c,
+                            tenant=args.tenant)
                 for w, (nbrs, chunks) in staged.items():
                     # fold own partitions first, then each neighbor's chunk
                     # stream in group order — the barrier concat order
@@ -477,7 +485,8 @@ def _run_streamed_vectorized(
                                 dtype=np.int64, count=len(dsts)),
                     np.fromiter((parts[d].nbytes for d in dsts),
                                 dtype=np.int64, count=len(dsts)),
-                    dsts=np.asarray(dsts, dtype=np.int64), chunk=c)
+                    dsts=np.asarray(dsts, dtype=np.int64), chunk=c,
+                    tenant=args.tenant)
     if args.template_id == "coordinated":
         n = len(srcs)
         fold_order = {d: [srcs[(srcs.index(d) - t) % n] for t in range(n)]
@@ -508,7 +517,8 @@ def _run_streamed_vectorized(
                 if receiver_pays:         # pull: the fetch charges, per chunk
                     ledger.charge_transfer(d, topo.crossing_level(s, d),
                                            parts_by_src[s][c][d].nbytes,
-                                           dst=d, chunk=c)
+                                           dst=d, chunk=c,
+                                           tenant=args.tenant)
                 if i < start_i or (i == start_i and c < skip):
                     continue              # re-sent chunk already in the acc
                 if fold_budget is not None and units >= fold_budget:
@@ -554,7 +564,8 @@ def _run_streamed_vectorized(
     after = ledger.snapshot()
     if manager is not None:
         for w in participants:
-            manager.record_end(w, sid, args.template_id, attempt=attempt)
+            manager.record_end(w, sid, args.template_id, attempt=attempt,
+                               tenant=args.tenant)
     return ShuffleResult(
         bufs=out,
         decisions=list(plan.decisions),

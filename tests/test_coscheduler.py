@@ -75,3 +75,120 @@ def test_fair_vs_serial_makespan(topo):
 def test_unknown_policy_rejected(topo):
     with pytest.raises(ValueError):
         CoflowScheduler(topo, "lifo")
+
+
+# ---------------------------------------------------------------------------
+# _plan_fair direct coverage: orderings, invariants, edge cases
+# ---------------------------------------------------------------------------
+
+def test_fair_empty_and_single_coflow(topo):
+    nw = topo.num_workers
+    for policy in ("fifo", "sebf", "fair", "wfair"):
+        assert CoflowScheduler(topo, policy).plan([]) == []
+    one = _req("solo", "s", nw, 1000, seed=11)
+    fair = CoflowScheduler(topo, "fair").plan([one])
+    serial = CoflowScheduler(topo, "sebf").plan([one])
+    assert len(fair) == 1
+    e = fair[0]
+    assert e.coflow_id == ("solo", "s") and e.start == 0.0
+    # alone, a coflow gets the full share and finishes exactly when serial
+    # execution would
+    assert e.share == pytest.approx(1.0)
+    assert e.finish == pytest.approx(serial[0].finish, rel=1e-9)
+    assert CoflowScheduler.mean_cct(fair) == CoflowScheduler.makespan(fair)
+
+
+def test_fair_completion_order_matches_sebf_on_equal_weights(topo):
+    """With equal weights, max-min sharing completes coflows smallest-first —
+    the same completion ORDER as SEBF (the small one drains its share first),
+    even though everyone runs from t=0."""
+    nw = topo.num_workers
+    reqs = [_req("a", "big", nw, 9000, seed=12),
+            _req("b", "mid", nw, 3000, seed=13),
+            _req("c", "small", nw, 600, seed=14)]
+    fair = CoflowScheduler(topo, "fair").plan(reqs)
+    sebf = CoflowScheduler(topo, "sebf").plan(reqs)
+    assert [e.coflow_id for e in fair] == [e.coflow_id for e in sebf]
+    # but sharing stretches every non-last completion: fair mean CCT is never
+    # better than SEBF's (SEBF is the mean-CCT optimum on this model)
+    assert CoflowScheduler.mean_cct(fair) >= CoflowScheduler.mean_cct(sebf)
+
+
+def test_fair_plan_invariants(topo):
+    nw = topo.num_workers
+    reqs = [_req("a", "x", nw, 5000, seed=15, weight=1.0),
+            _req("b", "y", nw, 2500, seed=16, weight=1.5),
+            _req("c", "z", nw, 1000, seed=17, weight=0.5)]
+    plan = CoflowScheduler(topo, "fair").plan(reqs)
+    # finishes are nondecreasing in plan order; every entry shares from t=0
+    finishes = [e.finish for e in plan]
+    assert finishes == sorted(finishes)
+    assert all(e.start == 0.0 for e in plan)
+    assert all(0.0 < e.share <= 1.0 for e in plan)
+    # mean_cct <= makespan == max finish
+    assert CoflowScheduler.mean_cct(plan) <= CoflowScheduler.makespan(plan)
+    assert CoflowScheduler.makespan(plan) == pytest.approx(max(finishes))
+    # shares at the recorded completion instants reflect the remaining set:
+    # the last survivor runs alone and ends with the full boundary
+    assert plan[-1].share == pytest.approx(1.0)
+
+
+def test_fair_zero_demand_coflow(topo):
+    """A coflow with no bytes (empty buffers) completes at t=0 and never
+    stalls the loop."""
+    nw = topo.num_workers
+    empty = CoflowRequest("idle", "noop",
+                          {w: Msgs.empty() for w in range(nw)}, HASH_PART)
+    busy = _req("a", "x", nw, 2000, seed=18)
+    plan = CoflowScheduler(topo, "fair").plan([empty, busy])
+    assert len(plan) == 2
+    by_id = {e.coflow_id: e for e in plan}
+    assert by_id[("idle", "noop")].finish == pytest.approx(0.0)
+    assert by_id[("a", "x")].finish > 0
+
+
+# ---------------------------------------------------------------------------
+# wfair: weighted virtual-finish ordering (the admission layer's policy)
+# ---------------------------------------------------------------------------
+
+def test_wfair_reduces_to_sebf_on_equal_weights(topo):
+    nw = topo.num_workers
+    reqs = [_req("a", "big", nw, 8000, seed=19),
+            _req("b", "small", nw, 400, seed=20)]
+    wfair = CoflowScheduler(topo, "wfair").plan(reqs)
+    sebf = CoflowScheduler(topo, "sebf").plan(reqs)
+    assert [e.coflow_id for e in wfair] == [e.coflow_id for e in sebf]
+    assert CoflowScheduler.mean_cct(wfair) <= CoflowScheduler.mean_cct(
+        CoflowScheduler(topo, "fifo").plan(reqs))
+
+
+def test_wfair_weight_buys_schedule_position(topo):
+    nw = topo.num_workers
+    reqs = [_req("a", "x", nw, 3000, seed=21, weight=1.0),
+            _req("b", "y", nw, 3000, seed=22, weight=4.0)]
+    plan = CoflowScheduler(topo, "wfair").plan(reqs)
+    assert plan[0].coflow_id == ("b", "y")      # same demand, higher weight
+    # enough weight overturns a size disadvantage (virtual finish d/w)
+    reqs2 = [_req("a", "x", nw, 1500, seed=23, weight=1.0),
+             _req("b", "y", nw, 3000, seed=24, weight=8.0)]
+    plan2 = CoflowScheduler(topo, "wfair").plan(reqs2)
+    assert plan2[0].coflow_id == ("b", "y")
+
+
+def test_sampled_demand_estimator_tracks_exact(topo):
+    """demand_rate estimates per-boundary demand from a row sample; the
+    resulting schedule order matches the exact estimator on well-separated
+    coflow sizes."""
+    nw = topo.num_workers
+    reqs = [_req("a", "big", nw, 12_000, seed=25),
+            _req("b", "mid", nw, 3_000, seed=26),
+            _req("c", "small", nw, 400, seed=27)]
+    exact = CoflowScheduler(topo, "sebf").plan(reqs)
+    sampled = CoflowScheduler(topo, "sebf", demand_rate=0.05).plan(reqs)
+    assert [e.coflow_id for e in sampled] == [e.coflow_id for e in exact]
+    # and the estimated demands are within a loose band of the truth
+    cf_exact = CoflowScheduler(topo, "sebf").coflows(reqs)
+    cf_samp = CoflowScheduler(topo, "sebf", demand_rate=0.05).coflows(reqs)
+    for cid in cf_exact:
+        d_e, d_s = cf_exact[cid]["demand"].sum(), cf_samp[cid]["demand"].sum()
+        assert d_s == pytest.approx(d_e, rel=0.35)

@@ -1,0 +1,512 @@
+"""Multi-tenant service: cluster/tenant API, isolation, admission scheduling.
+
+Pins the PR-5 acceptance criteria:
+
+* two tenants running concurrent shuffles through one ``TeShuCluster``
+  produce byte-identical outputs to the same shuffles on isolated
+  single-tenant services, on both executors;
+* plan-cache namespaces are tenant-private (hits, repairs, and LRU budgets
+  never cross);
+* a worker kill in tenant A's shuffle leaves tenant B's in-flight shuffle
+  untouched (on both executors) and recovery restarts only A's participants;
+* the admission queue's weighted-fair scheduling beats FIFO on mean CCT;
+* journals written before the tenant field existed still replay
+  (``recover()`` defaults old records to the default tenant).
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (DEFAULT_TENANT, HASH_PART, SUM, Msgs, PlanCache,
+                        ShuffleManager, ShuffleRecord, TeShuCluster,
+                        TeShuService, TenantSpec, datacenter,
+                        plan_key, stats_signature)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def _topo():
+    return datacenter(2, 2, 2, oversubscription=4.0)      # 8 workers
+
+
+def _bufs(workers, n=300, keys=64, seed=0, width=1):
+    rng = np.random.default_rng(seed)
+    return {w: Msgs(rng.integers(0, keys, n), rng.random((n, width)))
+            for w in workers}
+
+
+def _copy(bufs):
+    return {w: m.copy() for w, m in bufs.items()}
+
+
+def _sorted_eq(a, b):
+    oa, ob = np.argsort(a.keys, kind="stable"), np.argsort(b.keys, kind="stable")
+    np.testing.assert_array_equal(a.keys[oa], b.keys[ob])
+    np.testing.assert_array_equal(a.vals[oa], b.vals[ob])
+
+
+def _exact_eq(a, b):
+    np.testing.assert_array_equal(a.keys, b.keys)
+    np.testing.assert_array_equal(a.vals, b.vals)
+
+
+# ---------------------------------------------------------------------------
+# registry / client basics
+# ---------------------------------------------------------------------------
+
+def test_tenant_registration_and_knobs():
+    cl = TeShuCluster(_topo(), execution="threaded")
+    a = cl.tenant("alpha", quota=4, priority=2.0, execution="auto")
+    assert a.tenant_id == "alpha" and a.spec.quota == 4
+    assert a.knob("execution") == "auto"          # tenant override
+    assert a.knob("resilience") == "off"          # cluster default
+    assert a.knob("execution", "fresh") == "fresh"   # per-call wins
+    b = cl.tenant("beta")
+    assert b.knob("execution") == "threaded"      # inherits the cluster default
+    # re-fetch is idempotent and updates explicit knobs only
+    a2 = cl.tenant("alpha", priority=3.0)
+    assert a2.spec.priority == 3.0 and a2.spec.quota == 4
+    assert cl.tenants() == ["alpha", "beta"]
+    with pytest.raises(ValueError):
+        cl.tenant("bad", quota=0)
+    with pytest.raises(ValueError):
+        cl.tenant("bad", priority=0.0)
+    with pytest.raises(TypeError):
+        cl.tenant("bad", bogus_knob=1)
+    with pytest.raises(ValueError):
+        cl.tenant("bad", execution="bogus")
+    with pytest.raises(ValueError):
+        cl.tenant("bad", chunk_bytes=0)
+    with pytest.raises(ValueError):
+        cl.tenant("bad", max_retries=-1)
+    # a rejected registration leaves no phantom tenant behind
+    assert "bad" not in cl.tenants()
+    with pytest.raises(ValueError):
+        TenantSpec("")
+    # user stages may not spell the reserved auto-generated coflow tags
+    with pytest.raises(ValueError):
+        a.submit("vanilla_push", {}, [0], [0], stage="#auto-7")
+
+
+def test_facade_is_default_tenant_cluster():
+    """TeShuService (deprecated facade) == cluster + implicit default tenant."""
+    svc = TeShuService(_topo())
+    assert isinstance(svc, TeShuCluster)
+    workers = list(range(8))
+    res = svc.shuffle("vanilla_push", _bufs(workers), workers, workers,
+                      comb_fn=SUM)
+    assert res.bufs
+    assert svc.tenants() == [DEFAULT_TENANT]
+    # every journal line and ledger lane belongs to the default tenant
+    assert svc.manager.tenants() == [DEFAULT_TENANT]
+    assert set(svc.stats()["bytes_per_tenant"]) == {DEFAULT_TENANT}
+
+
+# ---------------------------------------------------------------------------
+# plan-cache namespace isolation
+# ---------------------------------------------------------------------------
+
+def test_cache_hits_never_cross_tenants():
+    cl = TeShuCluster(_topo())
+    a, b = cl.tenant("alpha"), cl.tenant("beta")
+    workers = list(range(8))
+    base = _bufs(workers, seed=3)
+    a.shuffle("network_aware", _copy(base), workers, workers, comb_fn=SUM)
+    a.shuffle("network_aware", _copy(base), workers, workers, comb_fn=SUM)
+    st_a = a.cache_stats()
+    assert (st_a["misses"], st_a["hits"]) == (1, 1)
+    # identical workload, same key — but beta's namespace is cold
+    res_b = b.shuffle("network_aware", _copy(base), workers, workers,
+                      comb_fn=SUM)
+    st_b = b.cache_stats()
+    assert (st_b["misses"], st_b["hits"]) == (1, 0)
+    assert not res_b.cached
+    # pooled view still adds up
+    pooled = cl.cache_stats()
+    assert pooled["misses"] == 2 and pooled["hits"] == 1
+    assert set(pooled["tenants"]) == {"alpha", "beta"}
+
+
+def test_per_tenant_lru_budget():
+    cache = PlanCache(capacity=8)
+    cache.set_budget("small", 2)
+
+    def key(i):
+        return ("t", (), (0,), (0,), (i,))
+
+    from repro.core import CompiledPlan
+    for i in range(3):
+        cache.put(key(i), CompiledPlan(key=key(i), template_id="t", srcs=(0,),
+                                       dsts=(0,), levels=()), tenant="small")
+    for i in range(3):
+        cache.put(key(i), CompiledPlan(key=key(i), template_id="t", srcs=(0,),
+                                       dsts=(0,), levels=()), tenant="big")
+    small, big = cache.stats("small"), cache.stats("big")
+    assert small["size"] == 2 and small["evictions"] == 1
+    assert big["size"] == 3 and big["evictions"] == 0
+    assert cache.get(key(0), "small") is None     # LRU-evicted in 'small'...
+    assert cache.get(key(0), "big") is not None   # ...but not in 'big'
+    # shrinking a budget evicts immediately, LRU first (key(0) is MRU: the
+    # lookup above touched it)
+    cache.set_budget("big", 1)
+    assert cache.stats("big")["size"] == 1
+    assert cache.get(key(0), "big") is not None
+    # membership: has() is namespace-scoped, `in` aggregates across tenants
+    assert cache.has(key(1), "small") and not cache.has(key(1), "big")
+    assert key(1) in cache
+    # clear() flushes plans but keeps budgets and counters
+    cache.clear("small")
+    assert cache.stats("small")["size"] == 0
+    assert cache.stats("small")["capacity"] == 2
+    assert cache.stats("small")["evictions"] == 1
+
+
+def test_quota_enforced_through_service():
+    cl = TeShuCluster(_topo())
+    a = cl.tenant("alpha", quota=1)
+    workers = list(range(8))
+    w1, w2 = _bufs(workers, seed=1, keys=64), _bufs(workers, seed=2, keys=2048)
+    a.shuffle("network_aware", _copy(w1), workers, workers, comb_fn=SUM)
+    a.shuffle("network_aware", _copy(w2), workers, workers, comb_fn=SUM)
+    st = a.cache_stats()
+    assert st["size"] == 1 and st["evictions"] >= 1
+    # the first workload's plan was evicted by the second under quota=1
+    res = a.shuffle("network_aware", _copy(w1), workers, workers, comb_fn=SUM)
+    assert not res.cached
+
+
+def test_repair_never_crosses_tenants():
+    """A lost-worker repair candidate in alpha's namespace must not serve
+    beta's miss (and must still serve alpha's)."""
+    cl = TeShuCluster(_topo(), resilience="recover")
+    a, b = cl.tenant("alpha"), cl.tenant("beta")
+    workers = list(range(8))
+    base = _bufs(workers, seed=5)
+    a.shuffle("network_aware", _copy(base), workers, workers, comb_fn=SUM,
+              rate=0.05)
+    survivors = [w for w in workers if w != 3]
+    sub = {w: base[w].copy() for w in survivors}
+    res_b = b.shuffle("network_aware", _copy(sub), survivors, survivors,
+                      comb_fn=SUM, rate=0.05)
+    assert not res_b.repaired and not res_b.cached
+    assert b.cache_stats()["repairs"] == 0
+    res_a = a.shuffle("network_aware", _copy(sub), survivors, survivors,
+                      comb_fn=SUM, rate=0.05)
+    assert res_a.repaired and res_a.cached
+    assert a.cache_stats()["repairs"] == 1
+
+
+# ---------------------------------------------------------------------------
+# ledger lanes + journal tagging
+# ---------------------------------------------------------------------------
+
+def test_ledger_lanes_partition_total_bytes():
+    cl = TeShuCluster(_topo())
+    a, b = cl.tenant("alpha"), cl.tenant("beta")
+    workers = list(range(8))
+    a.shuffle("network_aware", _bufs(workers, seed=1), workers, workers,
+              comb_fn=SUM)
+    b.shuffle("vanilla_push", _bufs(workers, seed=2), workers, workers,
+              comb_fn=SUM)
+    st = cl.stats()
+    lanes = st["bytes_per_tenant"]
+    assert set(lanes) == {"alpha", "beta"}
+    assert lanes["alpha"] > 0 and lanes["beta"] > 0
+    assert sum(lanes.values()) == st["total_bytes"]
+    assert a.stats()["bytes"] == lanes["alpha"]
+    assert all(c >= 0 for c in st["cost_per_tenant"].values())
+    # journal records carry the tenant tag, filterable per tenant
+    assert cl.manager.tenants() == ["alpha", "beta"]
+    assert all(r.tenant == "alpha" for r in a.records())
+    assert len(a.records(kind="start")) == 8
+
+
+# ---------------------------------------------------------------------------
+# acceptance: concurrent tenants == isolated services, byte for byte
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execution", ["threaded", "auto"])
+def test_concurrent_tenants_match_isolated_services(execution):
+    """Tenants on disjoint worker sets run *concurrently* through one
+    cluster; outputs must be byte-identical to isolated single-tenant
+    services running the same shuffles (same ids/seeds), on both executors.
+    Two rounds per tenant: round 2 replays the compiled plan (vectorized
+    under execution="auto")."""
+    topo = _topo()
+    wa, wb = list(range(4)), list(range(4, 8))
+    bufs_a, bufs_b = _bufs(wa, seed=11), _bufs(wb, seed=22, keys=32)
+
+    def run(service_like, tid, workers, bufs, sid):
+        return service_like.shuffle(
+            tid, _copy(bufs), workers, workers, comb_fn=SUM, rate=0.05,
+            shuffle_id=sid, execution=execution)
+
+    # isolated references (their own clusters, same pinned shuffle ids)
+    ref_a = [run(TeShuService(topo), "network_aware", wa, bufs_a, 101)]
+    svc_a = TeShuService(topo)
+    run(svc_a, "network_aware", wa, bufs_a, 101)
+    ref_a.append(run(svc_a, "network_aware", wa, bufs_a, 103))
+    svc_b = TeShuService(topo)
+    ref_b = [run(svc_b, "vanilla_push", wb, bufs_b, 202)]
+    ref_b.append(run(svc_b, "vanilla_push", wb, bufs_b, 204))
+
+    cl = TeShuCluster(topo)
+    a, b = cl.tenant("alpha"), cl.tenant("beta")
+    got = {}
+
+    def tenant_a():
+        got["a1"] = run(a, "network_aware", wa, bufs_a, 101)
+        got["a2"] = run(a, "network_aware", wa, bufs_a, 103)
+
+    def tenant_b():
+        got["b1"] = run(b, "vanilla_push", wb, bufs_b, 202)
+        got["b2"] = run(b, "vanilla_push", wb, bufs_b, 204)
+
+    threads = [threading.Thread(target=tenant_a),
+               threading.Thread(target=tenant_b)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120)
+    assert not any(t.is_alive() for t in threads)
+
+    for d in wa:
+        _exact_eq(ref_a[0].bufs[d], got["a1"].bufs[d])
+        _exact_eq(ref_a[1].bufs[d], got["a2"].bufs[d])
+    for d in wb:
+        _exact_eq(ref_b[0].bufs[d], got["b1"].bufs[d])
+        _exact_eq(ref_b[1].bufs[d], got["b2"].bufs[d])
+    assert got["a2"].cached and got["b2"].cached
+    if execution == "auto":
+        assert got["a2"].vectorized and got["b2"].vectorized
+
+
+# ---------------------------------------------------------------------------
+# acceptance: failure isolation across tenants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execution", ["threaded", "auto"])
+def test_worker_kill_in_tenant_a_leaves_tenant_b_untouched(execution):
+    """Kill a worker mid-shuffle in tenant A while tenant B's shuffles are in
+    flight on disjoint workers: B's outputs stay byte-identical to an
+    isolated reference, A recovers, and recovery restarts only A's
+    participants."""
+    topo = _topo()
+    wa, wb = list(range(4)), list(range(4, 8))
+    bufs_a, bufs_b = _bufs(wa, seed=31), _bufs(wb, seed=32)
+
+    ref_svc = TeShuService(topo, execution=execution)
+    ref1 = ref_svc.shuffle("vanilla_push", _copy(bufs_b), wb, wb, comb_fn=SUM,
+                           shuffle_id=501, execution=execution)
+    refs = {501: ref1}
+    for sid in (502, 503, 504):
+        refs[sid] = ref_svc.shuffle("vanilla_push", _copy(bufs_b), wb, wb,
+                                    comb_fn=SUM, shuffle_id=sid,
+                                    execution=execution)
+
+    cl = TeShuCluster(topo, execution=execution)
+    a = cl.tenant("alpha", resilience="recover")
+    b = cl.tenant("beta")
+    cl.inject_fault(0, after_stage=-1)            # A's worker 0 dies mid-run
+
+    res_a = {}
+
+    def tenant_a():
+        res_a["r"] = a.shuffle("vanilla_push", _copy(bufs_a), wa, wa,
+                               comb_fn=SUM, shuffle_id=901)
+
+    ta = threading.Thread(target=tenant_a)
+    ta.start()
+    got = {sid: b.shuffle("vanilla_push", _copy(bufs_b), wb, wb, comb_fn=SUM,
+                          shuffle_id=sid, execution=execution)
+           for sid in (501, 502, 503, 504)}      # in flight while A fails
+    ta.join(120)
+    assert not ta.is_alive()
+
+    # B: byte-identical to the isolated reference, zero failure records
+    for sid, res in got.items():
+        for d in wb:
+            _exact_eq(refs[sid].bufs[d], res.bufs[d])
+    assert cl.manager.records(kind="failure", tenant="beta") == []
+    assert b.cache_stats()["invalidations"] == 0
+
+    # A: recovered, and only A's participants were restarted/re-run
+    assert res_a["r"].attempts > 1
+    assert set(res_a["r"].recovery["restarted"]) <= set(wa)
+    fails = cl.manager.records(kind="failure", tenant="alpha")
+    assert fails and all(r.shuffle_id == 901 for r in fails)
+    recov, = cl.manager.recovery_records(901)
+    assert set(recov.info["restart_set"]) <= set(wa)
+    assert recov.tenant == "alpha"
+    # A's recovered output matches an isolated no-failure reference
+    ref_a = TeShuService(topo).shuffle("vanilla_push", _copy(bufs_a), wa, wa,
+                                       comb_fn=SUM, shuffle_id=901)
+    for d in wa:
+        _sorted_eq(SUM(res_a["r"].bufs[d]), SUM(ref_a.bufs[d]))
+
+
+# ---------------------------------------------------------------------------
+# admission: weighted-fair vs FIFO
+# ---------------------------------------------------------------------------
+
+def _submit_mixed(cl):
+    """Big uniform tenant submits first, small tenants later — the regime
+    where FIFO head-of-line blocking hurts mean CCT."""
+    workers = list(range(cl.topology.num_workers))
+    etl = cl.tenant("etl")
+    ml = cl.tenant("ml")
+    adhoc = cl.tenant("adhoc", priority=2.0)
+    tickets = {
+        "etl": etl.submit("vanilla_push", _bufs(workers, n=20_000, seed=41),
+                          workers, workers, comb_fn=SUM, stage="stage-1"),
+        "ml": ml.submit("vanilla_push", _bufs(workers, n=4_000, seed=42),
+                        workers, workers, comb_fn=SUM, stage="step-9"),
+        "adhoc": adhoc.submit("vanilla_push", _bufs(workers, n=500, seed=43),
+                              workers, workers, comb_fn=SUM, stage="join-2"),
+    }
+    return tickets
+
+
+def test_run_pending_schedules_and_returns_results():
+    cl = TeShuCluster(_topo(), admission="wfair")
+    tickets = _submit_mixed(cl)
+    assert cl.pending() == 3
+    results = cl.run_pending()
+    assert cl.pending() == 0
+    assert set(results) == set(tickets.values())
+    assert all(r.bufs for r in results.values())
+    sched = cl.last_schedule()
+    assert sched["policy"] == "wfair"
+    assert len(sched["ccts"]) == 3
+    # small / prioritized coflows are served before the big one
+    order = [e.coflow_id[0] for e in sched["planned"]]
+    assert order.index("adhoc") < order.index("etl")
+    assert order.index("ml") < order.index("etl")
+    # run_pending with an empty queue is a no-op
+    assert cl.run_pending() == {}
+
+
+def test_wfair_mean_cct_beats_fifo():
+    ccts = {}
+    for policy in ("fifo", "wfair"):
+        cl = TeShuCluster(_topo(), admission=policy)
+        _submit_mixed(cl)
+        cl.run_pending()
+        ccts[policy] = cl.last_schedule()
+    assert ccts["wfair"]["mean_cct_s"] < ccts["fifo"]["mean_cct_s"]
+    # same serial work: makespans agree
+    assert ccts["wfair"]["makespan_s"] == pytest.approx(
+        ccts["fifo"]["makespan_s"], rel=0.05)
+    # FIFO really did run in arrival order
+    assert [e.coflow_id[0] for e in ccts["fifo"]["planned"]] == \
+        ["etl", "ml", "adhoc"]
+
+
+def test_run_pending_isolates_tenant_failures():
+    """One tenant's failing submission must not discard the other tenants'
+    queued work: their shuffles still run, and the failing ticket resolves
+    to the exception instead of vanishing."""
+    cl = TeShuCluster(_topo())
+    cl.cluster.rpc_timeout = 1.0
+    cl.cluster.run_timeout = 5.0
+    wa, wb = list(range(4)), list(range(4, 8))
+    bad = cl.tenant("bad")
+    good = cl.tenant("good")
+    t_bad = bad.submit("vanilla_push", _bufs(wa, seed=71), wa, wa,
+                       comb_fn=SUM, stage="doomed")
+    t_good = good.submit("vanilla_push", _bufs(wb, seed=72), wb, wb,
+                         comb_fn=SUM, stage="fine")
+    cl.fail_worker(0)                     # resilience="off": 'bad' will abort
+    results = cl.run_pending(policy="fifo")
+    assert isinstance(results[t_bad], Exception)
+    assert results[t_good].bufs           # good tenant's work survived
+    assert t_bad in cl.last_schedule()["failures"]
+    assert cl.pending() == 0
+
+
+def test_admission_outputs_match_direct_execution():
+    """Scheduling changes order, never bytes."""
+    workers = list(range(8))
+    base = _bufs(workers, seed=7)
+    direct = TeShuService(_topo()).shuffle("vanilla_push", _copy(base),
+                                           workers, workers, comb_fn=SUM)
+    cl = TeShuCluster(_topo())
+    t = cl.tenant("alpha")
+    ticket = t.submit("vanilla_push", _copy(base), workers, workers,
+                      comb_fn=SUM)
+    res = cl.run_pending()[ticket]
+    for d in workers:
+        _exact_eq(direct.bufs[d], res.bufs[d])
+
+
+# ---------------------------------------------------------------------------
+# journal migration: pre-tenant journals replay as the default tenant
+# ---------------------------------------------------------------------------
+
+def test_recover_defaults_pre_tenant_journal(tmp_path):
+    fixture = os.path.join(FIXTURES, "pre_tenant_journal.jsonl")
+    mgr = ShuffleManager.recover(fixture)
+    recs = mgr.records()
+    assert len(recs) == 10
+    assert all(r.tenant == DEFAULT_TENANT for r in recs)
+    assert mgr.tenants() == [DEFAULT_TENANT]
+    # replayed state is fully usable: progress, durations, recovery queries
+    assert mgr.progress(1) == {"started": [0, 1], "finished": [0, 1],
+                               "pending": []}
+    assert mgr.recovery_records(2)[0].info["restarted"] == [3]
+    # a mixed journal (old lines + new tenant-tagged lines) also replays
+    mixed = tmp_path / "mixed.jsonl"
+    lines = open(fixture).read().splitlines()
+    lines.append(json.dumps({"wid": 0, "shuffle_id": 3, "template_id":
+                             "vanilla_push", "kind": "start", "ts": 12.0,
+                             "tenant": "alpha"}))
+    mixed.write_text("\n".join(lines) + "\n")
+    mgr2 = ShuffleManager.recover(str(mixed))
+    assert mgr2.tenants() == ["alpha", DEFAULT_TENANT]
+    assert mgr2.records(tenant="alpha")[0].shuffle_id == 3
+
+
+def test_record_format_stays_seed_compatible():
+    """Default-tenant records serialize without a tenant field (old readers
+    keep working); tagged records round-trip."""
+    rec = ShuffleRecord(0, 1, "vanilla_push", "start", 1.0)
+    assert "tenant" not in json.loads(rec.to_json())
+    assert ShuffleRecord.from_json(rec.to_json()).tenant == DEFAULT_TENANT
+    tagged = ShuffleRecord(0, 1, "vanilla_push", "start", 1.0, tenant="alpha")
+    assert json.loads(tagged.to_json())["tenant"] == "alpha"
+    assert ShuffleRecord.from_json(tagged.to_json()).tenant == "alpha"
+
+
+def test_live_journal_replays_with_tenants(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    cl = TeShuCluster(_topo(), journal_path=path)
+    workers = list(range(8))
+    cl.tenant("alpha").shuffle("vanilla_push", _bufs(workers, seed=1),
+                               workers, workers, comb_fn=SUM)
+    cl.tenant("beta").shuffle("vanilla_push", _bufs(workers, seed=2),
+                              workers, workers, comb_fn=SUM)
+    mgr = ShuffleManager.recover(path)
+    assert mgr.tenants() == ["alpha", "beta"]
+    assert len(mgr.records(tenant="beta", kind="end")) == 8
+
+
+# ---------------------------------------------------------------------------
+# plan keys: tenancy lives in the namespace, not the signature
+# ---------------------------------------------------------------------------
+
+def test_plan_keys_identical_across_tenants():
+    """Isolation comes from namespaces; the key itself is tenant-free, so a
+    tenant's own iterative workload keys exactly as the facade's would."""
+    workers = list(range(8))
+    base = _bufs(workers, seed=9)
+    topo = _topo()
+    key = plan_key("vanilla_push", topo, tuple(workers), tuple(workers),
+                   stats_signature(base, HASH_PART, SUM, 0.01))
+    cl = TeShuCluster(topo)
+    cl.tenant("alpha").shuffle("vanilla_push", _copy(base), workers, workers,
+                               comb_fn=SUM)
+    (got_key, _), = cl.plan_cache.scan("alpha")
+    assert got_key == key

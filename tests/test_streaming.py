@@ -451,6 +451,41 @@ def test_feed_drain_matches_barrier_totals():
         sess.drain()
 
 
+def test_feed_backpressure_enforced():
+    """max_inflight is enforced, not merely modelled: the window of
+    transferred-but-unfolded chunks never exceeds the bound (feed() spills
+    the oldest chunks into the fold when it fills), and the window size never
+    changes the drained bytes."""
+    svc = TeShuService(_topo(), streaming="auto", chunk_bytes=240)
+    rng = np.random.default_rng(4)
+    feeds = [{w: Msgs(rng.integers(0, 32, 400), rng.random((400, 1)))
+              for w in WORKERS[:4]} for _ in range(2)]
+
+    tight = svc.open_stream("vanilla_push", WORKERS[:4], WORKERS,
+                            comb_fn=SUM, max_inflight=2)
+    for f in feeds:
+        tight.feed(_copy(f))
+        assert tight.inflight <= 2            # bound holds between feeds too
+    assert tight.max_inflight_observed <= 2
+    assert tight.backpressure_stalls > 0      # the producer really was held
+    out_tight = tight.drain()
+    assert tight.inflight == 0                # drain flushes the window
+
+    wide = svc.open_stream("vanilla_push", WORKERS[:4], WORKERS,
+                           comb_fn=SUM, max_inflight=10_000)
+    for f in feeds:
+        wide.feed(_copy(f))
+    assert wide.backpressure_stalls == 0
+    assert wide.max_inflight_observed > 2     # the window genuinely deferred
+    out_wide = wide.drain()
+    assert out_tight["chunks"] == out_wide["chunks"]
+    for d in WORKERS:
+        np.testing.assert_array_equal(out_tight["bufs"][d].keys,
+                                      out_wide["bufs"][d].keys)
+        np.testing.assert_array_equal(out_tight["bufs"][d].vals,
+                                      out_wide["bufs"][d].vals)
+
+
 def test_feed_drain_bounded_state_and_guards():
     svc = TeShuService(_topo(), streaming="auto", chunk_bytes=240)
     with pytest.raises(ValueError):
