@@ -1,9 +1,10 @@
 """Table 3: template expressiveness — lines of TeShu template code per shuffle
 algorithm, plus a byte/time profile of each template on a common workload, plus
 the plan-cache / vectorization benchmark (beyond-paper: repeated shuffles),
-the skew-rebalance benchmark (``BENCH_skew.json``, machine-readable) and the
+the skew-rebalance benchmark (``BENCH_skew.json``, machine-readable), the
 streaming benchmark (``BENCH_streaming.json``: barrier vs chunk-pipelined
-modelled time on both executors)."""
+modelled time on both executors) and the jitted-replay benchmark
+(``BENCH_jaxplan.json``: fresh vs vectorized-hit vs jax-hit)."""
 from __future__ import annotations
 
 import argparse
@@ -15,7 +16,7 @@ import numpy as np
 from repro.core import (HASH_PART, SUM, TEMPLATES, Msgs, ShuffleArgs,
                         TeShuCluster, TeShuService, datacenter,
                         dst_load_imbalance, fat_tree, multipod_dcn,
-                        run_shuffle, template_loc)
+                        replay_cache_size, run_shuffle, template_loc)
 
 from .common import CsvOut, paper_topology, zipf_shards
 
@@ -366,11 +367,95 @@ def multitenant_profile(*, smoke: bool = False,
     return out
 
 
+def jaxplan_profile(iters: int = 4, *, smoke: bool = False,
+                    json_path: str | None = None) -> CsvOut:
+    """Jitted plan replay: fresh vs vectorized-hit vs jax-hit.
+
+    Three paths through the *same* (template, topology, workload) key:
+
+    * ``fresh``          — paper-faithful re-instantiation every call;
+    * ``vectorized_hit`` — plan-cache hit on the batched-numpy data plane;
+    * ``jax_hit``        — plan-cache hit lowered to one jitted ``lax.scan``
+      program (``executor="jax"``).
+
+    Outputs are asserted byte-identical (sorted key order) across all three
+    paths before anything is reported, ``traces`` records jit-cache growth
+    *during the timed loop* (must be 0: one trace per plan shape, paid at
+    warmup), and ``engine`` is what :class:`ShuffleResult` reports actually
+    ran.  When ``json_path`` is set the rows are written machine-readable
+    (``BENCH_jaxplan.json``), consumed by the CI smoke job, which gates on
+    byte-identity, zero steady-state retraces, and jax-hit modelled cost no
+    worse than the vectorized hit.
+    """
+    out = CsvOut("jaxplan_profile",
+                 ["template", "path", "engine", "identical", "traces",
+                  "modelled_ms", "wall_ms", "total_mb", "cache_hits"])
+    topo = datacenter(4, 2, 2, oversubscription=4.0)
+    nw = topo.num_workers
+    workers = list(range(nw))
+    n_per = 2_000 if smoke else 20_000
+    loops = 2 if smoke else iters
+    rows = []
+    for tid in ("vanilla_push", "coordinated", "network_aware"):
+        base = zipf_shards(nw, n_per, 5_000, alpha=0.0, seed=13)
+        ref = None
+        for path, kw in (
+                ("fresh", dict(execution="fresh")),
+                ("vectorized_hit", dict(executor="vectorized")),
+                ("jax_hit", dict(executor="jax"))):
+            svc = TeShuService(topo, **kw)
+
+            def one():
+                bufs = {w: m.copy() for w, m in base.items()}
+                t0 = time.perf_counter()
+                res = svc.shuffle(tid, bufs, workers, workers,
+                                  comb_fn=SUM, rate=0.01)
+                return time.perf_counter() - t0, res
+
+            one()                # warm: compile + cache the plan (miss)
+            one()                # warm: first hit pays the one jit trace
+            traces_before = replay_cache_size()
+            svc.reset_stats()
+            runs = [one() for _ in range(loops)]
+            _, last = runs[-1]
+            identical = True
+            if ref is None:
+                ref = last.bufs
+            else:                # byte-identical across all three paths
+                for d in ref:
+                    a, b = ref[d], last.bufs[d]
+                    oa, ob = np.argsort(a.keys), np.argsort(b.keys)
+                    identical = (identical
+                                 and np.array_equal(a.keys[oa], b.keys[ob])
+                                 and np.array_equal(a.vals[oa], b.vals[ob]))
+                assert identical, f"{tid}/{path}: output diverged"
+            st = svc.stats()
+            row = dict(
+                template=tid, path=path, engine=last.engine,
+                identical=identical,
+                traces=replay_cache_size() - traces_before,
+                modelled_ms=st["modelled_time_s"] / loops * 1e3,
+                wall_ms=float(np.median([t for t, _ in runs])) * 1e3,
+                total_mb=st["total_bytes"] / loops / 1e6,
+                cache_hits=svc.cache_stats()["hits"])
+            rows.append(row)
+            out.add(**row)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"meta": {"bench": "jaxplan_profile", "workers": nw,
+                                "n_per_worker": n_per, "iters": loops,
+                                "smoke": smoke},
+                       "rows": rows}, f, indent=2)
+            f.write("\n")
+    return out
+
+
 def run() -> list[CsvOut]:
     return [table3(), template_profile(), plan_cache_profile(),
             skew_profile(json_path="BENCH_skew.json"),
             streaming_profile(json_path="BENCH_streaming.json"),
-            multitenant_profile(json_path="BENCH_multitenant.json")]
+            multitenant_profile(json_path="BENCH_multitenant.json"),
+            jaxplan_profile(json_path="BENCH_jaxplan.json")]
 
 
 if __name__ == "__main__":
@@ -381,6 +466,8 @@ if __name__ == "__main__":
                     help="run only the streaming benchmark")
     ap.add_argument("--multitenant-only", action="store_true",
                     help="run only the multi-tenant scheduling benchmark")
+    ap.add_argument("--jaxplan-only", action="store_true",
+                    help="run only the jitted plan-replay benchmark")
     ap.add_argument("--smoke", action="store_true",
                     help="small-scale run (CI)")
     ap.add_argument("--skew-json", default="BENCH_skew.json",
@@ -389,6 +476,8 @@ if __name__ == "__main__":
                     help="path for the machine-readable streaming output")
     ap.add_argument("--multitenant-json", default="BENCH_multitenant.json",
                     help="path for the machine-readable multitenant output")
+    ap.add_argument("--jaxplan-json", default="BENCH_jaxplan.json",
+                    help="path for the machine-readable jaxplan output")
     args = ap.parse_args()
     if args.skew_only:
         skew_profile(smoke=args.smoke, json_path=args.skew_json).emit()
@@ -398,6 +487,9 @@ if __name__ == "__main__":
     elif args.multitenant_only:
         multitenant_profile(smoke=args.smoke,
                             json_path=args.multitenant_json).emit()
+    elif args.jaxplan_only:
+        jaxplan_profile(smoke=args.smoke,
+                        json_path=args.jaxplan_json).emit()
     else:
         for t in run():
             t.emit()

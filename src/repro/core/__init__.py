@@ -71,4 +71,19 @@ __all__ = [
     "RecoveryCoordinator", "SpeculationPolicy", "SpeculativeTask",
     "StreamCheckpoint",
     "consistent_resume_stages", "repair_plan", "try_repair",
+    "JAX_TEMPLATES", "JaxLowering", "lower_plan", "try_run_jax",
+    "replay_cache_size", "set_kernel_plane",
 ]
+
+# The jitted executor is resolved lazily: importing repro.core must not pull
+# in jax (the threaded/vectorized paths are pure numpy), and the service
+# itself only imports repro.core.jaxplan on the first executor="jax" call.
+_JAXPLAN_EXPORTS = ("JAX_TEMPLATES", "JaxLowering", "lower_plan",
+                    "try_run_jax", "replay_cache_size", "set_kernel_plane")
+
+
+def __getattr__(name: str):
+    if name in _JAXPLAN_EXPORTS:
+        from . import jaxplan
+        return getattr(jaxplan, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

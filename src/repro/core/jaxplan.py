@@ -1,0 +1,567 @@
+"""Jitted plan replay: lower a CompiledPlan into one compiled JAX program.
+
+The third executor.  The threaded path (:mod:`repro.core.templates`) is the
+reference semantics; the vectorized path (:mod:`repro.core.vectorized`)
+replays a cached plan as batched numpy.  This module lowers a frozen
+:class:`~repro.core.plancache.CompiledPlan` one step further: the whole
+replay — every hierarchical stage plus the global exchange and combine —
+becomes a *single jitted JAX program*, with the stage loop compiled as one
+rolled :func:`jax.lax.scan` over a dense ``[levels, nworkers]`` routing
+table extracted from the plan.  Template differences (neighbor lists, fold
+orders, ring rotation) are data in that table, not control flow, so one
+trace serves every supported template shape.
+
+Lowering model
+--------------
+
+All source buffers are stacked into flat arrays — ``keys [N]``,
+``vals [N, d]``, ``owner [N]`` (position in ``srcs``) — and every primitive
+becomes a whole-array operation:
+
+* **PART** assigns each row a destination slot with the plan's partFunc
+  (splitmix64 hash or range, replicated bit-for-bit in jnp under x64) and
+  *moves* rows by one stable argsort on a ``(destination, fold-rank)``
+  composite key.  The fold rank reproduces the receiver's concat order
+  (own partition first, then group neighbors; ring rotation for
+  ``coordinated``), so the physical array order after the sort IS the
+  byte-order the numpy executor concatenates in.
+* **COMB** stable-sorts each owner's segment by key and folds equal-key
+  rows with a sequential :func:`jax.lax.scan` — an explicit left fold in
+  element order, which is exactly the ``ufunc.at`` contract of
+  :class:`repro.core.messages.Combiner` — so float64 SUM results are
+  *bit-identical* to both other executors.  Combined-away rows are marked
+  dead and sort to the end; row capacity stays ``N`` throughout, keeping
+  every shape static.
+
+The program also returns per-level ``[nworkers, nworkers]`` routing-count
+matrices; the Python wrapper converts row counts to wire bytes and replays
+the vectorized executor's exact :class:`~repro.core.primitives.CostLedger`
+charge sequence (same epochs, same per-worker transfer/combine charges,
+same per-destination recv accounting), so modelled bytes and costs are
+identical across all three executors.
+
+Precision: the hot path runs in float64 under ``jax.experimental
+.enable_x64`` — byte identity is the acceptance contract, and the
+float32-accumulating Pallas kernels (:mod:`repro.kernels.partition`,
+:mod:`repro.kernels.combine`) remain the PART/COMB primitives of the
+tolerance-validated kernel path (``kernels.ops.part`` / ``kernels.ops
+.combine``, exercised against this executor in ``tests/test_jaxplan.py``).
+
+Decline conditions (the service falls back to the vectorized executor,
+which may fall back to threaded):
+
+* template outside :data:`JAX_TEMPLATES` (bruck / two_level interleave
+  SEND/RECV rounds that are inherently sequential per worker);
+* a triggered skew rebalance (positional scatter partFuncs are
+  decision-state the lowering does not encode);
+* streamed replays (``args.stream``), recovery contexts, or any cluster
+  fault state (failed workers, delays, fault injections);
+* partFuncs outside the jnp registry (hash / range) or combiners outside
+  {sum, min, max}; mixed payload widths; an all-empty workload;
+* ``coordinated`` with destinations outside the source ring.
+
+See ``docs/jaxplan.md`` for the full lowering rules and executor matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import NamedTuple
+
+import numpy as np
+
+from .messages import Msgs
+from .plancache import CompiledPlan, attach_lowering, get_lowering
+from .primitives import LocalCluster, ShuffleArgs
+from .templates import ShuffleResult, aggregate_observed
+from .vectorized import VECTORIZABLE
+
+# Same support set as the vectorized executor: these templates' replays are
+# pure PART -> exchange -> COMB dataflow once a plan is frozen.
+JAX_TEMPLATES = frozenset(VECTORIZABLE)
+
+_RANGE_NAME = re.compile(r"^range\[(\d+)\]$")
+_JAX_COMBINERS = ("sum", "min", "max")
+
+# Sentinel attached to a plan whose lowering was attempted and refused, so
+# repeated calls don't re-derive the refusal.
+_DECLINED = object()
+
+
+class _PlanSpec(NamedTuple):
+    """Static (hashable) half of the replay: one jit trace per distinct spec
+    and input shape; routing tables and buffers are traced arrays."""
+
+    template: str
+    comb: str | None          # combiner name, or None (concat only)
+    part: tuple               # ("hash",) | ("range", key_space)
+    initial_comb: bool        # network_aware combines locally before stage 0
+    ns: int                   # len(srcs)
+    ndst: int                 # len(dsts)
+
+
+@dataclasses.dataclass(frozen=True)
+class JaxLowering:
+    """Routing tables extracted once per CompiledPlan (template differences
+    become data): frozen onto the plan via plancache.attach_lowering."""
+
+    src_pos: dict[int, int]          # wid -> position in srcs
+    dst_pos: dict[int, int]          # wid -> position in dsts
+    gsize: np.ndarray                # [L, ns] int32: worker's group size per level
+    slot_map: np.ndarray             # [L, ns, ns] int32: (worker, slot) -> src pos
+    rank_map: np.ndarray             # [L, ns, ns] int32: (sender, receiver) -> fold rank
+    active: np.ndarray               # [L] bool: level beneficial?
+    global_rank: np.ndarray          # [ns, ndst] int32: (sender, dst) -> fold rank
+    levels_staged: tuple             # per level: ((wid, peers), ...) in srcs order
+
+
+def _part_spec(part_fn) -> tuple | None:
+    """jnp-replicable partFuncs: the paper's hash default and range."""
+    if part_fn.name == "hash":
+        return ("hash",)
+    m = _RANGE_NAME.match(part_fn.name)
+    if m is not None:
+        return ("range", int(m.group(1)))
+    return None
+
+
+def lower_plan(plan: CompiledPlan) -> JaxLowering | None:
+    """Extract the dense routing tables; None when the plan shape is not
+    lowerable (unsupported template, triggered skew, ring mismatch)."""
+    if plan.template_id not in JAX_TEMPLATES:
+        return None
+    if plan.skew is not None and plan.skew.triggered:
+        return None
+    srcs, dsts = list(plan.srcs), list(plan.dsts)
+    if plan.template_id == "coordinated" and any(d not in srcs for d in dsts):
+        return None                       # ring fold order needs dsts in srcs
+    ns, ndst = len(srcs), len(dsts)
+    src_pos = {w: i for i, w in enumerate(srcs)}
+    dst_pos = {d: i for i, d in enumerate(dsts)}
+    nlv = len(plan.levels)
+    gsize = np.ones((nlv, ns), np.int32)
+    slot_map = np.tile(np.arange(ns, dtype=np.int32), (nlv, ns, 1))
+    rank_map = np.zeros((nlv, ns, ns), np.int32)
+    active = np.zeros((nlv,), bool)
+    levels_staged = []
+    for li, ld in enumerate(plan.levels):
+        active[li] = ld.eff_cost.beneficial
+        staged = []
+        for w in srcs:
+            nbrs = list(ld.nbrs.get(w, (w,)))
+            if any(n not in src_pos for n in nbrs):
+                return None               # a repaired plan routing off-srcs
+            wp = src_pos[w]
+            gsize[li, wp] = len(nbrs)
+            for s, n in enumerate(nbrs):
+                slot_map[li, wp, s] = src_pos[n]
+            # receiver w folds [own partition] + [peers in group order]:
+            # rank 0 for itself, pos+1 before its own position, pos after
+            pos_w = nbrs.index(w)
+            for pos_s, s in enumerate(nbrs):
+                sp = src_pos[s]
+                if s == w:
+                    rank_map[li, sp, wp] = 0
+                else:
+                    rank_map[li, sp, wp] = pos_s + 1 if pos_s < pos_w else pos_s
+            if len(nbrs) > 1:
+                staged.append((w, tuple(n for n in nbrs if n != w)))
+        levels_staged.append(tuple(staged))
+    global_rank = np.zeros((ns, ndst), np.int32)
+    if plan.template_id == "coordinated":
+        # fetch_order[d][t] = srcs[(idx(d) - t) % n]  =>  rank(s at d) = idx(d) - idx(s) mod n
+        for d in dsts:
+            for s in srcs:
+                global_rank[src_pos[s], dst_pos[d]] = \
+                    (src_pos[d] - src_pos[s]) % ns
+    else:
+        # push / pull / network_aware all fold arrivals in srcs order
+        global_rank[:] = np.arange(ns, dtype=np.int32)[:, None]
+    return JaxLowering(
+        src_pos=src_pos, dst_pos=dst_pos, gsize=gsize, slot_map=slot_map,
+        rank_map=rank_map, active=active, global_rank=global_rank,
+        levels_staged=tuple(levels_staged))
+
+
+# ---------------------------------------------------------------------------
+# The jitted program
+# ---------------------------------------------------------------------------
+
+def _splitmix64(keys):
+    """Bit-exact jnp mirror of messages.splitmix64 (seed 0); needs x64."""
+    import jax.numpy as jnp
+    z = keys.astype(jnp.uint64) + jnp.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    return z ^ (z >> jnp.uint64(31))
+
+
+def _slot_of(part: tuple, keys, ndst):
+    """Per-row destination slot with a per-row slot count (PartFn.assign)."""
+    import jax.numpy as jnp
+    if part[0] == "hash":
+        return (_splitmix64(keys) % ndst.astype(jnp.uint64)).astype(jnp.int32)
+    key_space = part[1]
+    g = ndst.astype(jnp.int64)
+    per = (jnp.int64(key_space) + g - 1) // g          # ceil, like -(-ks // n)
+    return jnp.minimum(jnp.floor_divide(keys, per), g - 1).astype(jnp.int32)
+
+
+def _combine(comb: str, keys, vals, owner, alive, participate, sentinel: int):
+    """Per-owner equal-key fold, bit-identical to messages.Combiner.
+
+    Stable lexsort by (owner, key) — non-participating rows keep their
+    relative order (their sort key is constant and owners never mix
+    participation) — then a sequential lax.scan left fold over rows:
+    each segment is seeded with its first row and the rest fold in element
+    order, which is numpy's ``ufunc.at`` contract exactly.  Non-segment-end
+    rows die (owner keeps its value; every later sort sends dead rows to
+    the end via the alive mask).
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    folds = participate & alive
+    ckey = jnp.where(folds, keys, jnp.int64(0))
+    perm = jnp.argsort(ckey, stable=True)
+    so = jnp.where(alive, owner, sentinel)
+    perm = perm[jnp.argsort(so[perm], stable=True)]
+    keys, vals, owner, alive, folds = (
+        keys[perm], vals[perm], owner[perm], alive[perm], folds[perm])
+    prev_same = ((owner == jnp.roll(owner, 1))
+                 & (keys == jnp.roll(keys, 1))).at[0].set(False)
+    is_start = ~(prev_same & folds)
+    op = {"sum": jnp.add, "min": jnp.minimum, "max": jnp.maximum}[comb]
+
+    def fold(acc, x):
+        v, start = x
+        acc = jnp.where(start, v, op(acc, v))
+        return acc, acc
+
+    _, folded = lax.scan(fold, jnp.zeros_like(vals[0]), (vals, is_start))
+    seg_end = jnp.concatenate([is_start[1:], jnp.ones((1,), bool)])
+    return keys, folded, owner, alive & seg_end
+
+
+def _make_replay():
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("spec",))
+    def _replay(spec: _PlanSpec, keys, vals, owner,
+                gsize, slot_map, rank_map, active, global_rank):
+        import jax.numpy as jnp
+        from jax import lax
+
+        ns, ndst = spec.ns, spec.ndst
+        n = keys.shape[0]
+        alive = jnp.ones((n,), bool)
+        if spec.initial_comb:
+            keys, vals, owner, alive = _combine(
+                spec.comb, keys, vals, owner, alive, alive, ns)
+
+        def level_body(carry, xs):
+            keys, vals, owner, alive = carry
+            g_l, slot_l, rank_l, act = xs
+            oc = jnp.minimum(owner, ns - 1)
+            g = g_l[oc]
+            part_row = act & alive & (g > 1)
+            slot = _slot_of(spec.part, keys, jnp.maximum(g, 1))
+            new_owner = jnp.where(part_row, slot_l[oc, slot], owner)
+            noc = jnp.minimum(new_owner, ns - 1)
+            rank = jnp.where(part_row, rank_l[oc, noc], 0)
+            moved = jnp.zeros((ns, ns), jnp.int32).at[oc, noc].add(
+                part_row.astype(jnp.int32))
+            # the exchange: one stable sort by (receiver, fold rank); within
+            # a (sender -> receiver) flow rows keep buffer order = the stable
+            # argsort inside messages.partition
+            sort_owner = jnp.where(alive, new_owner, ns)
+            ck = sort_owner.astype(jnp.int64) * jnp.int64(ns + 1) + rank
+            perm = jnp.argsort(ck, stable=True)
+            keys2, vals2 = keys[perm], vals[perm]
+            owner2, alive2 = new_owner[perm], alive[perm]
+            staged_owner = act & (g_l[jnp.minimum(owner2, ns - 1)] > 1)
+            if spec.comb is not None:
+                keys2, vals2, owner2, alive2 = _combine(
+                    spec.comb, keys2, vals2, owner2, alive2,
+                    staged_owner & alive2, ns)
+            post_row = (alive2 & act
+                        & (g_l[jnp.minimum(owner2, ns - 1)] > 1))
+            post = jnp.zeros((ns,), jnp.int32).at[
+                jnp.minimum(owner2, ns - 1)].add(post_row.astype(jnp.int32))
+            return (keys2, vals2, owner2, alive2), (moved, moved.sum(0), post)
+
+        (keys, vals, owner, alive), (lvl_moved, lvl_pre, lvl_post) = lax.scan(
+            level_body, (keys, vals, owner, alive),
+            (gsize, slot_map, rank_map, active))
+
+        # ---- global exchange: every alive row repartitions over the dsts ----
+        oc = jnp.minimum(owner, ns - 1)
+        slot = _slot_of(spec.part, keys,
+                        jnp.full((n,), ndst, jnp.int32))
+        new_owner = jnp.where(alive, slot, ndst)
+        sc = jnp.minimum(slot, ndst - 1)
+        gmoved = jnp.zeros((ns, ndst), jnp.int32).at[oc, sc].add(
+            alive.astype(jnp.int32))
+        rank = jnp.where(alive, global_rank[oc, sc], 0)
+        ck = new_owner.astype(jnp.int64) * jnp.int64(ns + 1) + rank
+        perm = jnp.argsort(ck, stable=True)
+        keys, vals = keys[perm], vals[perm]
+        owner, alive = new_owner[perm], alive[perm]
+        if spec.comb is not None:
+            keys, vals, owner, alive = _combine(
+                spec.comb, keys, vals, owner, alive, alive, ndst)
+        return keys, vals, owner, alive, lvl_moved, lvl_pre, lvl_post, gmoved
+
+    return _replay
+
+
+_replay_fn = None
+
+
+def _replay():
+    global _replay_fn
+    if _replay_fn is None:
+        _replay_fn = _make_replay()
+    return _replay_fn
+
+
+def replay_cache_size() -> int:
+    """Number of compiled replay programs (one per plan spec x shape) — the
+    one-trace-per-plan acceptance hook."""
+    return 0 if _replay_fn is None else _replay_fn._cache_size()
+
+
+# ---------------------------------------------------------------------------
+# The Pallas kernel plane (opt-in, mirrors vectorized.set_comb_backend)
+# ---------------------------------------------------------------------------
+
+_KERNEL_PLANE = False
+
+
+def set_kernel_plane(enabled: bool) -> bool:
+    """Route SUM replays' global PART/COMB through the Pallas MXU kernels:
+    :func:`repro.kernels.partition.partition_permute` routes rows to their
+    destination-major positions (PART as a one-hot permutation matmul) and
+    :func:`repro.kernels.combine.segment_combine` folds per-(destination,
+    key) segments (COMB as an accumulating one-hot matmul).
+
+    Interpret mode on CPU, compiled natively on TPU (the kernels' default
+    ``interpret=None`` resolves through ``kernels.ops.default_interpret``).
+    The kernels accumulate in float32, so — exactly like
+    ``vectorized.set_comb_backend("pallas")`` — this plane is *opt-in*: the
+    default replay keeps bit-exact float64 semantics, and the kernel plane
+    replaces only the output payloads (routing decisions, output key sets,
+    and all ledger charges still come from the exact program).  Returns the
+    previous setting so callers can restore it.
+    """
+    global _KERNEL_PLANE
+    prev, _KERNEL_PLANE = _KERNEL_PLANE, bool(enabled)
+    return prev
+
+
+def kernel_global_stage(part_fn, keys: np.ndarray, vals: np.ndarray,
+                        ndst: int) -> list[tuple[np.ndarray, np.ndarray]]:
+    """The fused global exchange+fold of a SUM replay on the Pallas kernels.
+
+    SUM's per-(destination, key) totals are invariant under the hierarchy's
+    pre-combines, so the whole replay collapses to one PART + one COMB over
+    the stacked inputs: ``partition_permute`` moves every row to its
+    destination-major slot (a pure permutation — each output row has exactly
+    one contributor), then ``segment_combine`` folds the contiguous
+    (destination, key) segments.  Returns ``[(keys, vals), ...]`` per
+    destination with keys ascending — the same key order the exact combined
+    replay produces.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.combine import segment_combine
+    from repro.kernels.partition import partition_permute
+
+    slot = part_fn.assign(keys, ndst)              # the plan's real partFunc
+    uniq, inv = np.unique(keys, return_inverse=True)
+    nk = int(uniq.size)
+    seg_of_row = slot.astype(np.int64) * nk + inv  # (dst, key) segment id
+    order = np.argsort(seg_of_row, kind="stable")  # destination-major layout
+    pos = np.empty(len(keys), np.int32)
+    pos[order] = np.arange(len(keys), dtype=np.int32)
+    routed = partition_permute(jnp.asarray(pos),   # PART: one-hot permutation
+                               jnp.asarray(vals, dtype=jnp.float32),
+                               num_out=len(keys))
+    folded = segment_combine(                      # COMB: per-segment fold
+        jnp.asarray(seg_of_row[order], dtype=jnp.int32), routed,
+        num_segments=ndst * nk)
+    dense = np.asarray(folded, dtype=np.float64).reshape(ndst, nk, -1)
+    present = np.zeros((ndst, nk), bool)
+    present[slot, inv] = True
+    return [(uniq[present[d]], dense[d][present[d]]) for d in range(ndst)]
+
+
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
+
+def can_lower(cluster: LocalCluster, args: ShuffleArgs,
+              bufs: dict[int, Msgs]) -> bool:
+    """Cheap call-time decline checks (cluster/arg state the plan can't know)."""
+    if args.plan is None or args.template_id not in JAX_TEMPLATES:
+        return False
+    if args.stream is not None or args.recovery is not None:
+        return False
+    if (cluster.failed_workers or cluster.worker_delays
+            or cluster.fault_injections):
+        return False
+    if args.comb_fn is not None and args.comb_fn.name not in _JAX_COMBINERS:
+        return False
+    if _part_spec(args.part_fn) is None:
+        return False
+    widths = {m.width for m in bufs.values() if m.n}
+    if len(widths) > 1 or sum(m.n for m in bufs.values()) == 0:
+        return False
+    return True
+
+
+def try_run_jax(cluster: LocalCluster, args: ShuffleArgs,
+                bufs: dict[int, Msgs], manager=None) -> ShuffleResult | None:
+    """Replay ``args.plan`` as one jitted program; None = declined (the
+    service falls back to the vectorized executor)."""
+    if not can_lower(cluster, args, bufs):
+        return None
+    plan = args.plan
+    low = get_lowering(plan)
+    if low is None:
+        low = lower_plan(plan)
+        attach_lowering(plan, _DECLINED if low is None else low)
+    if low is _DECLINED or low is None:
+        return None
+    return _run_lowered(cluster, args, bufs, low, manager)
+
+
+def _run_lowered(cluster, args: ShuffleArgs, bufs: dict[int, Msgs],
+                 low: JaxLowering, manager) -> ShuffleResult:
+    from jax.experimental import enable_x64
+
+    plan = args.plan
+    topo = cluster.topology
+    ledger = cluster.ledger
+    srcs, dsts = list(args.srcs), list(args.dsts)
+    participants = sorted(set(srcs) | set(dsts))
+    width = next((m.width for m in bufs.values() if m.n), 1)
+    rowb = 8 + 8 * width                  # the wire format Msgs.nbytes charges
+    spec = _PlanSpec(
+        template=args.template_id,
+        comb=args.comb_fn.name if args.comb_fn is not None else None,
+        part=_part_spec(args.part_fn),
+        initial_comb=(args.template_id == "network_aware"
+                      and args.comb_fn is not None),
+        ns=len(srcs), ndst=len(dsts))
+
+    if manager is not None:
+        manager.get_template(args.template_id, wid=None)
+        for w in participants:
+            manager.record_start(w, args.shuffle_id, args.template_id,
+                                 tenant=args.tenant)
+    before = ledger.snapshot()
+    observed: list[tuple] = []
+
+    # ---- the compiled data plane ------------------------------------------
+    per_w = [bufs.get(w, Msgs.empty(width)) for w in srcs]
+    keys = np.concatenate([m.keys for m in per_w])
+    vals = np.concatenate([np.ascontiguousarray(m.vals) for m in per_w])
+    owner = np.concatenate([np.full(m.n, low.src_pos[w], np.int32)
+                            for w, m in zip(srcs, per_w)])
+    with enable_x64():
+        out = _replay()(spec, keys, vals, owner, low.gsize, low.slot_map,
+                        low.rank_map, low.active, low.global_rank)
+    (f_keys, f_vals, f_owner, f_alive,
+     lvl_moved, lvl_pre, lvl_post, gmoved) = (np.asarray(a) for a in out)
+
+    # ---- ledger replay: the vectorized executor's exact charge sequence ---
+    if spec.initial_comb:
+        for w, m in zip(srcs, per_w):     # network_aware local pre-combine
+            ledger.charge_combine(w, m.nbytes, tenant=args.tenant)
+    for li, ld in enumerate(plan.levels):
+        if not ld.eff_cost.beneficial:
+            continue
+        ledger.advance_epoch()            # the stage barrier (PLAN_STAGE)
+        staged = low.levels_staged[li]
+        for w, peers in staged:
+            wp = low.src_pos[w]
+            ledger.charge_transfers(
+                w,
+                np.fromiter((topo.crossing_level(w, n) for n in peers),
+                            dtype=np.int64, count=len(peers)),
+                np.fromiter(
+                    (int(lvl_moved[li, wp, low.src_pos[n]]) * rowb
+                     for n in peers), dtype=np.int64, count=len(peers)),
+                dsts=np.asarray(peers, dtype=np.int64), tenant=args.tenant)
+        for w, _peers in staged:
+            pre = int(lvl_pre[li, low.src_pos[w]]) * rowb
+            post = int(lvl_post[li, low.src_pos[w]]) * rowb
+            if args.comb_fn is not None:
+                ledger.charge_combine(w, pre, tenant=args.tenant)
+            observed.append((ld.level, pre, post))
+
+    if args.template_id in ("vanilla_push", "network_aware"):
+        for w in srcs:                    # push: the sender pays
+            wp = low.src_pos[w]
+            ledger.charge_transfers(
+                w,
+                np.fromiter((topo.crossing_level(w, d) for d in dsts),
+                            dtype=np.int64, count=len(dsts)),
+                gmoved[wp].astype(np.int64) * rowb,
+                dsts=np.asarray(dsts, dtype=np.int64), tenant=args.tenant)
+        fetch_order = {d: srcs for d in dsts}
+        charge_receiver = False
+    elif args.template_id == "vanilla_pull":
+        fetch_order = {d: srcs for d in dsts}
+        charge_receiver = True
+    else:                                 # coordinated: ring order, receiver pays
+        n = len(srcs)
+        fetch_order = {d: [srcs[(srcs.index(d) - t) % n] for t in range(n)]
+                       for d in dsts}
+        charge_receiver = True
+    for d in dsts:
+        dp = low.dst_pos[d]
+        order = fetch_order[d]
+        if charge_receiver:
+            ledger.charge_transfers(
+                d,
+                np.fromiter((topo.crossing_level(s, d) for s in order),
+                            dtype=np.int64, count=len(order)),
+                np.fromiter((int(gmoved[low.src_pos[s], dp]) * rowb
+                             for s in order), dtype=np.int64,
+                            count=len(order)),
+                dsts=np.full(len(order), d, dtype=np.int64),
+                tenant=args.tenant)
+        if args.comb_fn is not None:
+            ledger.charge_combine(d, int(gmoved[:, dp].sum()) * rowb,
+                                  tenant=args.tenant)
+    ledger.advance_epoch()                # shuffle completion is a barrier
+
+    out_bufs: dict[int, Msgs] = {}
+    for d in dsts:
+        mask = (f_owner == low.dst_pos[d]) & f_alive
+        out_bufs[d] = Msgs(f_keys[mask],
+                           f_vals[mask].reshape(-1, width))
+    if _KERNEL_PLANE and spec.comb == "sum":
+        # opt-in Pallas plane: same routing and key sets, payloads re-folded
+        # on the MXU kernels (float32 accumulation — see set_kernel_plane)
+        for d, (kk, vv) in zip(dsts,
+                               kernel_global_stage(args.part_fn, keys, vals,
+                                                   len(dsts))):
+            out_bufs[d] = Msgs(kk, vv.reshape(-1, width))
+    after = ledger.snapshot()
+    if manager is not None:
+        for w in participants:
+            manager.record_end(w, args.shuffle_id, args.template_id,
+                               tenant=args.tenant)
+    return ShuffleResult(
+        bufs=out_bufs,
+        decisions=list(plan.decisions),
+        stats=ledger.delta(before, after),
+        observed=aggregate_observed([observed]),
+        cached=True,
+        vectorized=False,
+        engine="jax",
+    )

@@ -497,3 +497,27 @@ class PlanCache:
         :meth:`has` for namespace-scoped membership)."""
         with self._lock:
             return any(key in ns.plans for ns in self._spaces.values())
+
+
+# ---------------------------------------------------------------------------
+# Executor lowerings
+# ---------------------------------------------------------------------------
+
+def attach_lowering(plan: CompiledPlan, lowering) -> None:
+    """Freeze an executor lowering (e.g. the jitted-replay routing tables of
+    :mod:`repro.core.jaxplan`) onto a cached plan.
+
+    The lowering is derived purely from the plan, so it shares the plan's
+    identity and lifetime: keyed by the same stats signature, evicted with
+    the same LRU entry, discarded with the plan on drift recompiles.  Frozen
+    dataclasses without ``slots`` still accept new attributes through
+    ``object.__setattr__`` — the value is a cache annotation, not plan state,
+    so the frozen contract (the key's immutability) is preserved.
+    """
+    object.__setattr__(plan, "_lowering", lowering)
+
+
+def get_lowering(plan: CompiledPlan):
+    """The lowering previously attached with :func:`attach_lowering`, or
+    None when the plan has not been lowered yet."""
+    return getattr(plan, "_lowering", None)

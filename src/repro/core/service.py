@@ -52,6 +52,11 @@ Execution modes (cluster default, overridable per tenant and per call):
 * ``"fresh"``   — paper-faithful: re-instantiate every call, never consult the
   cache (plans are still compiled and stored, so switching back to ``auto`` hits).
 
+The ``executor`` knob picks which data plane an ``"auto"`` cache hit replays
+on — ``"vectorized"`` (batched numpy, the default) or ``"jax"`` (one jitted
+``lax.scan`` program per plan, :mod:`repro.core.jaxplan`); plans the jax
+lowering declines fall back to vectorized, then threaded, byte-identically.
+
 Streaming modes pick the execution model (:mod:`repro.core.streaming`):
 
 * ``"off"``     — barrier shuffles (the paper's model): one synchronized
@@ -104,12 +109,18 @@ EXECUTION_MODES = ("auto", "threaded", "fresh")
 RESILIENCE_MODES = ("off", "detect", "recover")
 BALANCE_MODES = ("off", "auto")
 STREAMING_MODES = ("off", "auto")
+# Which replay data plane "auto" execution prefers on a cache hit:
+# "vectorized" = batched numpy; "jax" = the jitted lax.scan program of
+# :mod:`repro.core.jaxplan`, falling back to vectorized for plans the
+# lowering declines (triggered skew, streaming, fault state, exotic
+# part/comb fns).  The fresh/instantiation path is always threaded.
+EXECUTORS = ("vectorized", "jax")
 
 # The per-call / per-tenant / cluster-default knob stack.  Every knob here may
 # be set on the cluster (the fleet default), overridden at tenant registration
 # (the application's default), and overridden again on an individual call.
-_KNOBS = ("execution", "resilience", "balance", "skew_threshold", "streaming",
-          "chunk_bytes", "max_inflight", "max_retries")
+_KNOBS = ("execution", "executor", "resilience", "balance", "skew_threshold",
+          "streaming", "chunk_bytes", "max_inflight", "max_retries")
 
 # next_shuffle_id tags at most this many recent ids with their owning tenant
 # (shuffle_owner); older tags fall off — the journal keeps the full history.
@@ -143,6 +154,7 @@ def _check_knobs(knobs: dict) -> dict:
         if v is not None:
             out[k] = v
     for name, allowed in (("execution", EXECUTION_MODES),
+                          ("executor", EXECUTORS),
                           ("resilience", RESILIENCE_MODES),
                           ("balance", BALANCE_MODES),
                           ("streaming", STREAMING_MODES)):
@@ -189,6 +201,7 @@ class TenantClient:
                 part_fn: PartFn = HASH_PART, comb_fn: Combiner | None = None,
                 rate: float = 0.01, shuffle_id: int | None = None,
                 seed: int = 0, execution: str | None = None,
+                executor: str | None = None,
                 resilience: str | None = None, balance: str | None = None,
                 skew_threshold: float | None = None,
                 streaming: str | None = None, chunk_bytes: int | None = None,
@@ -197,10 +210,10 @@ class TenantClient:
         return self._cluster._shuffle(
             self, template_id, bufs, srcs, dsts, part_fn=part_fn,
             comb_fn=comb_fn, rate=rate, shuffle_id=shuffle_id, seed=seed,
-            execution=execution, resilience=resilience, balance=balance,
-            skew_threshold=skew_threshold, streaming=streaming,
-            chunk_bytes=chunk_bytes, max_inflight=max_inflight,
-            max_retries=max_retries)
+            execution=execution, executor=executor, resilience=resilience,
+            balance=balance, skew_threshold=skew_threshold,
+            streaming=streaming, chunk_bytes=chunk_bytes,
+            max_inflight=max_inflight, max_retries=max_retries)
 
     def open_stream(self, template_id: str, srcs: Sequence[int],
                     dsts: Sequence[int], *, part_fn: PartFn = HASH_PART,
@@ -281,7 +294,8 @@ class TeShuCluster:
                  journal_path: str | None = None,
                  replicas: Sequence[str] = (),
                  plan_cache: PlanCache | None = None,
-                 execution: str = "auto", resilience: str = "off",
+                 execution: str = "auto", executor: str = "vectorized",
+                 resilience: str = "off",
                  balance: str = "off",
                  skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
                  streaming: str = "off",
@@ -291,6 +305,7 @@ class TeShuCluster:
                  admission: str = "wfair",
                  admission_rate: float = 0.05):
         _check_mode("execution", execution, EXECUTION_MODES)
+        _check_mode("executor", executor, EXECUTORS)
         _check_mode("resilience", resilience, RESILIENCE_MODES)
         _check_mode("balance", balance, BALANCE_MODES)
         _check_mode("streaming", streaming, STREAMING_MODES)
@@ -300,6 +315,7 @@ class TeShuCluster:
         self.manager = ShuffleManager(journal_path=journal_path,
                                       replicas=replicas, plan_cache=plan_cache)
         self.execution = execution
+        self.executor = executor
         self.resilience = resilience
         self.balance = balance
         self.skew_threshold = skew_threshold
@@ -336,9 +352,9 @@ class TeShuCluster:
         ``quota`` bounds the tenant's private plan-cache namespace (entries;
         unset = the namespace inherits the cache's default capacity);
         ``priority`` is its scheduling weight.  Remaining keyword knobs
-        (``execution``, ``resilience``, ``balance``, ``skew_threshold``,
-        ``streaming``, ``chunk_bytes``, ``max_inflight``, ``max_retries``)
-        become the tenant's defaults.  Re-fetching an existing tenant with
+        (``execution``, ``executor``, ``resilience``, ``balance``,
+        ``skew_threshold``, ``streaming``, ``chunk_bytes``, ``max_inflight``,
+        ``max_retries``) become the tenant's defaults.  Re-fetching an existing tenant with
         explicit arguments updates them; omitted ones are kept.
         """
         # validate knobs BEFORE touching cluster state: a rejected call must
@@ -474,10 +490,13 @@ class TeShuCluster:
                  balance: str | None, skew_threshold: float | None,
                  streaming: str | None, chunk_bytes: int | None,
                  max_inflight: int | None,
-                 max_retries: int | None = None) -> ShuffleResult:
+                 max_retries: int | None = None,
+                 executor: str | None = None) -> ShuffleResult:
         tenant = client.tenant_id
         execution = _check_mode("execution", client.knob("execution", execution),
                                 EXECUTION_MODES)
+        executor = _check_mode("executor", client.knob("executor", executor),
+                               EXECUTORS)
         resilience = _check_mode("resilience",
                                  client.knob("resilience", resilience),
                                  RESILIENCE_MODES)
@@ -530,18 +549,28 @@ class TeShuCluster:
                        else chunk)
 
         if resilience == "off":
-            return self._run_plain(args, bufs, key, execution)
+            return self._run_plain(args, bufs, key, execution, executor)
         return self._run_resilient(args, bufs, key, execution, resilience,
                                    repaired,
-                                   client.knob("max_retries", max_retries))
+                                   client.knob("max_retries", max_retries),
+                                   executor)
 
     # ---- execution paths ------------------------------------------------------
     def _execute(self, args: ShuffleArgs, bufs: dict[int, Msgs],
-                 execution: str) -> ShuffleResult:
-        if args.plan is not None and execution == "auto" \
-                and can_vectorize(self.cluster, args):
-            return run_shuffle_vectorized(self.cluster, args, bufs,
-                                          manager=self.manager)
+                 execution: str, executor: str = "vectorized") -> ShuffleResult:
+        if args.plan is not None and execution == "auto":
+            if executor == "jax":
+                # the jitted data plane declines plans it cannot lower
+                # (returns None) — fall through to vectorized, then threaded:
+                # the same ladder every replay path descends
+                from .jaxplan import try_run_jax
+                res = try_run_jax(self.cluster, args, bufs,
+                                  manager=self.manager)
+                if res is not None:
+                    return res
+            if can_vectorize(self.cluster, args):
+                return run_shuffle_vectorized(self.cluster, args, bufs,
+                                              manager=self.manager)
         return run_shuffle(self.cluster, args, bufs, manager=self.manager)
 
     def _compile(self, args: ShuffleArgs, key: tuple, res: ShuffleResult) -> None:
@@ -561,12 +590,13 @@ class TeShuCluster:
             self.plan_cache.observe_loads(key, obs, tenant=args.tenant)
 
     def _run_plain(self, args: ShuffleArgs, bufs: dict[int, Msgs], key: tuple,
-                   execution: str) -> ShuffleResult:
+                   execution: str, executor: str = "vectorized"
+                   ) -> ShuffleResult:
         if args.plan is None:
             res = run_shuffle(self.cluster, args, bufs, manager=self.manager)
             self._compile(args, key, res)
             return res
-        res = self._execute(args, bufs, execution)
+        res = self._execute(args, bufs, execution, executor)
         # Drift check: measured reductions from this cached run vs the plan's
         # baseline; a drifted entry is dropped so the next call re-instantiates.
         self._observe(args, key, res)
@@ -574,7 +604,8 @@ class TeShuCluster:
 
     def _run_resilient(self, args: ShuffleArgs, bufs: dict[int, Msgs], key: tuple,
                        execution: str, resilience: str, repaired: bool,
-                       max_retries: int) -> ShuffleResult:
+                       max_retries: int, executor: str = "vectorized"
+                       ) -> ShuffleResult:
         sid = args.shuffle_id
         tenant = args.tenant
         participants = sorted(set(args.srcs) | set(args.dsts))
@@ -590,7 +621,7 @@ class TeShuCluster:
             for attempt in range(attempts):
                 args.recovery = rc
                 try:
-                    res = self._execute(args, bufs, execution)
+                    res = self._execute(args, bufs, execution, executor)
                     missing = set(args.dsts) - set(res.bufs)
                     if missing:
                         # a dst died without blocking anyone (e.g. pure
@@ -711,7 +742,8 @@ class TeShuService(TeShuCluster):
                  journal_path: str | None = None,
                  replicas: Sequence[str] = (),
                  plan_cache: PlanCache | None = None,
-                 execution: str = "auto", resilience: str = "off",
+                 execution: str = "auto", executor: str = "vectorized",
+                 resilience: str = "off",
                  balance: str = "off",
                  skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
                  streaming: str = "off",
@@ -720,7 +752,8 @@ class TeShuService(TeShuCluster):
                  max_retries: int = 2):
         super().__init__(topology, journal_path=journal_path, replicas=replicas,
                          plan_cache=plan_cache, execution=execution,
-                         resilience=resilience, balance=balance,
+                         executor=executor, resilience=resilience,
+                         balance=balance,
                          skew_threshold=skew_threshold, streaming=streaming,
                          chunk_bytes=chunk_bytes, max_inflight=max_inflight,
                          max_retries=max_retries)

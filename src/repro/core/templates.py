@@ -454,6 +454,7 @@ class ShuffleResult:
     attempts: int = 1                     # execution attempts (>1 => recovered)
     recovery: dict | None = None          # restart/resume/speculation details
     streamed: bool = False                # ran as chunk-pipelined sub-epochs?
+    engine: str = "threaded"              # which executor produced the bytes
 
 
 def aggregate_observed(per_worker: list[list[tuple]]) -> dict[str, float]:

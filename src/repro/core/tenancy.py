@@ -8,7 +8,11 @@ that is not execution:
 
 * :class:`TenantSpec` — identity + isolation/fairness knobs of one tenant:
   the plan-cache entry ``quota`` (its private LRU budget) and the scheduling
-  ``priority`` (its weight in cross-tenant coflow scheduling).
+  ``priority`` (its weight in cross-tenant coflow scheduling).  Execution
+  knobs (``execution``, ``executor``, ``resilience``, ...) are per-tenant
+  too, but live on the :class:`~repro.core.service.TenantClient` handle —
+  e.g. ``cluster.tenant("ml", executor="jax")`` pins an application to the
+  jitted replay data plane without touching the fleet default.
 * :class:`TenantRegistry` — the cluster's tenant table.  Tenants are created
   on first ``cluster.tenant(...)`` call and re-fetched idempotently; every
   journal record, ledger lane, and plan-cache namespace is keyed by the

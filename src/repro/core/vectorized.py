@@ -307,6 +307,7 @@ def run_shuffle_vectorized(
         observed=aggregate_observed([observed]),
         cached=True,
         vectorized=True,
+        engine="vectorized",
     )
 
 
@@ -574,4 +575,5 @@ def _run_streamed_vectorized(
         cached=True,
         vectorized=True,
         streamed=True,
+        engine="vectorized",
     )

@@ -47,16 +47,17 @@ def _combine_kernel(ids_ref, vals_ref, out_ref, acc_ref, *, num_segments: int,
 
 @functools.partial(jax.jit, static_argnames=(
     "num_segments", "block_n", "block_d", "interpret"))
-def segment_combine(
+def _segment_combine(
     seg_ids: jax.Array,    # [n] int32, -1 = drop
     vals: jax.Array,       # [n, d]
     *,
     num_segments: int,
-    block_n: int = DEFAULT_BLOCK_N,
-    block_d: int = DEFAULT_BLOCK_D,
-    interpret: bool = True,
+    block_n: int,
+    block_d: int,
+    interpret: bool,
 ) -> jax.Array:
-    """Sum ``vals`` rows into ``num_segments`` buckets by ``seg_ids`` (COMB for +)."""
+    """Jitted core; ``interpret`` is static — resolve it ONCE via the probe
+    in :func:`segment_combine` so repeated calls never retrace."""
     n, d = vals.shape
     assert seg_ids.shape == (n,)
     n_p = -(-n // block_n) * block_n
@@ -87,3 +88,27 @@ def segment_combine(
         interpret=interpret,
     )(ids2, vals)
     return out[:, :d]
+
+
+def segment_combine(
+    seg_ids: jax.Array,
+    vals: jax.Array,
+    *,
+    num_segments: int,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Sum ``vals`` rows into ``num_segments`` buckets by ``seg_ids`` (COMB for +).
+
+    ``interpret=None`` (the default) resolves through the process-wide
+    backend probe :func:`repro.kernels.ops.default_interpret` — compiled on
+    TPU, interpreted elsewhere — so callers neither retrace the static
+    ``interpret`` jit arg nor silently run interpreted on real hardware.
+    """
+    if interpret is None:
+        from .ops import default_interpret
+        interpret = default_interpret()
+    return _segment_combine(seg_ids, vals, num_segments=num_segments,
+                            block_n=block_n, block_d=block_d,
+                            interpret=interpret)

@@ -8,6 +8,8 @@ cost_analysis reflects the fused HLO; kernels are validated against refs in test
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from . import ref
@@ -22,40 +24,54 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """The ONE backend probe every kernel's ``interpret`` default resolves
+    through: compiled Pallas on TPU, interpret mode elsewhere.
+
+    ``interpret`` is a *static* jit argument on every kernel, so each
+    distinct value is a separate trace; probing once per process (lru_cache)
+    instead of per call-site guarantees all default-mode callers share one
+    trace per (shape, dtype) and never silently run interpreted on TPU.
+    Tests that pin ``interpret=True`` explicitly keep working — they simply
+    occupy their own cache entry.
+    """
+    return jax.default_backend() != "tpu"
+
+
 def attention(q, k, v, *, causal=True, scale=None, use_kernel=True):
     if use_kernel:
         return flash_attention(q, k, v, causal=causal, scale=scale,
-                               interpret=not on_tpu())
+                               interpret=default_interpret())
     return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
 
 
 def combine(seg_ids, vals, *, num_segments, use_kernel=True):
     if use_kernel:
-        return segment_combine(seg_ids, vals, num_segments=num_segments,
-                               interpret=not on_tpu())
+        return segment_combine(seg_ids, vals, num_segments=num_segments)
     return ref.segment_combine_ref(seg_ids, vals, num_segments=num_segments)
 
 
 def grouped_matmul(x, w, tile_group_ids, *, block_n=128, use_kernel=True):
     if use_kernel:
-        return gmm(x, w, tile_group_ids, block_n=block_n, interpret=not on_tpu())
+        return gmm(x, w, tile_group_ids, block_n=block_n,
+                   interpret=default_interpret())
     return ref.gmm_ref(x, w, tile_group_ids, block_n=block_n)
 
 
 def part(slots, vals, *, num_out, use_kernel=True):
     if use_kernel:
-        return partition_permute(slots, vals, num_out=num_out,
-                                 interpret=not on_tpu())
+        return partition_permute(slots, vals, num_out=num_out)
     return ref.partition_permute_ref(slots, vals, num_out=num_out)
 
 
 def decode_attention(q, k, v, valid_len, *, use_kernel=True):
     if use_kernel:
         return decode_attention_kernel(q, k, v, valid_len,
-                                       interpret=not on_tpu())
+                                       interpret=default_interpret())
     return ref.decode_attention_ref(q, k, v, valid_len)
 
 
 __all__ = ["attention", "combine", "grouped_matmul", "part", "decode_attention",
-           "route_and_pad", "on_tpu", "flash_attention", "segment_combine",
-           "gmm", "partition_permute"]
+           "route_and_pad", "on_tpu", "default_interpret", "flash_attention",
+           "segment_combine", "gmm", "partition_permute"]

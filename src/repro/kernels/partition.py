@@ -54,17 +54,18 @@ def _partition_kernel(slots_ref, vals_ref, out_ref, acc_ref, *, block_in: int,
 
 @functools.partial(jax.jit, static_argnames=(
     "num_out", "block_in", "block_out", "block_d", "interpret"))
-def partition_permute(
+def _partition_permute(
     slots: jax.Array,          # [n] int32 destination slot per row; -1 = drop
     vals: jax.Array,           # [n, d]
     *,
     num_out: int,
-    block_in: int = DEFAULT_BLOCK_IN,
-    block_out: int = DEFAULT_BLOCK_OUT,
-    block_d: int = DEFAULT_BLOCK_D,
-    interpret: bool = True,
+    block_in: int,
+    block_out: int,
+    block_d: int,
+    interpret: bool,
 ) -> jax.Array:
-    """Scatter rows of ``vals`` into a [num_out, d] buffer by ``slots`` (PART)."""
+    """Jitted core; ``interpret`` is static — resolve it ONCE via the probe
+    in :func:`partition_permute` so repeated calls never retrace."""
     n, d = vals.shape
     assert slots.shape == (n,)
     block_out = min(block_out, num_out)
@@ -96,3 +97,28 @@ def partition_permute(
         interpret=interpret,
     )(ids[:, None], vals)
     return out[:num_out, :d]
+
+
+def partition_permute(
+    slots: jax.Array,
+    vals: jax.Array,
+    *,
+    num_out: int,
+    block_in: int = DEFAULT_BLOCK_IN,
+    block_out: int = DEFAULT_BLOCK_OUT,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Scatter rows of ``vals`` into a [num_out, d] buffer by ``slots`` (PART).
+
+    ``interpret=None`` (the default) resolves through the process-wide
+    backend probe :func:`repro.kernels.ops.default_interpret` — compiled on
+    TPU, interpreted elsewhere — so callers neither retrace the static
+    ``interpret`` jit arg nor silently run interpreted on real hardware.
+    """
+    if interpret is None:
+        from .ops import default_interpret
+        interpret = default_interpret()
+    return _partition_permute(slots, vals, num_out=num_out, block_in=block_in,
+                              block_out=block_out, block_d=block_d,
+                              interpret=interpret)

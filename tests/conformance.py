@@ -1,0 +1,166 @@
+"""Shared executor-conformance harness (not a test module).
+
+One definition of the cross-executor byte-identity contract, used by
+``test_conformance.py`` (the full {threaded, vectorized, jax} x template x
+workload x {fresh, cache-hit} matrix), ``test_jaxplan.py`` (the jitted
+executor's own suite), and the streaming / skew / multitenant suites (which
+previously each carried their own copies of the topology, workload, copy,
+and byte-compare helpers).
+
+The contract these helpers express:
+
+* **Outputs** are compared *bit-identically* — ``assert_identical`` for
+  per-destination buffers in physical order, ``assert_sorted_identical``
+  when only the combined multiset is pinned (e.g. across a rebalance).
+* **Ledger stats** are compared exactly for every byte-denominated key and
+  for modelled time (all three executors charge the same transfers in the
+  same epochs); only the per-tenant *cost* lane is compared to within
+  float tolerance — it is a running float sum whose baseline includes the
+  fresh instantiation run, where thread scheduling permutes charge order
+  at the last ulp.
+"""
+import math
+
+import numpy as np
+
+from repro.core import Msgs, TeShuService, datacenter
+
+ALL_TEMPLATES = ("vanilla_push", "vanilla_pull", "coordinated", "bruck",
+                 "two_level", "network_aware")
+EXECUTORS = ("threaded", "vectorized", "jax")
+WORKLOADS = ("uniform", "zipf")
+WORKERS = list(range(8))
+
+# Templates the batched-numpy replay supports; the jitted replay supports the
+# same set (asserted against repro.core identities in test_conformance).
+VECTORIZED_TEMPLATES = frozenset(
+    {"vanilla_push", "vanilla_pull", "coordinated", "network_aware"})
+
+
+def make_topology(**kw):
+    """The 8-worker, 3-level conformance fabric (2 racks x 2 servers x 2)."""
+    kw.setdefault("oversubscription", 4.0)
+    return datacenter(2, 2, 2, **kw)
+
+
+def workers_for(template):
+    """two_level asserts a square worker grid (q*q == nworkers): it runs the
+    matrix on the 4-worker (q=2) subset; everything else on all 8."""
+    return WORKERS[:4] if template == "two_level" else WORKERS
+
+
+def zipf_keys(rng, n, key_space=64, alpha=1.2):
+    """Zipf(alpha)-distributed keys over [0, key_space) via inverse-CDF."""
+    ranks = np.arange(1, key_space + 1, dtype=np.float64)
+    w = ranks ** -alpha
+    cdf = np.cumsum(w) / np.sum(w)
+    return np.searchsorted(cdf, rng.random(n)).astype(np.int64)
+
+
+def make_bufs(workers, workload="uniform", n=300, key_space=64, width=2,
+              seed=7):
+    """Per-worker keyed buffers for one conformance workload."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for w in workers:
+        keys = (zipf_keys(rng, n, key_space) if workload == "zipf"
+                else rng.integers(0, key_space, n).astype(np.int64))
+        out[w] = Msgs(keys, rng.random((n, width)))
+    return out
+
+
+def copy_bufs(bufs):
+    """Defensive copy: shuffles consume buffers; every run gets fresh ones."""
+    return {w: m.copy() for w, m in bufs.items()}
+
+
+def service_for(executor, topo=None, **kw):
+    """A service pinned to one executor.  ``"threaded"`` = the reference
+    thread-per-worker path (still caching, so hits replay threaded);
+    ``"vectorized"``/``"jax"`` = ``auto`` execution with that replay plane."""
+    topo = make_topology() if topo is None else topo
+    if executor == "threaded":
+        return TeShuService(topo, execution="threaded", **kw)
+    return TeShuService(topo, execution="auto", executor=executor, **kw)
+
+
+# ---------------------------------------------------------------------------
+# comparisons
+# ---------------------------------------------------------------------------
+
+def assert_msgs_identical(a: Msgs, b: Msgs):
+    np.testing.assert_array_equal(a.keys, b.keys)
+    np.testing.assert_array_equal(a.vals, b.vals)     # bit-identical floats
+
+
+def assert_msgs_sorted_identical(a: Msgs, b: Msgs):
+    oa = np.argsort(a.keys, kind="stable")
+    ob = np.argsort(b.keys, kind="stable")
+    np.testing.assert_array_equal(a.keys[oa], b.keys[ob])
+    np.testing.assert_array_equal(a.vals[oa], b.vals[ob])
+
+
+def assert_identical(a: dict, b: dict):
+    """Per-destination buffers bit-identical in physical row order."""
+    assert set(a) == set(b)
+    for w in a:
+        assert_msgs_identical(a[w], b[w])
+
+
+def assert_sorted_identical(a: dict, b: dict):
+    """Bit-identical up to a stable per-destination key sort (for paths that
+    pin content but not arrival order, e.g. across a skew rebalance)."""
+    assert set(a) == set(b)
+    for w in a:
+        assert_msgs_sorted_identical(a[w], b[w])
+
+
+_EXACT_STATS = ("total_bytes", "sample_bytes", "bytes_per_level",
+                "recv_bytes_per_worker", "bytes_per_tenant")
+
+
+def assert_stats_identical(a: dict, b: dict):
+    """Ledger-delta equivalence across executors (see module docstring)."""
+    for k in _EXACT_STATS:
+        assert a[k] == b[k], (k, a[k], b[k])
+    # modelled time and per-tenant cost are deltas of running float sums whose
+    # baseline includes the threaded fresh run (ulp-order scheduling jitter)
+    assert math.isclose(a["modelled_time_s"], b["modelled_time_s"],
+                        rel_tol=1e-9, abs_tol=1e-18), \
+        (a["modelled_time_s"], b["modelled_time_s"])
+    ca, cb = a["cost_per_tenant"], b["cost_per_tenant"]
+    assert set(ca) == set(cb)
+    for t in ca:
+        assert math.isclose(ca[t], cb[t], rel_tol=1e-9, abs_tol=1e-18), \
+            (t, ca[t], cb[t])
+
+
+# ---------------------------------------------------------------------------
+# the matrix cell
+# ---------------------------------------------------------------------------
+
+def conformance_case(template, workload, executor, *, comb_fn=None, seed=7,
+                     **shuffle_kw):
+    """Run one matrix cell: a fresh instantiation plus a cache-hit replay on
+    a service pinned to ``executor``.  Returns ``(fresh, hit)`` results; the
+    caller compares them across executors."""
+    workers = workers_for(template)
+    bufs = make_bufs(workers, workload, seed=seed)
+    service = service_for(executor)
+    fresh = service.shuffle(template, copy_bufs(bufs), workers, workers,
+                            comb_fn=comb_fn, **shuffle_kw)
+    hit = service.shuffle(template, copy_bufs(bufs), workers, workers,
+                          comb_fn=comb_fn, **shuffle_kw)
+    return fresh, hit
+
+
+def expected_engine(template, executor):
+    """Which data plane a cache-hit replay must report for a matrix cell:
+    executors fall back down the jax -> vectorized -> threaded ladder for
+    templates their lowering does not cover."""
+    if executor == "jax" and template in VECTORIZED_TEMPLATES:
+        return "jax"
+    if executor in ("jax", "vectorized") \
+            and template in VECTORIZED_TEMPLATES:
+        return "vectorized"
+    return "threaded"

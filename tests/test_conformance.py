@@ -1,0 +1,111 @@
+"""The cross-executor conformance matrix (ISSUE 6 acceptance).
+
+One parametrized byte-identity sweep: {threaded, vectorized, jax} x all six
+templates x {uniform, Zipf(1.2)} x {fresh, cache-hit}.  For every cell the
+threaded fresh instantiation is the reference; every other executor's fresh
+run AND cache-hit replay must be bit-identical to it (keys and float64
+payloads), report the right engine/cached markers, and charge the ledger
+identically.  ``tests/conformance.py`` holds the shared harness.
+"""
+import numpy as np
+import pytest
+
+from conformance import (ALL_TEMPLATES, EXECUTORS, VECTORIZED_TEMPLATES,
+                         WORKLOADS, assert_identical, assert_stats_identical,
+                         conformance_case, copy_bufs, expected_engine,
+                         make_bufs, service_for, workers_for)
+from repro.core import MAX, MIN, SUM
+from repro.core.jaxplan import JAX_TEMPLATES
+from repro.core.vectorized import VECTORIZABLE
+
+
+def test_harness_template_sets_match_core():
+    """The harness's fallback expectations mirror the executors' own
+    support sets — if a template is ever promoted, this fails first."""
+    assert VECTORIZED_TEMPLATES == VECTORIZABLE == JAX_TEMPLATES
+    assert set(ALL_TEMPLATES) >= VECTORIZED_TEMPLATES
+
+
+@pytest.mark.parametrize("workload", WORKLOADS)
+@pytest.mark.parametrize("template", ALL_TEMPLATES)
+def test_executor_matrix_byte_identity(template, workload):
+    """The full matrix cell-by-cell: one reference, five conforming runs."""
+    results = {ex: conformance_case(template, workload, ex, comb_fn=SUM)
+               for ex in EXECUTORS}
+    ref_fresh, ref_hit = results["threaded"]
+    assert not ref_fresh.cached and ref_hit.cached
+    assert ref_fresh.engine == ref_hit.engine == "threaded"
+    assert_identical(ref_fresh.bufs, ref_hit.bufs)
+    for ex in EXECUTORS:
+        fresh, hit = results[ex]
+        # fresh instantiation is always the threaded reference path
+        assert not fresh.cached and fresh.engine == "threaded"
+        assert hit.cached
+        assert hit.engine == expected_engine(template, ex)
+        assert hit.vectorized == (hit.engine == "vectorized")
+        assert_identical(fresh.bufs, ref_fresh.bufs)
+        assert_identical(hit.bufs, ref_fresh.bufs)
+        assert_stats_identical(hit.stats, ref_hit.stats)
+
+
+@pytest.mark.parametrize("comb", [None, MIN, MAX], ids=["concat", "min", "max"])
+@pytest.mark.parametrize("template", sorted(VECTORIZED_TEMPLATES))
+def test_executor_matrix_combiners(template, comb):
+    """Replay planes agree for order-insensitive folds and for plain
+    concatenation (comb None) too, not just the order-sensitive SUM."""
+    ref = conformance_case(template, "uniform", "threaded", comb_fn=comb)[1]
+    for ex in ("vectorized", "jax"):
+        hit = conformance_case(template, "uniform", ex, comb_fn=comb)[1]
+        assert hit.engine == expected_engine(template, ex)
+        assert_identical(hit.bufs, ref.bufs)
+        assert_stats_identical(hit.stats, ref.stats)
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_disjoint_src_dst_sets(executor):
+    """src->dst re-sharding (dsts disjoint from srcs) conforms as well."""
+    workers = workers_for("vanilla_pull")
+    srcs, dsts = workers[:4], workers[4:]
+    bufs = make_bufs(srcs, "uniform")
+    ref_sv = service_for("threaded")
+    ref_sv.shuffle("vanilla_pull", copy_bufs(bufs), srcs, dsts, comb_fn=SUM)
+    ref = ref_sv.shuffle("vanilla_pull", copy_bufs(bufs), srcs, dsts,
+                         comb_fn=SUM)
+    sv = service_for(executor)
+    sv.shuffle("vanilla_pull", copy_bufs(bufs), srcs, dsts, comb_fn=SUM)
+    hit = sv.shuffle("vanilla_pull", copy_bufs(bufs), srcs, dsts, comb_fn=SUM)
+    assert hit.cached
+    assert hit.engine == expected_engine("vanilla_pull", executor)
+    assert_identical(hit.bufs, ref.bufs)
+    assert_stats_identical(hit.stats, ref.stats)
+
+
+def test_observed_ratios_conform():
+    """Drift signals (per-level reduction ratios) must not depend on the
+    replay plane, or executors would disagree about plan invalidation."""
+    for template in ("network_aware", "vanilla_push"):
+        ref = conformance_case(template, "zipf", "threaded", comb_fn=SUM)[1]
+        for ex in ("vectorized", "jax"):
+            hit = conformance_case(template, "zipf", ex, comb_fn=SUM)[1]
+            assert set(hit.observed) == set(ref.observed)
+            for lv, ratio in hit.observed.items():
+                assert ratio == pytest.approx(ref.observed[lv], rel=1e-12)
+
+
+def test_decisions_conform():
+    """Replays report the plan's frozen decisions identically everywhere."""
+    cells = {ex: conformance_case("network_aware", "uniform", ex, comb_fn=SUM)
+             for ex in EXECUTORS}
+    ref_levels = [(lv, ec.beneficial) for lv, ec in cells["threaded"][1].decisions]
+    for ex in EXECUTORS:
+        got = [(lv, ec.beneficial) for lv, ec in cells[ex][1].decisions]
+        assert got == ref_levels
+
+
+def test_zipf_workload_is_actually_skewed():
+    """Guard the workload generator: Zipf(1.2) must concentrate mass, or the
+    matrix's skew column degenerates into a second uniform column."""
+    bufs = make_bufs(workers_for("vanilla_push"), "zipf")
+    keys = np.concatenate([m.keys for m in bufs.values()])
+    top = np.bincount(keys).max()
+    assert top > 3 * keys.size / 64          # >3x the uniform expectation

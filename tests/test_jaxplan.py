@@ -1,0 +1,269 @@
+"""The jitted replay executor (ISSUE 6 tentpole).
+
+What the conformance matrix (test_conformance.py) does not already pin:
+
+* compilation economics — the whole replay is ONE rolled ``lax.scan``
+  program, so repeated hits, and even *different plans* with the same shape
+  signature, reuse a single trace (``replay_cache_size`` deltas);
+* the decline ladder — streaming, triggered skew, fault state, unsupported
+  templates, and exotic partFuncs all fall back (jax -> vectorized ->
+  threaded) with correct engine markers and no behavior change;
+* the executor knob stack — per-call > per-tenant > cluster resolution;
+* plan-lifetime lowering reuse (``plancache.attach_lowering``);
+* the opt-in Pallas kernel plane (PART via ``partition_permute``, COMB via
+  ``segment_combine``) against the bit-exact default plane.
+"""
+import numpy as np
+import pytest
+
+from conformance import (assert_identical, conformance_case, copy_bufs,
+                         make_bufs, make_topology, service_for, workers_for)
+from repro.core import (SUM, Msgs, PartFn, TeShuCluster, TeShuService,
+                        datacenter)
+from repro.core.jaxplan import (kernel_global_stage, lower_plan,
+                                replay_cache_size, set_kernel_plane,
+                                try_run_jax)
+from repro.core.plancache import get_lowering
+
+WORKERS = list(range(8))
+
+
+def _jax_service(**kw):
+    return service_for("jax", **kw)
+
+
+def _run_twice(sv, template, bufs, workers, **kw):
+    sv.shuffle(template, copy_bufs(bufs), workers, workers, **kw)
+    return sv.shuffle(template, copy_bufs(bufs), workers, workers, **kw)
+
+
+# ---------------------------------------------------------------------------
+# compilation: one rolled program
+# ---------------------------------------------------------------------------
+
+def test_one_trace_per_plan_shape():
+    """A plan replays through exactly one compiled program: the first hit
+    traces once, every later hit — and even a different service's plan with
+    the same spec/shape — reuses it."""
+    bufs = make_bufs(WORKERS, "uniform", n=311)       # shape unique to this test
+    sv = _jax_service()
+    sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS, comb_fn=SUM)
+    before = replay_cache_size()
+    r1 = sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                    comb_fn=SUM)
+    assert r1.engine == "jax"
+    assert replay_cache_size() == before + 1          # the one trace
+    for _ in range(3):
+        r = sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                       comb_fn=SUM)
+        assert r.engine == "jax"
+    assert replay_cache_size() == before + 1          # no retrace on replays
+    sv2 = _jax_service()                              # fresh service, new plan
+    r2 = _run_twice(sv2, "vanilla_push", bufs, WORKERS, comb_fn=SUM)
+    assert r2.engine == "jax"
+    assert replay_cache_size() == before + 1          # same spec+shape: reused
+
+
+def test_distinct_spec_is_a_new_trace():
+    """Changing the static half (template) compiles one more program."""
+    bufs = make_bufs(WORKERS, "uniform", n=313)
+    sv = _jax_service()
+    _run_twice(sv, "vanilla_push", bufs, WORKERS, comb_fn=SUM)
+    before = replay_cache_size()
+    r = _run_twice(sv, "coordinated", bufs, WORKERS, comb_fn=SUM)
+    assert r.engine == "jax"
+    assert replay_cache_size() == before + 1
+
+
+# ---------------------------------------------------------------------------
+# the decline ladder
+# ---------------------------------------------------------------------------
+
+def test_streaming_replay_falls_back_to_vectorized():
+    """A streamed plan replay is chunk-pipelined state the lowering does not
+    encode: the jax executor declines and the vectorized streamed replay
+    runs instead — byte-identical to a barrier reference."""
+    bufs = make_bufs(WORKERS, "uniform")
+    sv = TeShuService(make_topology(), executor="jax", streaming="auto")
+    hit = _run_twice(sv, "vanilla_push", bufs, WORKERS, comb_fn=SUM)
+    assert hit.cached and hit.streamed
+    assert hit.engine == "vectorized"
+    ref = _run_twice(service_for("threaded"), "vanilla_push", bufs, WORKERS,
+                     comb_fn=SUM)
+    assert_identical(hit.bufs, ref.bufs)
+
+
+def test_triggered_skew_falls_back_to_vectorized():
+    """A triggered rebalance rewrites PART into positional hot-key scatter —
+    decision state the lowering declines; the vectorized replay handles it."""
+    topo = datacenter(4, 2, 1)
+    bufs = make_bufs(WORKERS, "zipf", n=8000, key_space=500, width=1)
+    sv = TeShuService(topo, executor="jax")
+    sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+               comb_fn=SUM, balance="auto")
+    hit = sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                     comb_fn=SUM, balance="auto")
+    rebalance = dict(hit.decisions).get("rebalance")
+    assert rebalance is not None and rebalance.triggered  # else vacuous
+    assert hit.cached and hit.engine == "vectorized"
+
+
+def test_fault_state_falls_back_to_threaded():
+    """Any injected fault/straggler state needs the thread-level simulation:
+    both replay planes decline, the threaded executor still replays the plan."""
+    bufs = make_bufs(WORKERS, "uniform")
+    sv = _jax_service()
+    ref = _run_twice(sv, "vanilla_push", bufs, WORKERS, comb_fn=SUM)
+    assert ref.engine == "jax"
+    sv.delay_worker(3, 0.0)
+    hit = sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                     comb_fn=SUM)
+    assert hit.cached and hit.engine == "threaded"
+    assert_identical(hit.bufs, ref.bufs)
+
+
+def test_unsupported_template_falls_back_to_threaded():
+    """bruck / two_level interleave sequential SEND/RECV rounds: neither
+    replay plane lowers them; the plan still skips re-instantiation."""
+    for template in ("bruck", "two_level"):
+        workers = workers_for(template)
+        bufs = make_bufs(workers, "uniform")
+        sv = _jax_service()
+        hit = _run_twice(sv, template, bufs, workers, comb_fn=SUM)
+        assert hit.cached and hit.engine == "threaded"
+
+
+def test_exotic_part_fn_falls_back_to_vectorized():
+    """A partFunc outside the jnp registry (hash / range[k]) cannot be
+    replicated inside the jitted program — but the numpy replay runs it."""
+    mod = PartFn("mod", lambda keys, ndst: keys % ndst)
+    bufs = make_bufs(WORKERS, "uniform")
+    sv = _jax_service()
+    hit = _run_twice(sv, "vanilla_push", bufs, WORKERS, part_fn=mod,
+                     comb_fn=SUM)
+    assert hit.cached and hit.engine == "vectorized"
+
+
+# ---------------------------------------------------------------------------
+# knob resolution: per-call > per-tenant > cluster
+# ---------------------------------------------------------------------------
+
+def test_executor_knob_stack():
+    cluster = TeShuCluster(make_topology())           # fleet default: vectorized
+    ml = cluster.tenant("ml", executor="jax")
+    etl = cluster.tenant("etl")
+    bufs = make_bufs(WORKERS, "uniform")
+    assert _run_twice(ml, "vanilla_push", bufs, WORKERS,
+                      comb_fn=SUM).engine == "jax"
+    assert _run_twice(etl, "vanilla_push", bufs, WORKERS,
+                      comb_fn=SUM).engine == "vectorized"
+    # per-call overrides beat both tenant and cluster defaults
+    assert ml.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM, executor="vectorized"
+                      ).engine == "vectorized"
+    assert etl.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                       comb_fn=SUM, executor="jax").engine == "jax"
+
+
+def test_executor_knob_validation():
+    with pytest.raises(ValueError):
+        TeShuService(make_topology(), executor="cuda")
+    cluster = TeShuCluster(make_topology())
+    with pytest.raises(ValueError):
+        cluster.tenant("bad", executor="cuda")
+
+
+# ---------------------------------------------------------------------------
+# lowering lifetime
+# ---------------------------------------------------------------------------
+
+def test_lowering_is_attached_to_the_cached_plan():
+    """The routing tables are derived once and frozen onto the plan: later
+    hits reuse the same JaxLowering object (plan-cache lifetime, no rebuild)."""
+    bufs = make_bufs(WORKERS, "uniform")
+    sv = _jax_service()
+    hit = _run_twice(sv, "network_aware", bufs, WORKERS, comb_fn=SUM)
+    assert hit.engine == "jax"
+    (key, plan), = sv.plan_cache._spaces["default"].plans.items()
+    low = get_lowering(plan)
+    assert low is not None
+    assert low.gsize.shape[0] == len(plan.levels)
+    sv.shuffle("network_aware", copy_bufs(bufs), WORKERS, WORKERS, comb_fn=SUM)
+    assert get_lowering(plan) is low                  # reused, not rebuilt
+
+
+def test_lower_plan_declines_unsupported_shapes():
+    bufs = make_bufs(WORKERS, "uniform")
+    sv = service_for("threaded")
+    _run_twice(sv, "bruck", bufs, WORKERS, comb_fn=SUM)
+    (_, plan), = sv.plan_cache._spaces["default"].plans.items()
+    assert lower_plan(plan) is None
+
+
+# ---------------------------------------------------------------------------
+# the Pallas kernel plane
+# ---------------------------------------------------------------------------
+
+def test_kernel_plane_matches_exact_plane():
+    """With the kernel plane on, SUM replays route PART through
+    partition_permute and COMB through segment_combine: identical routing
+    (same keys per destination, same charges), float32-accumulated payloads."""
+    ref = conformance_case("vanilla_push", "uniform", "jax", comb_fn=SUM)[1]
+    prev = set_kernel_plane(True)
+    try:
+        hit = conformance_case("vanilla_push", "uniform", "jax",
+                               comb_fn=SUM)[1]
+    finally:
+        set_kernel_plane(prev)
+    assert hit.engine == "jax"
+    assert set(hit.bufs) == set(ref.bufs)
+    for d in ref.bufs:
+        np.testing.assert_array_equal(hit.bufs[d].keys, ref.bufs[d].keys)
+        np.testing.assert_allclose(hit.bufs[d].vals, ref.bufs[d].vals,
+                                   rtol=2e-5, atol=2e-5)
+    for k in ("total_bytes", "bytes_per_level", "recv_bytes_per_worker"):
+        assert hit.stats[k] == ref.stats[k]
+
+
+def test_kernel_global_stage_matches_numpy_fold():
+    """The fused kernel stage alone, against a plain numpy groupby oracle."""
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 37, 500).astype(np.int64)
+    vals = rng.standard_normal((500, 3))
+    from repro.core import HASH_PART
+    per_dst = kernel_global_stage(HASH_PART, keys, vals, 4)
+    assert len(per_dst) == 4
+    slots = HASH_PART.assign(keys, 4)
+    for d, (kk, vv) in enumerate(per_dst):
+        mask = slots == d
+        expect = {k: vals[mask & (keys == k)].sum(axis=0)
+                  for k in np.unique(keys[mask])}
+        np.testing.assert_array_equal(kk, sorted(expect))
+        for i, k in enumerate(kk):
+            np.testing.assert_allclose(vv[i], expect[k], rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# dtypes / direct-call contract
+# ---------------------------------------------------------------------------
+
+def test_output_dtypes_are_exact():
+    """x64 mode end-to-end: int64 keys, float64 payloads, bit-for-bit."""
+    bufs = make_bufs(WORKERS, "uniform")
+    hit = _run_twice(_jax_service(), "vanilla_pull", bufs, WORKERS,
+                     comb_fn=SUM)
+    assert hit.engine == "jax"
+    for m in hit.bufs.values():
+        assert m.keys.dtype == np.int64
+        assert m.vals.dtype == np.float64
+
+
+def test_try_run_jax_requires_a_plan():
+    """Direct-call contract: no plan (fresh instantiation) => decline."""
+    sv = _jax_service()
+    from repro.core import HASH_PART, ShuffleArgs
+    args = ShuffleArgs(template_id="vanilla_push", shuffle_id=1,
+                       srcs=tuple(WORKERS), dsts=tuple(WORKERS),
+                       part_fn=HASH_PART, comb_fn=SUM)
+    bufs = make_bufs(WORKERS, "uniform")
+    assert try_run_jax(sv.cluster, args, bufs) is None

@@ -167,3 +167,113 @@ def test_ops_dispatch_matches_refs():
     np.testing.assert_allclose(
         ops.attention(q, k, v), ops.attention(q, k, v, use_kernel=False),
         rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# PART/COMB property tests vs the numpy-oracle semantics
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 600), d=st.integers(1, 80), out=st.integers(1, 70),
+       drop_bias=st.integers(0, 2), seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_partition_permute_property(n, d, out, drop_bias, seed):
+    """PART invariants on arbitrary (ragged) shapes: -1 rows vanish, slot
+    collisions degrade to scatter-add, untargeted slots stay zero."""
+    rng = np.random.default_rng(seed)
+    # drop_bias skews the slot distribution toward -1 so the drop path is
+    # exercised hard, not just incidentally
+    slots = rng.integers(-1 - drop_bias * out, out, n).astype(np.int32)
+    slots[slots < 0] = -1
+    vals = rng.standard_normal((n, d)).astype(np.float32)
+    got = np.asarray(partition_permute(jnp.asarray(slots), jnp.asarray(vals),
+                                       num_out=out, interpret=True))
+    assert got.shape == (out, d)
+    for o in range(out):
+        expect = vals[slots == o].sum(axis=0) if (slots == o).any() \
+            else np.zeros(d, np.float32)
+        np.testing.assert_allclose(got[o], expect, rtol=2e-5, atol=2e-5)
+
+
+@given(n=st.integers(1, 600), d=st.integers(1, 80), segs=st.integers(1, 64),
+       seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_segment_combine_matches_bincount_oracle(n, d, segs, seed):
+    """COMB == per-segment numpy sum on arbitrary ragged shapes (block_n=256
+    and block_d=512 rarely divide these), with -1 rows dropped."""
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(-1, segs, n).astype(np.int32)
+    vals = rng.standard_normal((n, d)).astype(np.float32)
+    got = np.asarray(segment_combine(jnp.asarray(ids), jnp.asarray(vals),
+                                     num_segments=segs, interpret=True))
+    assert got.shape == (segs, d)
+    keep = ids >= 0
+    expect = np.zeros((segs, d), np.float32)
+    np.add.at(expect, ids[keep], vals[keep])
+    np.testing.assert_allclose(got, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_partition_collisions_equal_segment_combine():
+    """The same kernel duality the shuffle data plane leans on: PART with
+    colliding slots IS COMB — both kernels produce the same scatter-add."""
+    rng = np.random.default_rng(5)
+    slots = rng.integers(-1, 9, 400).astype(np.int32)
+    vals = rng.standard_normal((400, 33)).astype(np.float32)
+    via_part = partition_permute(jnp.asarray(slots), jnp.asarray(vals),
+                                 num_out=9, interpret=True)
+    via_comb = segment_combine(jnp.asarray(slots), jnp.asarray(vals),
+                               num_segments=9, interpret=True)
+    np.testing.assert_allclose(np.asarray(via_part), np.asarray(via_comb),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_accumulation_dtype_roundtrip(dtype):
+    """Inputs round-trip through the kernels' float32 accumulators: output
+    dtype matches input dtype, values match a float32-computed oracle."""
+    rng = np.random.default_rng(6)
+    ids = jnp.asarray(rng.integers(-1, 11, 300), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal((300, 40)), dtype)
+    out = segment_combine(ids, vals, num_segments=11, interpret=True)
+    assert out.dtype == dtype
+    expect = ref.segment_combine_ref(ids, vals, num_segments=11)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+    out2 = partition_permute(ids, vals, num_out=11, interpret=True)
+    assert out2.dtype == dtype
+
+
+# ---------------------------------------------------------------------------
+# the interpret jit-cache regression (kernels/ops.py backend probe)
+# ---------------------------------------------------------------------------
+
+def test_default_interpret_probe_is_cached_and_cpu_true():
+    assert ops.default_interpret() is (jax.default_backend() != "tpu")
+    assert ops.default_interpret() is ops.default_interpret()
+    assert ops.default_interpret.cache_info().currsize == 1
+
+
+def test_one_trace_per_shape_dtype_across_repeated_calls():
+    """The footgun this pins: ``interpret`` is a *static* jit arg, so mixing
+    per-call probes with explicit values used to retrace silently.  With the
+    defaults resolving through the single ops-level probe, N calls at one
+    (shape, dtype) compile exactly once, and a new dtype adds exactly one."""
+    from repro.kernels.combine import _segment_combine
+    from repro.kernels.partition import _partition_permute
+
+    rng = np.random.default_rng(8)
+    ids = jnp.asarray(rng.integers(-1, 7, 203), jnp.int32)   # shape unique here
+    vals32 = jnp.asarray(rng.standard_normal((203, 17)), jnp.float32)
+    segment_combine(ids, vals32, num_segments=7)
+    partition_permute(ids, vals32, num_out=7)
+    before_c = _segment_combine._cache_size()
+    before_p = _partition_permute._cache_size()
+    for _ in range(4):
+        segment_combine(ids, vals32, num_segments=7)
+        partition_permute(ids, vals32, num_out=7)
+    assert _segment_combine._cache_size() == before_c     # zero retraces
+    assert _partition_permute._cache_size() == before_p
+    vals16 = vals32.astype(jnp.bfloat16)                  # new dtype: one more
+    segment_combine(ids, vals16, num_segments=7)
+    partition_permute(ids, vals16, num_out=7)
+    assert _segment_combine._cache_size() == before_c + 1
+    assert _partition_permute._cache_size() == before_p + 1

@@ -20,6 +20,9 @@ import threading
 import numpy as np
 import pytest
 
+from conformance import (assert_msgs_identical as _exact_eq,
+                         assert_msgs_sorted_identical as _sorted_eq,
+                         copy_bufs as _copy, make_topology as _topo, make_bufs)
 from repro.core import (DEFAULT_TENANT, HASH_PART, SUM, Msgs, PlanCache,
                         ShuffleManager, ShuffleRecord, TeShuCluster,
                         TeShuService, TenantSpec, datacenter,
@@ -28,29 +31,9 @@ from repro.core import (DEFAULT_TENANT, HASH_PART, SUM, Msgs, PlanCache,
 FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
 
 
-def _topo():
-    return datacenter(2, 2, 2, oversubscription=4.0)      # 8 workers
-
-
 def _bufs(workers, n=300, keys=64, seed=0, width=1):
-    rng = np.random.default_rng(seed)
-    return {w: Msgs(rng.integers(0, keys, n), rng.random((n, width)))
-            for w in workers}
-
-
-def _copy(bufs):
-    return {w: m.copy() for w, m in bufs.items()}
-
-
-def _sorted_eq(a, b):
-    oa, ob = np.argsort(a.keys, kind="stable"), np.argsort(b.keys, kind="stable")
-    np.testing.assert_array_equal(a.keys[oa], b.keys[ob])
-    np.testing.assert_array_equal(a.vals[oa], b.vals[ob])
-
-
-def _exact_eq(a, b):
-    np.testing.assert_array_equal(a.keys, b.keys)
-    np.testing.assert_array_equal(a.vals, b.vals)
+    return make_bufs(workers, "uniform", n=n, key_space=keys, width=width,
+                     seed=seed)
 
 
 # ---------------------------------------------------------------------------

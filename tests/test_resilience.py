@@ -395,7 +395,7 @@ def test_checkpoints_cleared_on_unexpected_failure():
     svc = TeShuService(_topo(), resilience="recover")
     sid_seen = []
 
-    def boom(args, bufs, execution):
+    def boom(args, bufs, execution, executor="vectorized"):
         sid_seen.append(args.shuffle_id)
         svc.checkpoints.save(args.shuffle_id, 0, 0, "server", Msgs.empty())
         raise RuntimeError("user comb_fn exploded")

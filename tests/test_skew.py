@@ -12,6 +12,8 @@ surviving destinations.
 import numpy as np
 import pytest
 
+from conformance import WORKERS, assert_msgs_sorted_identical as _sorted_eq, \
+    copy_bufs as _copy, make_bufs, zipf_keys
 from repro.core import (HASH_PART, SUM, HeavyHitterSketch, Msgs, PlanCache,
                         TeShuService, datacenter, dst_load_imbalance,
                         local_skew_stats, merge_skew_stats, owner_merge_plan,
@@ -19,7 +21,6 @@ from repro.core import (HASH_PART, SUM, HeavyHitterSketch, Msgs, PlanCache,
                         stats_signature)
 
 TOPO = lambda: datacenter(4, 2, 1)          # 8 workers, server < rack hierarchy
-WORKERS = list(range(8))
 
 
 def zipf_bufs(nw=8, n_per=8000, keys=500, alpha=1.2, seed=0, identical=False):
@@ -27,33 +28,18 @@ def zipf_bufs(nw=8, n_per=8000, keys=500, alpha=1.2, seed=0, identical=False):
     same key multiset (participant-subset signatures then match exactly,
     which is what the lost-worker repair path keys on)."""
     rng = np.random.default_rng(seed)
-    ranks = np.arange(1, keys + 1, dtype=np.float64)
-    w = ranks ** -alpha
-    cdf = np.cumsum(w) / np.sum(w)
     if identical:
-        ks = np.searchsorted(cdf, rng.random(n_per)).astype(np.int64)
+        ks = zipf_keys(rng, n_per, keys, alpha)
         return {wid: Msgs(ks.copy(), rng.random((n_per, 1)))
                 for wid in range(nw)}
-    return {wid: Msgs(np.searchsorted(cdf, rng.random(n_per)).astype(np.int64),
+    return {wid: Msgs(zipf_keys(rng, n_per, keys, alpha),
                       rng.random((n_per, 1)))
             for wid in range(nw)}
 
 
 def uniform_bufs(nw=8, n_per=8000, keys=5000, seed=0):
-    rng = np.random.default_rng(seed)
-    return {wid: Msgs(rng.integers(0, keys, n_per).astype(np.int64),
-                      rng.random((n_per, 1)))
-            for wid in range(nw)}
-
-
-def _copy(bufs):
-    return {w: m.copy() for w, m in bufs.items()}
-
-
-def _sorted_eq(a: Msgs, b: Msgs):
-    oa, ob = np.argsort(a.keys), np.argsort(b.keys)
-    np.testing.assert_array_equal(a.keys[oa], b.keys[ob])
-    np.testing.assert_array_equal(a.vals[oa], b.vals[ob])   # bit-identical
+    return make_bufs(range(nw), "uniform", n=n_per, key_space=keys,
+                     width=1, seed=seed)
 
 
 def _check_totals(inputs: dict[int, Msgs], res):

@@ -11,6 +11,8 @@ time beats the barrier on data-dominated multi-stage workloads.
 import numpy as np
 import pytest
 
+from conformance import WORKERS, assert_identical as _assert_identical, \
+    copy_bufs as _copy, make_bufs, make_topology
 from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
 
 from repro.core import (MIN, SUM, CheckpointStore, ChunkPlan, CostLedger, Msgs,
@@ -22,30 +24,18 @@ from repro.core.skew import (HOT_KEY_FRACTION, MAX_SKETCH_CAPACITY,
                              MIN_SKETCH_CAPACITY, HeavyHitterSketch)
 
 STREAMABLE = ("vanilla_push", "vanilla_pull", "coordinated", "network_aware")
-WORKERS = list(range(8))
 
 
 def _topo(**kw):
+    # this suite models a fatter combine engine on a thinner core fabric
     kw.setdefault("oversubscription", 10.0)
     kw.setdefault("combine_bytes_per_s", 64e9)
-    return datacenter(2, 2, 2, **kw)
+    return make_topology(**kw)
 
 
 def _bufs(n=400, key_space=64, width=2, seed=7):
-    rng = np.random.default_rng(seed)
-    return {w: Msgs(rng.integers(0, key_space, n), rng.random((n, width)))
-            for w in WORKERS}
-
-
-def _copy(bufs):
-    return {w: m.copy() for w, m in bufs.items()}
-
-
-def _assert_identical(a: dict, b: dict):
-    assert set(a) == set(b)
-    for w in a:
-        np.testing.assert_array_equal(a[w].keys, b[w].keys)
-        np.testing.assert_array_equal(a[w].vals, b[w].vals)   # bit-identical
+    return make_bufs(WORKERS, "uniform", n=n, key_space=key_space,
+                     width=width, seed=seed)
 
 
 # ---------------------------------------------------------------------------
