@@ -450,12 +450,104 @@ def jaxplan_profile(iters: int = 4, *, smoke: bool = False,
     return out
 
 
+def observability_profile(iters: int = 4, *, smoke: bool = False,
+                          json_path: str | None = None) -> CsvOut:
+    """Telemetry-plane overhead: tracing off vs on, both replay executors.
+
+    The same (template, topology, workload) key runs as plan-cache hits with
+    the flight recorder disabled (the no-op tracer singleton) and enabled,
+    for ``executor="vectorized"`` and ``executor="jax"``.  The contract the
+    CI smoke job gates on:
+
+    * tracing-off runs record **zero** spans (the disabled path allocates no
+      span objects and reads no clocks);
+    * modelled time is identical with tracing on and off (telemetry must
+      never perturb the cost model);
+    * the tracing-on wall-time overhead is <= 5% of the *modelled* per-run
+      cost — the paper-scale quantity a shuffle is budgeted by — for both
+      executors.
+
+    When ``json_path`` is set the rows are written machine-readable
+    (``BENCH_obs.json``): one row per (executor, tracing).
+    """
+    out = CsvOut("observability_profile",
+                 ["executor", "tracing", "engine", "spans_per_run",
+                  "modelled_ms", "wall_ms", "overhead_ms", "overhead_frac"])
+    # a paper-testbed-like *slow* fabric: modelled cost is pure arithmetic, so
+    # low bandwidths give a realistic multi-ms per-shuffle budget to gate the
+    # (wall-clock) telemetry overhead against, without inflating wall time
+    topo = datacenter(4, 2, 2, intra_server_bw=3.125e7, intra_rack_bw=3.125e6,
+                      oversubscription=8.0, combine_bytes_per_s=3.125e7)
+    nw = topo.num_workers
+    workers = list(range(nw))
+    n_per = 8_000 if smoke else 20_000
+    loops = 9 if smoke else max(iters, 9)
+    base = zipf_shards(nw, n_per, 5_000, alpha=0.0, seed=17)
+    rows = []
+    for executor in ("vectorized", "jax"):
+        # ONE service per executor: tracing is toggled on the warmed instance,
+        # so both measurements share the same plan cache and jit traces and
+        # the off/on delta is the telemetry plane alone, not instance noise
+        svc = TeShuService(topo, executor=executor)
+
+        def one():
+            bufs = {w: m.copy() for w, m in base.items()}
+            t0 = time.perf_counter()
+            res = svc.shuffle("vanilla_push", bufs, workers, workers,
+                              comb_fn=SUM, rate=0.01)
+            return time.perf_counter() - t0, res
+
+        one()                    # warm: compile + cache the plan (miss)
+        one()                    # warm: first hit (pays the jit trace on jax)
+        # interleave off/on runs (toggling the tracer between runs) so
+        # thermal/GC drift lands on both arms equally; best-of filters the
+        # rest — the off/on delta is the telemetry plane alone
+        runs: dict[bool, list] = {False: [], True: []}
+        spans: dict[bool, int] = {False: 0, True: 0}
+        modelled: dict[bool, float] = {}
+        for tracing in (False, True):
+            svc.enable_tracing() if tracing else svc.disable_tracing()
+            svc.reset_stats()
+            spans_before = len(svc.spans())
+            runs[tracing].append(one())
+            spans[tracing] = len(svc.spans()) - spans_before
+            modelled[tracing] = svc.stats()["modelled_time_s"]
+        for _ in range(loops - 1):
+            for tracing in (False, True):
+                svc.enable_tracing() if tracing else svc.disable_tracing()
+                runs[tracing].append(one())
+        walls = {tr: float(min(t for t, _ in rr)) for tr, rr in runs.items()}
+        for tracing in (False, True):
+            _, last = runs[tracing][-1]
+            rows.append(dict(
+                executor=executor, tracing=tracing, engine=last.engine,
+                spans_per_run=spans[tracing],
+                modelled_ms=modelled[tracing] * 1e3,
+                wall_ms=walls[tracing] * 1e3,
+                overhead_ms=0.0, overhead_frac=0.0))
+        on = rows[-1]
+        overhead_s = max(0.0, walls[True] - walls[False])
+        on["overhead_ms"] = overhead_s * 1e3
+        on["overhead_frac"] = overhead_s * 1e3 / max(on["modelled_ms"], 1e-12)
+    for row in rows:
+        out.add(**row)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"meta": {"bench": "observability_profile", "workers": nw,
+                                "n_per_worker": n_per, "iters": loops,
+                                "template": "vanilla_push", "smoke": smoke},
+                       "rows": rows}, f, indent=2)
+            f.write("\n")
+    return out
+
+
 def run() -> list[CsvOut]:
     return [table3(), template_profile(), plan_cache_profile(),
             skew_profile(json_path="BENCH_skew.json"),
             streaming_profile(json_path="BENCH_streaming.json"),
             multitenant_profile(json_path="BENCH_multitenant.json"),
-            jaxplan_profile(json_path="BENCH_jaxplan.json")]
+            jaxplan_profile(json_path="BENCH_jaxplan.json"),
+            observability_profile(json_path="BENCH_obs.json")]
 
 
 if __name__ == "__main__":
@@ -468,6 +560,8 @@ if __name__ == "__main__":
                     help="run only the multi-tenant scheduling benchmark")
     ap.add_argument("--jaxplan-only", action="store_true",
                     help="run only the jitted plan-replay benchmark")
+    ap.add_argument("--obs-only", action="store_true",
+                    help="run only the telemetry-overhead benchmark")
     ap.add_argument("--smoke", action="store_true",
                     help="small-scale run (CI)")
     ap.add_argument("--skew-json", default="BENCH_skew.json",
@@ -478,6 +572,8 @@ if __name__ == "__main__":
                     help="path for the machine-readable multitenant output")
     ap.add_argument("--jaxplan-json", default="BENCH_jaxplan.json",
                     help="path for the machine-readable jaxplan output")
+    ap.add_argument("--obs-json", default="BENCH_obs.json",
+                    help="path for the machine-readable telemetry output")
     args = ap.parse_args()
     if args.skew_only:
         skew_profile(smoke=args.smoke, json_path=args.skew_json).emit()
@@ -490,6 +586,9 @@ if __name__ == "__main__":
     elif args.jaxplan_only:
         jaxplan_profile(smoke=args.smoke,
                         json_path=args.jaxplan_json).emit()
+    elif args.obs_only:
+        observability_profile(smoke=args.smoke,
+                              json_path=args.obs_json).emit()
     else:
         for t in run():
             t.emit()

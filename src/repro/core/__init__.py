@@ -3,11 +3,13 @@ from .adaptive import (EffCost, compute_eff_cost, eff_cost_from_ratio,
                        reduction_drift)
 from .coscheduler import (POLICIES, CoflowRequest, CoflowScheduler,
                           ScheduleEntry)
-from .manager import ShuffleManager, ShuffleRecord
+from .manager import JOURNAL_VERSION, ShuffleManager, ShuffleRecord
 from .messages import (COMBINERS, HASH_PART, MAX, MIN, SUM, Combiner, Msgs, PartFn,
                        partition, range_part, splitmix64)
+from .obs import (FlightRecorder, MetricsRegistry, NULL_TRACER, NullTracer,
+                  Observability, ShuffleReport, build_report)
 from .plancache import (CompiledPlan, LevelDecision, PlanCache, compile_plan,
-                        plan_key, skew_bucket, stats_signature)
+                        key_diff, plan_key, skew_bucket, stats_signature)
 from .primitives import (CostLedger, EndOfStream, FaultInjection, LocalCluster,
                          ShuffleAborted, ShuffleArgs, WorkerContext)
 from .resilience import (CheckpointStore, FailureDetector, FailureReport,
@@ -36,7 +38,7 @@ from .topology import (NetworkTopology, Level, datacenter, degrade_links, fat_tr
                        from_mesh_axes, multipod_dcn, roofline_times, dominant_term,
                        roofline_fraction)
 from .vectorized import (can_vectorize, combine_msgs, run_shuffle_vectorized,
-                         set_comb_backend)
+                         set_comb_backend, vectorize_decline)
 
 __all__ = [
     "EffCost", "compute_eff_cost", "eff_cost_from_ratio", "reduction_drift",
@@ -66,20 +68,24 @@ __all__ = [
     "NetworkTopology", "Level", "datacenter", "degrade_links", "fat_tree",
     "from_mesh_axes", "multipod_dcn", "roofline_times", "dominant_term",
     "roofline_fraction", "can_vectorize", "combine_msgs",
-    "run_shuffle_vectorized", "set_comb_backend",
+    "run_shuffle_vectorized", "set_comb_backend", "vectorize_decline",
     "CheckpointStore", "FailureDetector", "FailureReport", "RecoveryContext",
     "RecoveryCoordinator", "SpeculationPolicy", "SpeculativeTask",
     "StreamCheckpoint",
     "consistent_resume_stages", "repair_plan", "try_repair",
-    "JAX_TEMPLATES", "JaxLowering", "lower_plan", "try_run_jax",
-    "replay_cache_size", "set_kernel_plane",
+    "JOURNAL_VERSION", "key_diff",
+    "FlightRecorder", "MetricsRegistry", "NULL_TRACER", "NullTracer",
+    "Observability", "ShuffleReport", "build_report",
+    "JAX_TEMPLATES", "JaxLowering", "decline_reason", "lower_plan",
+    "plan_decline", "try_run_jax", "replay_cache_size", "set_kernel_plane",
 ]
 
 # The jitted executor is resolved lazily: importing repro.core must not pull
 # in jax (the threaded/vectorized paths are pure numpy), and the service
 # itself only imports repro.core.jaxplan on the first executor="jax" call.
-_JAXPLAN_EXPORTS = ("JAX_TEMPLATES", "JaxLowering", "lower_plan",
-                    "try_run_jax", "replay_cache_size", "set_kernel_plane")
+_JAXPLAN_EXPORTS = ("JAX_TEMPLATES", "JaxLowering", "decline_reason",
+                    "lower_plan", "plan_decline", "try_run_jax",
+                    "replay_cache_size", "set_kernel_plane")
 
 
 def __getattr__(name: str):

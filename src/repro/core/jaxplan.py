@@ -401,24 +401,68 @@ def kernel_global_stage(part_fn, keys: np.ndarray, vals: np.ndarray,
 # The executor
 # ---------------------------------------------------------------------------
 
+def _call_decline(cluster: LocalCluster, args: ShuffleArgs,
+                  bufs: dict[int, Msgs]) -> str | None:
+    """Call-time decline cause (cluster/arg state the plan can't know), or
+    ``None`` when the invocation itself is lowerable.  Reason codes are
+    machine-checkable and surface through ``ShuffleResult.fallback_reason``
+    / ``cluster.explain()``."""
+    if args.plan is None:
+        return "no_plan"
+    if args.template_id not in JAX_TEMPLATES:
+        return "template_not_lowerable"
+    if args.stream is not None:
+        return "streamed_replay"
+    if args.recovery is not None:
+        return "recovery_context"
+    if (cluster.failed_workers or cluster.worker_delays
+            or cluster.fault_injections):
+        return "cluster_fault_state"
+    if args.comb_fn is not None and args.comb_fn.name not in _JAX_COMBINERS:
+        return "unsupported_combiner"
+    if _part_spec(args.part_fn) is None:
+        return "unsupported_part_fn"
+    widths = {m.width for m in bufs.values() if m.n}
+    if len(widths) > 1:
+        return "mixed_widths"
+    if sum(m.n for m in bufs.values()) == 0:
+        return "empty_workload"
+    return None
+
+
+def plan_decline(plan: CompiledPlan) -> str | None:
+    """Plan-shape decline cause (mirrors :func:`lower_plan`'s refusals), or
+    ``None`` when the plan shape is lowerable."""
+    if plan.template_id not in JAX_TEMPLATES:
+        return "template_not_lowerable"
+    if plan.skew is not None and plan.skew.triggered:
+        return "skew_rebalance_triggered"
+    srcs = list(plan.srcs)
+    if plan.template_id == "coordinated" and any(d not in srcs
+                                                 for d in plan.dsts):
+        return "ring_mismatch"
+    src_set = set(srcs)
+    for ld in plan.levels:
+        for w in srcs:
+            if any(n not in src_set for n in ld.nbrs.get(w, (w,))):
+                return "routing_off_srcs"   # a repaired plan routing off-srcs
+    return None
+
+
+def decline_reason(cluster: LocalCluster, args: ShuffleArgs,
+                   bufs: dict[int, Msgs]) -> str | None:
+    """Why :func:`try_run_jax` would decline this invocation (``None`` when
+    it would run): the call-time cause if any, else the plan-shape cause."""
+    reason = _call_decline(cluster, args, bufs)
+    if reason is not None:
+        return reason
+    return plan_decline(args.plan)
+
+
 def can_lower(cluster: LocalCluster, args: ShuffleArgs,
               bufs: dict[int, Msgs]) -> bool:
     """Cheap call-time decline checks (cluster/arg state the plan can't know)."""
-    if args.plan is None or args.template_id not in JAX_TEMPLATES:
-        return False
-    if args.stream is not None or args.recovery is not None:
-        return False
-    if (cluster.failed_workers or cluster.worker_delays
-            or cluster.fault_injections):
-        return False
-    if args.comb_fn is not None and args.comb_fn.name not in _JAX_COMBINERS:
-        return False
-    if _part_spec(args.part_fn) is None:
-        return False
-    widths = {m.width for m in bufs.values() if m.n}
-    if len(widths) > 1 or sum(m.n for m in bufs.values()) == 0:
-        return False
-    return True
+    return _call_decline(cluster, args, bufs) is None
 
 
 def try_run_jax(cluster: LocalCluster, args: ShuffleArgs,
@@ -430,11 +474,24 @@ def try_run_jax(cluster: LocalCluster, args: ShuffleArgs,
     plan = args.plan
     low = get_lowering(plan)
     if low is None:
-        low = lower_plan(plan)
+        tracer = cluster.obs.tracer
+        if tracer.enabled:
+            with tracer.span("lower", shuffle_id=args.shuffle_id,
+                             tenant=args.tenant,
+                             template=args.template_id) as sp:
+                low = lower_plan(plan)
+                sp.set(declined=low is None)
+        else:
+            low = lower_plan(plan)
         attach_lowering(plan, _DECLINED if low is None else low)
     if low is _DECLINED or low is None:
         return None
-    return _run_lowered(cluster, args, bufs, low, manager)
+    tracer = cluster.obs.tracer
+    if not tracer.enabled:
+        return _run_lowered(cluster, args, bufs, low, manager)
+    with tracer.span("exec", shuffle_id=args.shuffle_id, tenant=args.tenant,
+                     engine="jax", template=args.template_id):
+        return _run_lowered(cluster, args, bufs, low, manager)
 
 
 def _run_lowered(cluster, args: ShuffleArgs, bufs: dict[int, Msgs],
@@ -470,9 +527,16 @@ def _run_lowered(cluster, args: ShuffleArgs, bufs: dict[int, Msgs],
     vals = np.concatenate([np.ascontiguousarray(m.vals) for m in per_w])
     owner = np.concatenate([np.full(m.n, low.src_pos[w], np.int32)
                             for w, m in zip(srcs, per_w)])
+    tracer = cluster.obs.tracer
+    jit_sp = tracer.span(
+        "jit_replay", shuffle_id=args.shuffle_id, tenant=args.tenant,
+        rows=int(keys.shape[0]), traces_before=replay_cache_size(),
+    ) if tracer.enabled else None
     with enable_x64():
         out = _replay()(spec, keys, vals, owner, low.gsize, low.slot_map,
                         low.rank_map, low.active, low.global_rank)
+    if jit_sp is not None:
+        jit_sp.end(traces_after=replay_cache_size())
     (f_keys, f_vals, f_owner, f_alive,
      lvl_moved, lvl_pre, lvl_post, gmoved) = (np.asarray(a) for a in out)
 

@@ -30,6 +30,13 @@ from .plancache import PlanCache
 from .tenancy import DEFAULT_TENANT
 from .templates import TEMPLATES, ShuffleTemplate
 
+# Journal schema version, written as a compact ``"v"`` field on every line.
+# Version history: 0 (implicit) = the seed format and its additive extensions
+# (stage/attempt/info/tenant, all defaulted on read); 1 = the first version
+# that stamps itself.  The reader is tolerant both ways: lines without ``v``
+# replay as version 0, and unknown fields from future versions are ignored.
+JOURNAL_VERSION = 1
+
 
 @dataclasses.dataclass
 class ShuffleRecord:
@@ -56,6 +63,7 @@ class ShuffleRecord:
     attempt: int = 0
     info: dict | None = None
     tenant: str = DEFAULT_TENANT
+    version: int = JOURNAL_VERSION   # journal schema version (the "v" field)
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -67,11 +75,21 @@ class ShuffleRecord:
             del d["attempt"]
         if self.tenant == DEFAULT_TENANT:
             del d["tenant"]         # single-tenant journals keep the seed format
+        d["v"] = d.pop("version")
         return json.dumps(d)
 
     @staticmethod
     def from_json(line: str) -> "ShuffleRecord":
-        return ShuffleRecord(**json.loads(line))
+        """Tolerant reader: ``v`` defaults to 0 (pre-version journals), and
+        fields this version does not know are dropped rather than rejected —
+        a journal written by a newer schema still replays the records it
+        shares with this one."""
+        d = json.loads(line)
+        version = d.pop("v", 0)
+        known = {f.name for f in dataclasses.fields(ShuffleRecord)}
+        rec = ShuffleRecord(**{k: v for k, v in d.items() if k in known})
+        rec.version = version
+        return rec
 
 
 class ShuffleManager:

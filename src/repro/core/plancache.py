@@ -167,6 +167,30 @@ def plan_key(template_id: str, topology: NetworkTopology,
     return (template_id, topology.fingerprint(), tuple(srcs), tuple(dsts), signature)
 
 
+# Positional names of the plan-key and stats-signature components, for the
+# explainability surface: a cache miss is diagnosed by diffing the missed key
+# against its closest cached relative and naming the components that diverged.
+# Must track plan_key()/stats_signature() ordering.
+KEY_COMPONENTS = ("template", "topology", "srcs", "dsts", "signature")
+SIG_COMPONENTS = ("part_fn", "comb_fn", "rate", "balance", "skew_threshold",
+                  "widths", "key_bucket", "skew_bucket", "stream", "counts")
+
+
+def key_diff(a: tuple, b: tuple) -> list[str]:
+    """Names of the plan-key components on which ``a`` and ``b`` diverge;
+    signature components are reported as ``signature.<component>``."""
+    out = []
+    for name, xa, xb in zip(KEY_COMPONENTS, a, b):
+        if xa == xb:
+            continue
+        if name != "signature":
+            out.append(name)
+            continue
+        out.extend(f"signature.{sig}"
+                   for sig, sa, sb in zip(SIG_COMPONENTS, xa, xb) if sa != sb)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Compiled plans
 # ---------------------------------------------------------------------------
@@ -282,16 +306,31 @@ _STATS_KEYS = ("hits", "misses", "invalidations", "refreshes", "evictions",
                "repairs")
 
 
+# How many recently-invalidated keys a namespace remembers, with the cause —
+# the explainability surface uses them to say "this miss is the invalidation
+# you triggered last call", not just "miss".
+_INVALIDATION_MEMORY = 512
+
+
 class _Namespace:
     """One tenant's private plan store: its own LRU order, budget, counters."""
 
-    __slots__ = ("plans", "hits_by_key", "capacity", "stats")
+    __slots__ = ("plans", "hits_by_key", "capacity", "stats", "invalidated")
 
     def __init__(self, capacity: int):
         self.plans: OrderedDict[tuple, CompiledPlan] = OrderedDict()
         self.hits_by_key: dict[tuple, int] = {}
         self.capacity = capacity
         self.stats = dict.fromkeys(_STATS_KEYS, 0)
+        # key -> why it was dropped ("reduction_drift" | "load_drift" |
+        # "refresh" | "explicit"), bounded FIFO
+        self.invalidated: OrderedDict[tuple, str] = OrderedDict()
+
+    def note_invalidated(self, key: tuple, kind: str) -> None:
+        self.invalidated[key] = kind
+        self.invalidated.move_to_end(key)
+        while len(self.invalidated) > _INVALIDATION_MEMORY:
+            self.invalidated.popitem(last=False)
 
 
 class PlanCache:
@@ -324,6 +363,7 @@ class PlanCache:
         self.refresh_every = refresh_every          # 0 = never force re-instantiation
         self._spaces: dict[str, _Namespace] = {}
         self._lock = threading.Lock()
+        self._metrics = None
 
     def _space(self, tenant: str) -> _Namespace:
         ns = self._spaces.get(tenant)
@@ -358,6 +398,7 @@ class PlanCache:
                 # no drift observations) get re-evaluated from fresh samples.
                 del ns.plans[key]
                 del ns.hits_by_key[key]
+                ns.note_invalidated(key, "refresh")
                 ns.stats["refreshes"] += 1
                 ns.stats["misses"] += 1
                 return None
@@ -373,6 +414,7 @@ class PlanCache:
             if repaired:
                 ns.stats["repairs"] += 1
             ns.plans[key] = plan
+            ns.invalidated.pop(key, None)   # re-compiled: the drop is history
             ns.plans.move_to_end(key)
             ns.hits_by_key.setdefault(key, 0)
             while len(ns.plans) > ns.capacity:
@@ -389,12 +431,17 @@ class PlanCache:
         with self._lock:
             return list(self._space(tenant).plans.items())
 
-    def invalidate(self, key: tuple, tenant: str = DEFAULT_TENANT) -> bool:
+    def invalidate(self, key: tuple, tenant: str = DEFAULT_TENANT,
+                   kind: str = "explicit") -> bool:
+        """Drop one entry; ``kind`` records *why* (drift observers pass
+        ``"reduction_drift"``/``"load_drift"``) so a subsequent miss on the
+        same key can be explained as this invalidation."""
         with self._lock:
             ns = self._space(tenant)
             if key in ns.plans:
                 del ns.plans[key]
                 ns.hits_by_key.pop(key, None)
+                ns.note_invalidated(key, kind)
                 ns.stats["invalidations"] += 1
                 return True
             return False
@@ -431,7 +478,7 @@ class PlanCache:
             ld = plan.level(level_name)
             if ld is not None and reduction_drift(ld.baseline_r, r_obs,
                                                   tolerance=self.drift_tolerance):
-                return self.invalidate(key, tenant)
+                return self.invalidate(key, tenant, kind="reduction_drift")
         return False
 
     def observe_loads(self, key: tuple, observed_imbalance: float,
@@ -452,8 +499,59 @@ class PlanCache:
             return False
         if abs(plan.baseline_imbalance - observed_imbalance) \
                 > self.skew_drift_tolerance:
-            return self.invalidate(key, tenant)
+            return self.invalidate(key, tenant, kind="load_drift")
         return False
+
+    # ---- explainability ------------------------------------------------------
+    def explain_miss(self, key: tuple, tenant: str = DEFAULT_TENANT) -> dict:
+        """Why would ``get(key, tenant)`` miss *right now*?  Read-only (no
+        counter or LRU effects).
+
+        Returns ``{"reason": code, "diff": [component names], "invalidated":
+        kind-or-None}``.  Reasons: ``"invalidated_<kind>"`` when the exact key
+        was recently dropped (drift, refresh, explicit) and not re-compiled;
+        ``"cold"`` when the namespace holds no plan for this template at all;
+        ``"key_mismatch"`` otherwise, with ``diff`` naming the components on
+        which the closest cached candidate (fewest diverging components, same
+        template preferred) differs — e.g. ``["signature.counts"]`` for a
+        workload whose per-worker message counts left their log2 buckets.
+        """
+        with self._lock:
+            ns = self._spaces.get(tenant)
+            if ns is None:
+                return {"reason": "cold", "diff": [], "invalidated": None}
+            dropped = ns.invalidated.get(key)
+            candidates = list(ns.plans)
+        if dropped is not None:
+            return {"reason": f"invalidated_{dropped}", "diff": [],
+                    "invalidated": dropped}
+        same_template = [k for k in candidates if k[0] == key[0]]
+        pool = same_template or candidates
+        if not pool:
+            return {"reason": "cold", "diff": [], "invalidated": None}
+        diff = min((key_diff(key, k) for k in pool), key=len)
+        return {"reason": "key_mismatch", "diff": diff, "invalidated": None}
+
+    # ---- metrics plumbing ----------------------------------------------------
+    def bind_metrics(self, registry) -> None:
+        """Publish this cache through a metrics registry (satellite of the
+        telemetry plane): a collector samples :meth:`stats` at snapshot time,
+        so the registry's ``teshu_plancache_*`` series *read* the same
+        counters ``stats()`` reports — one source, no drift between the two
+        surfaces.  ``registry`` is any object with ``register_collector``."""
+        self._metrics = registry
+        registry.register_collector(self._collect_metrics)
+
+    def _collect_metrics(self):
+        stats = self.stats()
+        out = []
+        for t, s in stats.get("tenants", {}).items():
+            for k in _STATS_KEYS:
+                out.append((f"teshu_plancache_{k}", {"tenant": t}, s[k]))
+            out.append(("teshu_plancache_size", {"tenant": t}, s["size"]))
+            out.append(("teshu_plancache_capacity", {"tenant": t},
+                        s["capacity"]))
+        return out
 
     # ---- introspection -------------------------------------------------------
     def stats(self, tenant: str | None = None) -> dict:

@@ -23,6 +23,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .messages import Combiner, Msgs, PartFn, partition
+from .obs import Observability
 from .sampling import partition_aware_sample, sample_with_fallback
 from .skew import (DEFAULT_SKEW_THRESHOLD, LocalSkewStats, merge_skew_stats,
                    plan_rebalance)
@@ -429,6 +430,9 @@ class LocalCluster:
         self.rpc_timeout = rpc_timeout      # RECV/FETCH wait bound
         self.run_timeout = run_timeout      # whole-cluster run bound
         self.ledger = CostLedger(topology)
+        # the telemetry plane: a metrics registry (always on) + a span tracer
+        # (the shared no-op until the service's tracing knob enables it)
+        self.obs = Observability()
         # NOT defaultdicts: two threads hitting a missing key concurrently would
         # each run the factory and use *different* objects (defaultdict.__missing__
         # does not re-check after the factory call, which can release the GIL), so
@@ -953,6 +957,11 @@ class WorkerContext:
                   else sample.nbytes)
         self.cluster.ledger.charge_transfer(self.wid, level, nbytes, sample=True,
                                             tenant=self.args.tenant)
+        tracer = self.cluster.obs.tracer
+        if tracer.enabled:
+            tracer.point("sampling", shuffle_id=self.args.shuffle_id,
+                         tenant=self.args.tenant, wid=self.wid, tag=tag,
+                         sample_bytes=nbytes)
         try:                     # stage-scoped when the tag names a level (the
             n = self._stage_participants(self.topology.level_index(tag))
         except KeyError:         # adaptive template's use); else every src
@@ -983,6 +992,11 @@ class WorkerContext:
         self.cluster.ledger.charge_transfer(self.wid, level, stats.nbytes,
                                             sample=True,
                                             tenant=self.args.tenant)
+        tracer = self.cluster.obs.tracer
+        if tracer.enabled:
+            tracer.point("skew_sampling", shuffle_id=self.args.shuffle_id,
+                         tenant=self.args.tenant, wid=self.wid,
+                         sketch_bytes=stats.nbytes)
         rv = self.cluster.rendezvous((self.args.shuffle_id, "skew"),
                                      len(participants))
 

@@ -145,7 +145,8 @@ def _signature_shrinks_to(big_sig: tuple, small_sig: tuple) -> bool:
 
 def try_repair(cache: PlanCache, key: tuple, topology: NetworkTopology,
                part_fn: PartFn | None = None,
-               tenant: str = DEFAULT_TENANT) -> CompiledPlan | None:
+               tenant: str = DEFAULT_TENANT,
+               tracer=None) -> CompiledPlan | None:
     """On a cache miss, try to derive the missing plan from a cached relative.
 
     ``key`` is the (missed) full plan key ``(template, fingerprint, srcs,
@@ -159,6 +160,8 @@ def try_repair(cache: PlanCache, key: tuple, topology: NetworkTopology,
     ``repairs`` counter increments.
     """
     template_id, fingerprint, srcs, dsts, signature = key
+    sp = tracer.span("plan_repair", tenant=tenant, template=template_id) \
+        if tracer is not None and tracer.enabled else None
     for cand_key, plan in reversed(cache.scan(tenant)):  # MRU candidates first
         c_template, c_fp, c_srcs, c_dsts, c_sig = cand_key
         if c_template != template_id:
@@ -173,10 +176,15 @@ def try_repair(cache: PlanCache, key: tuple, topology: NetworkTopology,
         else:
             continue
         try:
-            repaired, _ = repair_plan(plan, key, topology, part_fn=part_fn,
-                                      **kwargs)
+            repaired, levels = repair_plan(plan, key, topology,
+                                           part_fn=part_fn, **kwargs)
         except ValueError:
             continue
         cache.put(key, repaired, repaired=True, tenant=tenant)
+        if sp is not None:
+            sp.end(outcome="repaired", levels=list(levels),
+                   case=("lost_worker" if kwargs else "degraded_topology"))
         return repaired
+    if sp is not None:
+        sp.end(outcome="no_candidate")
     return None

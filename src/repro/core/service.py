@@ -84,7 +84,9 @@ Resilience modes gate the :mod:`repro.core.resilience` pipeline:
 from __future__ import annotations
 
 import itertools
+import sys
 import threading
+import time
 from collections import OrderedDict
 from typing import Sequence
 
@@ -93,6 +95,7 @@ import numpy as np
 from .coscheduler import POLICIES, CoflowRequest, CoflowScheduler
 from .manager import ShuffleManager
 from .messages import HASH_PART, Combiner, Msgs, PartFn
+from .obs import ShuffleReport, build_report
 from .plancache import PlanCache, compile_plan, plan_key, stats_signature
 from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs
 from .resilience import (CheckpointStore, FailureDetector, RecoveryCoordinator,
@@ -103,7 +106,7 @@ from .streaming import (DEFAULT_CHUNK_BYTES, DEFAULT_MAX_INFLIGHT, ChunkPlan,
 from .tenancy import DEFAULT_TENANT, AdmissionQueue, TenantRegistry, TenantSpec
 from .templates import ShuffleResult, run_shuffle
 from .topology import NetworkTopology
-from .vectorized import can_vectorize, run_shuffle_vectorized
+from .vectorized import run_shuffle_vectorized, vectorize_decline
 
 EXECUTION_MODES = ("auto", "threaded", "fresh")
 RESILIENCE_MODES = ("off", "detect", "recover")
@@ -303,7 +306,9 @@ class TeShuCluster:
                  max_inflight: int = DEFAULT_MAX_INFLIGHT,
                  max_retries: int = 2,
                  admission: str = "wfair",
-                 admission_rate: float = 0.05):
+                 admission_rate: float = 0.05,
+                 tracing: bool = False,
+                 span_capacity: int = 8192):
         _check_mode("execution", execution, EXECUTION_MODES)
         _check_mode("executor", executor, EXECUTORS)
         _check_mode("resilience", resilience, RESILIENCE_MODES)
@@ -342,6 +347,37 @@ class TeShuCluster:
         self._owner: "OrderedDict[int, str]" = OrderedDict()
         self._owner_lock = threading.Lock()
         self._last_schedule: dict | None = None
+        # ---- telemetry plane -------------------------------------------------
+        # Metrics are always on (counters are cheap); the span tracer starts
+        # as the no-op singleton unless tracing=True (or enable_tracing()).
+        self.obs = self.cluster.obs
+        if tracing:
+            self.obs.enable_tracing(span_capacity)
+        self.plan_cache.bind_metrics(self.obs.metrics)
+        self.obs.metrics.register_collector(self._collect_gauges)
+        m = self.obs.metrics
+        self._m_shuffles = m.counter(
+            "teshu_shuffles_total", "Completed shuffles by tenant/template/engine")
+        self._m_fallbacks = m.counter(
+            "teshu_fallbacks_total", "Executor declines by tenant/engine/reason")
+        self._m_cache_lookups = m.counter(
+            "teshu_cache_lookups_total", "Plan-cache lookups by tenant/outcome")
+        self._m_drift = m.counter(
+            "teshu_drift_invalidations_total",
+            "Plan invalidations from observed drift, by tenant/kind")
+        self._m_recovery_attempts = m.counter(
+            "teshu_recovery_attempts_total", "Recovery retry attempts by tenant")
+        self._m_restart_workers = m.histogram(
+            "teshu_recovery_restart_workers",
+            "Restart-set size per recovery attempt",
+            buckets=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0))
+        self._m_admission_wait = m.histogram(
+            "teshu_admission_wait_seconds",
+            "Queue wait from submit() to execution in a run_pending() pass")
+        # per-shuffle decision log (the always-on substrate of explain()),
+        # bounded like the owner-tag table
+        self._reports: "OrderedDict[int, dict]" = OrderedDict()
+        self._reports_lock = threading.Lock()
 
     # ---- tenants --------------------------------------------------------------
     def tenant(self, tenant_id: str = DEFAULT_TENANT, *,
@@ -396,6 +432,72 @@ class TeShuCluster:
     @property
     def plan_cache(self) -> PlanCache:
         return self.manager.plan_cache
+
+    # ---- telemetry -------------------------------------------------------------
+    def _collect_gauges(self):
+        """Registry collector: gauges read from their canonical sources at
+        snapshot time (ledger lanes, tracer occupancy, jit trace count) —
+        never dual-written, so they can't drift from the sources."""
+        snap = self.cluster.ledger.snapshot()
+        out = [("teshu_modelled_time_seconds", {}, float(snap["modelled_time_s"])),
+               ("teshu_bytes_total", {}, float(snap["total_bytes"]))]
+        for t, b in snap.get("bytes_per_tenant", {}).items():
+            out.append(("teshu_bytes_per_tenant", {"tenant": t}, float(b)))
+        for lvl, b in snap.get("bytes_per_level", {}).items():
+            out.append(("teshu_bytes_per_level", {"level": str(lvl)}, float(b)))
+        tracer = self.obs.tracer
+        if tracer.enabled:
+            out.append(("teshu_spans_recorded_total", {},
+                        float(tracer.recorded_total)))
+            out.append(("teshu_spans_dropped_total", {}, float(tracer.dropped)))
+        # read the jit trace count only if jaxplan was already imported —
+        # metrics must not be the thing that pulls jax in
+        jx = sys.modules.get("repro.core.jaxplan")
+        if jx is not None:
+            out.append(("teshu_jax_replay_traces", {},
+                        float(jx.replay_cache_size())))
+        return out
+
+    def _note(self, shuffle_id: int, **kv) -> None:
+        """Merge facts into the shuffle's decision-log entry (bounded FIFO)."""
+        with self._reports_lock:
+            rep = self._reports.get(shuffle_id)
+            if rep is None:
+                rep = self._reports[shuffle_id] = {}
+                while len(self._reports) > _OWNER_TAG_CAPACITY:
+                    self._reports.popitem(last=False)
+            rep.update(kv)
+
+    def _report_for(self, shuffle_id: int) -> dict | None:
+        with self._reports_lock:
+            rep = self._reports.get(shuffle_id)
+            return dict(rep) if rep is not None else None
+
+    def metrics(self) -> dict:
+        """One snapshot of every metric family (counters + collector gauges)."""
+        return self.obs.metrics.snapshot()
+
+    def metrics_text(self) -> str:
+        """The same snapshot in Prometheus text exposition format."""
+        return self.obs.metrics.to_prometheus()
+
+    def explain(self, shuffle_id: int) -> ShuffleReport:
+        """Why did this shuffle fall back / miss the cache / rebalance /
+        get drift-invalidated — see :class:`repro.core.obs.ShuffleReport`."""
+        return build_report(self, shuffle_id)
+
+    def spans(self, shuffle_id: int | None = None) -> list[dict]:
+        return self.obs.tracer.spans(shuffle_id)
+
+    def export_spans(self, path: str) -> int:
+        """Dump the flight recorder to JSONL; returns the span count."""
+        return self.obs.tracer.export_jsonl(path)
+
+    def enable_tracing(self, capacity: int = 8192) -> None:
+        self.obs.enable_tracing(capacity)
+
+    def disable_tracing(self) -> None:
+        self.obs.disable_tracing()
 
     # ---- admission / cross-tenant scheduling ----------------------------------
     def pending(self) -> int:
@@ -452,9 +554,15 @@ class TeShuCluster:
         results: dict[int, ShuffleResult] = {}
         failures: dict[int, str] = {}
         ccts: dict[tuple[str, str], float] = {}
+        tracer = self.obs.tracer
         for e in entries:
             for s in by_coflow.get(e.coflow_id, ()):
                 client = self._clients[s.tenant]
+                wait = max(0.0, time.monotonic() - s.ts) if s.ts else 0.0
+                self._m_admission_wait.observe(wait, tenant=s.tenant)
+                if tracer.enabled:
+                    tracer.point("admission_pass", tenant=s.tenant,
+                                 ticket=s.ticket, stage=s.stage, wait_s=wait)
                 try:
                     results[s.ticket] = client.shuffle(
                         s.template_id, s.bufs, s.srcs, s.dsts, **s.kwargs)
@@ -532,46 +640,119 @@ class TeShuCluster:
                                        balance=balance,
                                        skew_threshold=args.skew_threshold,
                                        streaming=streaming, stream=chunk))
-        plan = (self.plan_cache.get(key, tenant) if execution != "fresh"
-                else None)
-        repaired = False
-        if plan is None and execution != "fresh" and resilience != "off":
-            # no plan for this exact scenario — maybe a healthy-topology (or
-            # full-worker-set) relative exists that repair can adapt (within
-            # this tenant's namespace only)
-            plan = try_repair(self.plan_cache, key, self.topology,
-                              part_fn=part_fn, tenant=tenant)
-            repaired = plan is not None
-        args.plan = plan
-        # a cached plan replays the chunking policy it froze; a fresh streamed
-        # run uses the resolved knobs (and freezes them at compile time)
-        args.stream = (plan.stream if plan is not None and plan.stream is not None
-                       else chunk)
+        tracer = self.obs.tracer
+        # the root span: a no-op _NULL_SPAN when tracing is off, a real
+        # context-managed span (children nest via the thread-local stack) when on
+        with tracer.span("shuffle", shuffle_id=args.shuffle_id, tenant=tenant,
+                         template=template_id, execution=execution,
+                         executor=executor) as root:
+            # ---- plan lookup (+ cache explainability) -----------------------
+            lk = tracer.span("plan_lookup", shuffle_id=args.shuffle_id,
+                             tenant=tenant) if tracer.enabled else None
+            if execution == "fresh":
+                plan = None
+                cache_info = {"outcome": "bypass", "reason": "execution_fresh"}
+            else:
+                plan = self.plan_cache.get(key, tenant)
+                cache_info = {"outcome": "hit"} if plan is not None else None
+            repaired = False
+            if plan is None and execution != "fresh" and resilience != "off":
+                # no plan for this exact scenario — maybe a healthy-topology
+                # (or full-worker-set) relative exists that repair can adapt
+                # (within this tenant's namespace only)
+                plan = try_repair(self.plan_cache, key, self.topology,
+                                  part_fn=part_fn, tenant=tenant,
+                                  tracer=tracer)
+                repaired = plan is not None
+                if repaired:
+                    cache_info = {"outcome": "repaired"}
+            if cache_info is None:
+                cache_info = dict(self.plan_cache.explain_miss(key, tenant),
+                                  outcome="miss")
+            self._m_cache_lookups.inc(tenant=tenant,
+                                      outcome=cache_info["outcome"])
+            if lk is not None:
+                lk.end(outcome=cache_info["outcome"],
+                       reason=cache_info.get("reason"))
+            self._note(args.shuffle_id, tenant=tenant, template=template_id,
+                       execution=execution, requested_executor=executor,
+                       cache=cache_info)
+            args.plan = plan
+            # a cached plan replays the chunking policy it froze; a fresh
+            # streamed run uses the resolved knobs (frozen at compile time)
+            args.stream = (plan.stream
+                           if plan is not None and plan.stream is not None
+                           else chunk)
 
-        if resilience == "off":
-            return self._run_plain(args, bufs, key, execution, executor)
-        return self._run_resilient(args, bufs, key, execution, resilience,
-                                   repaired,
-                                   client.knob("max_retries", max_retries),
-                                   executor)
+            try:
+                if resilience == "off":
+                    res = self._run_plain(args, bufs, key, execution, executor)
+                else:
+                    res = self._run_resilient(
+                        args, bufs, key, execution, resilience, repaired,
+                        client.knob("max_retries", max_retries), executor)
+            except Exception as exc:
+                self._note(args.shuffle_id, status="failed",
+                           error=f"{type(exc).__name__}: {exc}")
+                raise
+            # ---- success notes + metrics ------------------------------------
+            skew_info = None
+            for d in res.decisions:
+                if (isinstance(d, tuple) and len(d) == 2
+                        and d[0] == "rebalance" and d[1] is not None):
+                    dec = d[1]
+                    skew_info = {"triggered": dec.triggered,
+                                 "splits": len(dec.splits),
+                                 "est_imbalance": float(dec.est_imbalance),
+                                 "threshold": float(dec.threshold)}
+            self._note(args.shuffle_id, status="ok", engine=res.engine,
+                       fallback_reason=res.fallback_reason,
+                       attempts=res.attempts, streamed=res.streamed,
+                       skew=skew_info)
+            self._m_shuffles.inc(tenant=tenant, template=template_id,
+                                 engine=res.engine)
+            root.set(engine=res.engine, attempts=res.attempts,
+                     cache=cache_info["outcome"])
+            return res
 
     # ---- execution paths ------------------------------------------------------
     def _execute(self, args: ShuffleArgs, bufs: dict[int, Msgs],
                  execution: str, executor: str = "vectorized") -> ShuffleResult:
+        fallbacks: list[dict] = []
+        res = None
         if args.plan is not None and execution == "auto":
             if executor == "jax":
                 # the jitted data plane declines plans it cannot lower
                 # (returns None) — fall through to vectorized, then threaded:
-                # the same ladder every replay path descends
-                from .jaxplan import try_run_jax
+                # the same ladder every replay path descends, but now each
+                # rung's decline reason is kept for explain()/metrics
+                from .jaxplan import decline_reason, try_run_jax
                 res = try_run_jax(self.cluster, args, bufs,
                                   manager=self.manager)
-                if res is not None:
-                    return res
-            if can_vectorize(self.cluster, args):
-                return run_shuffle_vectorized(self.cluster, args, bufs,
-                                              manager=self.manager)
-        return run_shuffle(self.cluster, args, bufs, manager=self.manager)
+                if res is None:
+                    fallbacks.append({
+                        "engine": "jax",
+                        "reason": decline_reason(self.cluster, args, bufs)
+                        or "declined"})
+            if res is None:
+                vreason = vectorize_decline(self.cluster, args)
+                if vreason is None:
+                    res = run_shuffle_vectorized(self.cluster, args, bufs,
+                                                 manager=self.manager)
+                else:
+                    fallbacks.append({"engine": "vectorized",
+                                      "reason": vreason})
+        if res is None:
+            res = run_shuffle(self.cluster, args, bufs, manager=self.manager)
+        if fallbacks:
+            # the *requested* engine's decline code; the full chain goes to
+            # the decision log (cluster.explain shows every rung)
+            res.fallback_reason = fallbacks[0]["reason"]
+            for fb in fallbacks:
+                self._m_fallbacks.inc(tenant=args.tenant, engine=fb["engine"],
+                                      reason=fb["reason"])
+            self._note(args.shuffle_id, fallbacks=fallbacks)
+        return res
 
     def _compile(self, args: ShuffleArgs, key: tuple, res: ShuffleResult) -> None:
         self.plan_cache.put(key, compile_plan(
@@ -584,10 +765,22 @@ class TeShuCluster:
         """Feed drift signals from a cached run: per-level reduction ratios,
         and — for skew-instantiated plans — the measured destination load
         imbalance vs the baseline the plan froze."""
-        self.plan_cache.observe(key, res.observed, tenant=args.tenant)
+        if self.plan_cache.observe(key, res.observed, tenant=args.tenant):
+            self._drift_noted(args, {"kind": "reduction",
+                                     "observed": dict(res.observed)})
         obs = dst_load_imbalance(res.stats, args.dsts)
-        if obs is not None:
-            self.plan_cache.observe_loads(key, obs, tenant=args.tenant)
+        if obs is not None and self.plan_cache.observe_loads(
+                key, obs, tenant=args.tenant):
+            self._drift_noted(args, {"kind": "load",
+                                     "observed_imbalance": float(obs)})
+
+    def _drift_noted(self, args: ShuffleArgs, drift: dict) -> None:
+        self._note(args.shuffle_id, drift=drift)
+        self._m_drift.inc(tenant=args.tenant, kind=drift["kind"])
+        tracer = self.obs.tracer
+        if tracer.enabled:
+            tracer.point("drift_invalidation", shuffle_id=args.shuffle_id,
+                         tenant=args.tenant, **drift)
 
     def _run_plain(self, args: ShuffleArgs, bufs: dict[int, Msgs], key: tuple,
                    execution: str, executor: str = "vectorized"
@@ -651,6 +844,18 @@ class TeShuCluster:
                         "restarted": sorted(report.dead),
                         "resume_stages": dict(rc.resume_stages),
                     }
+                    restart_set = {w for w in participants
+                                   if rc.resume_stages.get(w, -1) < 0} \
+                        | set(report.dead)
+                    self._m_recovery_attempts.inc(tenant=tenant)
+                    self._m_restart_workers.observe(len(restart_set),
+                                                    tenant=tenant)
+                    tracer = self.obs.tracer
+                    if tracer.enabled:
+                        tracer.point("recovery", shuffle_id=sid, tenant=tenant,
+                                     attempt=attempt + 1,
+                                     restarted=sorted(report.dead),
+                                     restart_set=len(restart_set))
                     continue
                 # ---- success ----------------------------------------------------
                 if args.plan is None:
@@ -749,14 +954,17 @@ class TeShuService(TeShuCluster):
                  streaming: str = "off",
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  max_inflight: int = DEFAULT_MAX_INFLIGHT,
-                 max_retries: int = 2):
+                 max_retries: int = 2,
+                 tracing: bool = False,
+                 span_capacity: int = 8192):
         super().__init__(topology, journal_path=journal_path, replicas=replicas,
                          plan_cache=plan_cache, execution=execution,
                          executor=executor, resilience=resilience,
                          balance=balance,
                          skew_threshold=skew_threshold, streaming=streaming,
                          chunk_bytes=chunk_bytes, max_inflight=max_inflight,
-                         max_retries=max_retries)
+                         max_retries=max_retries, tracing=tracing,
+                         span_capacity=span_capacity)
         self.tenant(DEFAULT_TENANT)
 
     def _default_client(self) -> TenantClient:

@@ -201,6 +201,11 @@ class StreamSession:
         """
         if self.closed:
             raise RuntimeError("stream session already drained")
+        obs = self.cluster.obs
+        sp = obs.tracer.span(
+            "stream_feed", shuffle_id=self.shuffle_id, tenant=self.tenant,
+        ) if obs.tracer.enabled else None
+        stalls_before = self.backpressure_stalls
         ledger = self.cluster.ledger
         topo = self.cluster.topology
         fed = 0
@@ -228,6 +233,18 @@ class StreamSession:
                 self.chunks_fed += 1
                 self.rows_fed += piece.n
                 fed += 1
+        stalled = self.backpressure_stalls - stalls_before
+        obs.metrics.counter(
+            "teshu_stream_chunks_total",
+            "Chunks streamed through StreamSession.feed()").inc(
+                fed, tenant=self.tenant)
+        if stalled:
+            obs.metrics.counter(
+                "teshu_stream_backpressure_stalls_total",
+                "feed() producer stalls (inflight window full)").inc(
+                    stalled, tenant=self.tenant)
+        if sp is not None:
+            sp.end(chunks=fed, stalls=stalled, inflight=len(self._inflight))
         return fed
 
     def drain(self) -> dict:
@@ -238,6 +255,10 @@ class StreamSession:
         """
         if self.closed:
             raise RuntimeError("stream session already drained")
+        tracer = self.cluster.obs.tracer
+        sp = tracer.span(
+            "stream_drain", shuffle_id=self.shuffle_id, tenant=self.tenant,
+        ) if tracer.enabled else None
         self.closed = True
         while self._inflight:                 # flush the window
             self._fold_oldest()
@@ -252,6 +273,9 @@ class StreamSession:
                     default=1)
         bufs = {d: (m if m is not None else Msgs.empty(width))
                 for d, m in self.acc.items()}
+        if sp is not None:
+            sp.end(chunks=self.chunks_fed, rows=self.rows_fed,
+                   stalls=self.backpressure_stalls)
         return {"bufs": bufs,
                 "stats": self.cluster.ledger.delta(self._before, after),
                 "chunks": self.chunks_fed, "rows": self.rows_fed}

@@ -455,6 +455,12 @@ class ShuffleResult:
     recovery: dict | None = None          # restart/resume/speculation details
     streamed: bool = False                # ran as chunk-pipelined sub-epochs?
     engine: str = "threaded"              # which executor produced the bytes
+    fallback_reason: str | None = None    # why the *requested* engine declined
+    # ^ None when the requested engine ran; otherwise its decline code (e.g.
+    #   "template_not_lowerable", "unsupported_combiner",
+    #   "skew_rebalance_triggered") — see jaxplan.decline_reason and
+    #   vectorized.vectorize_decline.  The full chain lives in the service's
+    #   per-shuffle report (cluster.explain).
 
 
 def aggregate_observed(per_worker: list[list[tuple]]) -> dict[str, float]:
@@ -592,8 +598,12 @@ def run_shuffle(
         return (out, ctx.decisions, ctx.observed, streamed)
 
     try:
-        raw = cluster.run_workers(participants, worker_fn,
-                                  abort_event=cluster.abort_event(args.shuffle_id))
+        with cluster.obs.tracer.span(
+                "exec", shuffle_id=args.shuffle_id, tenant=args.tenant,
+                engine="threaded", template=args.template_id,
+                cached=args.plan is not None, attempt=attempt):
+            raw = cluster.run_workers(participants, worker_fn,
+                                      abort_event=cluster.abort_event(args.shuffle_id))
     except BaseException:
         cluster.end_shuffle(args.shuffle_id, aborted=True,
                             participants=participants)

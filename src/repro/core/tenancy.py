@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+import time
 from typing import Sequence
 
 DEFAULT_TENANT = "default"
@@ -147,6 +148,8 @@ class ShuffleSubmission:
     dsts: tuple[int, ...]
     kwargs: dict
     arrival: int                  # FIFO position (submission order)
+    ts: float = 0.0               # wall clock (monotonic) at submission —
+    #                               the admission-wait metric's start point
 
     @property
     def coflow_id(self) -> tuple[str, str]:
@@ -177,7 +180,7 @@ class AdmissionQueue:
                        else f"{_AUTO_STAGE_PREFIX}{ticket}"),
                 template_id=template_id, bufs=bufs,
                 srcs=tuple(srcs), dsts=tuple(dsts), kwargs=dict(kwargs),
-                arrival=ticket))
+                arrival=ticket, ts=time.monotonic()))
             return ticket
 
     def drain(self) -> list[ShuffleSubmission]:

@@ -85,20 +85,33 @@ def combine_msgs(combiner: Combiner, msgs: Msgs) -> Msgs:
     return combiner(msgs)
 
 
+def vectorize_decline(cluster: LocalCluster, args: ShuffleArgs) -> str | None:
+    """Why batched execution is invalid for this invocation, or ``None`` when
+    it can run.  Reason codes are machine-checkable and surface through
+    ``ShuffleResult.fallback_reason`` / ``cluster.explain()``."""
+    if args.plan is None:
+        return "no_plan"
+    if args.template_id not in VECTORIZABLE:
+        return "template_not_vectorizable"
+    if args.recovery is not None:
+        pending_delays = set(cluster.worker_delays) - set(args.recovery.speculated)
+        return "straggler_delays" if pending_delays else None
+    if cluster.failed_workers:
+        return "failed_workers"
+    if cluster.worker_delays:
+        return "straggler_delays"
+    if cluster.fault_injections:
+        return "fault_injections"
+    return None
+
+
 def can_vectorize(cluster: LocalCluster, args: ShuffleArgs) -> bool:
     """Batched execution is valid when a plan exists and the template is
     supported.  Without a RecoveryContext, any fault/straggler injection needs
     the thread-level simulation; with one, this executor handles dead workers
     and injected faults itself, and only wall-clock delays that speculation
     did not neutralize still require real threads to sleep in."""
-    if args.plan is None or args.template_id not in VECTORIZABLE:
-        return False
-    if args.recovery is not None:
-        pending_delays = set(cluster.worker_delays) - set(args.recovery.speculated)
-        return not pending_delays
-    return (not cluster.failed_workers
-            and not cluster.worker_delays
-            and not cluster.fault_injections)
+    return vectorize_decline(cluster, args) is None
 
 
 def _comb(args: ShuffleArgs, ledger, wid: int, batches) -> Msgs:
@@ -117,6 +130,21 @@ def run_shuffle_vectorized(
     manager=None,
 ) -> ShuffleResult:
     """Execute ``args.plan`` on the batched data plane; see module docstring."""
+    tracer = cluster.obs.tracer
+    if not tracer.enabled:
+        return _run_vectorized_impl(cluster, args, bufs, manager)
+    with tracer.span("exec", shuffle_id=args.shuffle_id, tenant=args.tenant,
+                     engine="vectorized", template=args.template_id,
+                     streamed=args.stream is not None):
+        return _run_vectorized_impl(cluster, args, bufs, manager)
+
+
+def _run_vectorized_impl(
+    cluster: LocalCluster,
+    args: ShuffleArgs,
+    bufs: dict[int, Msgs],
+    manager=None,
+) -> ShuffleResult:
     plan = args.plan
     if plan is None:
         raise ValueError("vectorized execution requires a CompiledPlan")
@@ -191,6 +219,11 @@ def run_shuffle_vectorized(
                     state[w] = rc.store.load(sid, w, li)
             execute = [w for w in srcs if resume.get(w, -1) < li]
             if ld.eff_cost.beneficial and execute:
+                tracer = cluster.obs.tracer
+                stage_sp = tracer.span(
+                    "stage", shuffle_id=sid, tenant=args.tenant,
+                    level=ld.level, workers=len(execute),
+                ) if tracer.enabled else None
                 ledger.advance_epoch()    # the stage barrier (PLAN_STAGE's epoch)
                 staged = {}
                 for w in execute:
@@ -212,6 +245,8 @@ def run_shuffle_vectorized(
                     pre = sum(g.nbytes for g in got)
                     state[w] = _comb(args, ledger, w, got)
                     observed.append((ld.level, pre, state[w].nbytes))
+                if stage_sp is not None:
+                    stage_sp.end()
             if rc is not None:
                 for w in execute:
                     rc.store.save(sid, w, li, ld.level, state[w])

@@ -1,0 +1,135 @@
+"""The shuffle doctor: post-mortem a journal (or a live cluster's records).
+
+    PYTHONPATH=src python -m repro.launch.doctor runs/journal.jsonl
+    PYTHONPATH=src python -m repro.launch.doctor runs/journal.jsonl --shuffle 3
+    PYTHONPATH=src python -m repro.launch.doctor runs/journal.jsonl --tenant ml --json
+
+Answers, from the append-only journal alone, the questions an operator asks
+after the fact: which shuffles ran (per tenant), which failed and why the
+detector said so, which recovered and what restarted, who straggled, and how
+long each worker took.  The journal is version-tolerant
+(:meth:`repro.core.manager.ShuffleRecord.from_json`): pre-version lines
+replay as schema v0, newer-schema lines have unknown fields dropped.
+
+For *decision*-level questions on a live service — why a shuffle fell back
+off its requested engine, missed the plan cache, or was drift-invalidated —
+use ``cluster.explain(shuffle_id)`` (:mod:`repro.core.obs`), which reads the
+in-process decision log the journal does not carry.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.manager import ShuffleManager
+
+
+def diagnose_shuffle(mgr: ShuffleManager, sid: int,
+                     straggler_factor: float = 3.0) -> dict:
+    """One shuffle's journal evidence, condensed to a verdict dict."""
+    recs = mgr.records(sid)
+    prog = mgr.progress(sid)
+    durs = mgr.durations(sid)
+    failures = [r for r in recs if r.kind == "failure"]
+    recoveries = [r for r in recs if r.kind == "recovery"]
+    speculations = [r for r in recs if r.kind == "speculation"]
+    attempts = max((r.attempt for r in recs), default=0) + 1
+    template = next((r.template_id for r in recs if r.template_id), None)
+    tenant = next((r.tenant for r in recs), None)
+    # straggler check on the final attempt's timings only makes sense when
+    # everyone finished; with pending workers the elapsed-time arm applies
+    now = max((r.ts for r in recs), default=0.0)
+    stragglers = mgr.stragglers(sid, factor=straggler_factor, now=now)
+    if failures and prog["pending"]:
+        status = "failed"
+    elif failures:
+        status = "recovered"
+    elif prog["pending"]:
+        status = "incomplete"
+    else:
+        status = "ok"
+    return {
+        "shuffle_id": sid,
+        "tenant": tenant,
+        "template": template,
+        "status": status,
+        "attempts": attempts,
+        "workers": {"started": len(prog["started"]),
+                    "finished": len(prog["finished"]),
+                    "pending": prog["pending"]},
+        "durations": {str(w): round(d, 6) for w, d in sorted(durs.items())},
+        "stragglers": stragglers,
+        "failures": [r.info for r in failures if r.info],
+        "recoveries": [r.info for r in recoveries if r.info],
+        "speculations": [r.info for r in speculations if r.info],
+        "journal_versions": sorted({r.version for r in recs}),
+    }
+
+
+def diagnose(journal_path: str, *, shuffle_id: int | None = None,
+             tenant: str | None = None,
+             straggler_factor: float = 3.0) -> list[dict]:
+    mgr = ShuffleManager.recover(journal_path)
+    try:
+        recs = mgr.records(tenant=tenant)
+        sids = sorted({r.shuffle_id for r in recs})
+        if shuffle_id is not None:
+            sids = [s for s in sids if s == shuffle_id]
+        return [diagnose_shuffle(mgr, s, straggler_factor) for s in sids]
+    finally:
+        mgr.close()
+
+
+def render(reports: list[dict]) -> str:
+    if not reports:
+        return "no matching shuffle records in the journal"
+    out = []
+    for r in reports:
+        hdr = (f"shuffle {r['shuffle_id']} [{r['template'] or '?'}] "
+               f"tenant={r['tenant'] or '?'}: {r['status'].upper()} "
+               f"({r['attempts']} attempt(s))")
+        out.append(hdr)
+        w = r["workers"]
+        out.append(f"  workers: {w['finished']}/{w['started']} finished"
+                   + (f", pending {w['pending']}" if w["pending"] else ""))
+        if r["durations"]:
+            durs = r["durations"].values()
+            out.append(f"  durations: min {min(durs):.4f}s "
+                       f"max {max(durs):.4f}s over {len(durs)} workers")
+        if r["stragglers"]:
+            out.append(f"  stragglers: {r['stragglers']}")
+        for f in r["failures"]:
+            out.append(f"  failure: {f}")
+        for rec in r["recoveries"]:
+            out.append(f"  recovery: {rec}")
+        for s in r["speculations"]:
+            out.append(f"  speculation: {s}")
+    return "\n".join(out)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.doctor",
+        description="Post-mortem a shuffle journal.")
+    ap.add_argument("journal", help="path to the JSONL journal (or a replica)")
+    ap.add_argument("--shuffle", type=int, default=None,
+                    help="restrict to one shuffle id")
+    ap.add_argument("--tenant", default=None,
+                    help="restrict to one tenant's records")
+    ap.add_argument("--straggler-factor", type=float, default=3.0)
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable JSON instead of text")
+    args = ap.parse_args(argv)
+    reports = diagnose(args.journal, shuffle_id=args.shuffle,
+                       tenant=args.tenant,
+                       straggler_factor=args.straggler_factor)
+    if args.json:
+        print(json.dumps(reports, indent=2))
+    else:
+        print(render(reports))
+    return 0 if reports else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
