@@ -3,8 +3,10 @@ algorithm, plus a byte/time profile of each template on a common workload, plus
 the plan-cache / vectorization benchmark (beyond-paper: repeated shuffles),
 the skew-rebalance benchmark (``BENCH_skew.json``, machine-readable), the
 streaming benchmark (``BENCH_streaming.json``: barrier vs chunk-pipelined
-modelled time on both executors) and the jitted-replay benchmark
-(``BENCH_jaxplan.json``: fresh vs vectorized-hit vs jax-hit)."""
+modelled time on both executors), the jitted-replay benchmark
+(``BENCH_jaxplan.json``: fresh vs vectorized-hit vs jax-hit) and the
+durable-storage benchmark (``BENCH_storage.json``: off vs spill vs durable
+overhead plus recovery-from-store vs naive re-execution)."""
 from __future__ import annotations
 
 import argparse
@@ -541,13 +543,139 @@ def observability_profile(iters: int = 4, *, smoke: bool = False,
     return out
 
 
+def storage_profile(iters: int = 3, *, smoke: bool = False,
+                    json_path: str | None = None) -> CsvOut:
+    """Durable-storage cost/benefit: off vs spill vs durable.
+
+    Three arms on a disjoint senders->receivers ``vanilla_push``:
+
+    * ``overhead`` — no faults: what each storage mode costs.  Modelled time
+      must be *identical* across modes (spill/restore live on their own
+      ledger lanes, never on transfer time); wall time shows the real
+      serialization/flush cost.
+    * ``recovery`` — a sender killed mid-stage under ``resilience="recover"``:
+      ``storage="off"`` re-executes every sender on the retry,
+      ``storage="durable"`` serves the survivors' persisted PART outputs from
+      the store.  The served arm must model **strictly less** total time than
+      naive re-execution, at byte-identical output.
+    * ``stream`` — a session fed past its inflight window: ``storage="spill"``
+      spills the oldest chunks instead of folding early; folds must be
+      bitwise-identical to the storage-off session.
+
+    When ``json_path`` is set the rows are written machine-readable
+    (``BENCH_storage.json``), consumed by the CI ``storage-bench-smoke`` job.
+    """
+    out = CsvOut("storage_profile",
+                 ["arm", "storage", "modelled_ms", "wall_ms", "spill_mb",
+                  "restore_mb", "served", "reexecuted", "spilled_chunks",
+                  "identical"])
+    topo = datacenter(4, 2, 2, oversubscription=4.0)
+    nw = topo.num_workers
+    srcs = list(range(nw // 2))
+    dsts = list(range(nw // 2, nw))
+    n_per = 4_000 if smoke else 20_000
+    loops = 2 if smoke else max(iters, 2)
+    # The recovery victim (srcs[-1]) carries a small shard and the survivors
+    # carry large ones: modelled epoch time is a max over parallel senders,
+    # so serving the survivors from the store must drop it strictly (the
+    # naive retry stays bottlenecked on a large surviving shard).
+    big = zipf_shards(len(srcs), n_per, 5_000, seed=11)
+    small = zipf_shards(len(srcs), max(n_per // 10, 100), 5_000, seed=12)
+    base = {w: (small[w] if w == srcs[-1] else big[w]) for w in srcs}
+
+    def same(a, b):
+        return set(a) == set(b) and all(
+            np.array_equal(a[d].keys, b[d].keys)
+            and np.array_equal(a[d].vals, b[d].vals) for d in a)
+
+    def run_barrier(storage, *, fault):
+        sv = TeShuService(topo, resilience="recover", storage=storage)
+        sv.shuffle("vanilla_push", {w: m.copy() for w, m in base.items()},
+                   srcs, dsts, comb_fn=SUM)       # prime the plan (excluded)
+        best = None
+        for _ in range(loops):
+            if fault:
+                sv.inject_fault(srcs[-1], after_stage=-1)
+            sv.reset_stats()
+            bufs = {w: m.copy() for w, m in base.items()}
+            t0 = time.perf_counter()
+            res = sv.shuffle("vanilla_push", bufs, srcs, dsts, comb_fn=SUM)
+            wall = time.perf_counter() - t0
+            st = sv.stats()
+            if best is None or wall < best[0]:
+                best = (wall, res, st)
+        return best
+
+    def run_stream(storage):
+        best = None
+        for _ in range(loops):
+            cl = TeShuCluster(topo, storage=storage)
+            sess = cl.tenant("bench").open_stream(
+                "vanilla_push", srcs, dsts, comb_fn=SUM,
+                chunk_bytes=1 << 14, max_inflight=2)
+            t0 = time.perf_counter()
+            for w, m in base.items():
+                sess.feed({w: m.copy()})
+            r = sess.drain()
+            wall = time.perf_counter() - t0
+            if best is None or wall < best[0]:
+                best = (wall, r)
+        return best
+
+    rows = []
+    wall0, res0, st0 = run_barrier("off", fault=False)
+    ref = res0.bufs
+    for storage in ("off", "spill", "durable"):
+        wall, res, st = ((wall0, res0, st0) if storage == "off"
+                         else run_barrier(storage, fault=False))
+        rows.append(dict(
+            arm="overhead", storage=storage,
+            modelled_ms=st["modelled_time_s"] * 1e3, wall_ms=wall * 1e3,
+            spill_mb=st.get("spill_bytes", 0) / 1e6,
+            restore_mb=st.get("restore_bytes", 0) / 1e6,
+            served=0, reexecuted=0, spilled_chunks=0,
+            identical=same(res.bufs, ref)))
+    for storage in ("off", "durable"):
+        wall, res, st = run_barrier(storage, fault=True)
+        served = len((res.recovery or {}).get("store_served", []))
+        rows.append(dict(
+            arm="recovery", storage=storage,
+            modelled_ms=st["modelled_time_s"] * 1e3, wall_ms=wall * 1e3,
+            spill_mb=st.get("spill_bytes", 0) / 1e6,
+            restore_mb=st.get("restore_bytes", 0) / 1e6,
+            served=served, reexecuted=len(srcs) - served,
+            spilled_chunks=0, identical=same(res.bufs, ref)))
+    wall0, r0 = run_stream("off")
+    for storage in ("off", "spill"):
+        wall, r = (wall0, r0) if storage == "off" else run_stream(storage)
+        rows.append(dict(
+            arm="stream", storage=storage,
+            modelled_ms=r["stats"]["modelled_time_s"] * 1e3,
+            wall_ms=wall * 1e3,
+            spill_mb=r["stats"].get("spill_bytes", 0) / 1e6,
+            restore_mb=r["stats"].get("restore_bytes", 0) / 1e6,
+            served=0, reexecuted=0, spilled_chunks=r.get("spilled", 0),
+            identical=same(r["bufs"], r0["bufs"])))
+    for row in rows:
+        out.add(**row)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"meta": {"bench": "storage_profile", "workers": nw,
+                                "n_per_worker": n_per, "iters": loops,
+                                "template": "vanilla_push", "smoke": smoke},
+                       "rows": rows}, f, indent=2)
+            f.write("\n")
+    return out
+
+
 def run() -> list[CsvOut]:
     return [table3(), template_profile(), plan_cache_profile(),
             skew_profile(json_path="BENCH_skew.json"),
             streaming_profile(json_path="BENCH_streaming.json"),
             multitenant_profile(json_path="BENCH_multitenant.json"),
             jaxplan_profile(json_path="BENCH_jaxplan.json"),
-            observability_profile(json_path="BENCH_obs.json")]
+            observability_profile(json_path="BENCH_obs.json"),
+            storage_profile(json_path="BENCH_storage.json")]
 
 
 if __name__ == "__main__":
@@ -562,6 +690,8 @@ if __name__ == "__main__":
                     help="run only the jitted plan-replay benchmark")
     ap.add_argument("--obs-only", action="store_true",
                     help="run only the telemetry-overhead benchmark")
+    ap.add_argument("--storage-only", action="store_true",
+                    help="run only the durable-storage benchmark")
     ap.add_argument("--smoke", action="store_true",
                     help="small-scale run (CI)")
     ap.add_argument("--skew-json", default="BENCH_skew.json",
@@ -574,6 +704,8 @@ if __name__ == "__main__":
                     help="path for the machine-readable jaxplan output")
     ap.add_argument("--obs-json", default="BENCH_obs.json",
                     help="path for the machine-readable telemetry output")
+    ap.add_argument("--storage-json", default="BENCH_storage.json",
+                    help="path for the machine-readable storage output")
     args = ap.parse_args()
     if args.skew_only:
         skew_profile(smoke=args.smoke, json_path=args.skew_json).emit()
@@ -589,6 +721,9 @@ if __name__ == "__main__":
     elif args.obs_only:
         observability_profile(smoke=args.smoke,
                               json_path=args.obs_json).emit()
+    elif args.storage_only:
+        storage_profile(smoke=args.smoke,
+                        json_path=args.storage_json).emit()
     else:
         for t in run():
             t.emit()

@@ -415,6 +415,12 @@ def _call_decline(cluster: LocalCluster, args: ShuffleArgs,
         return "streamed_replay"
     if args.recovery is not None:
         return "recovery_context"
+    if args.storage is not None and args.storage.persist:
+        # durable persistence writes PART blocks through the shuffle store;
+        # the lowered kernel has no store hook, so it would silently skip the
+        # durability contract — fall back to the (byte-identical) vectorized
+        # executor, which persists
+        return "storage_persist"
     if (cluster.failed_workers or cluster.worker_delays
             or cluster.fault_injections):
         return "cluster_fault_state"

@@ -33,9 +33,12 @@ from .templates import TEMPLATES, ShuffleTemplate
 # Journal schema version, written as a compact ``"v"`` field on every line.
 # Version history: 0 (implicit) = the seed format and its additive extensions
 # (stage/attempt/info/tenant, all defaulted on read); 1 = the first version
-# that stamps itself.  The reader is tolerant both ways: lines without ``v``
-# replay as version 0, and unknown fields from future versions are ignored.
-JOURNAL_VERSION = 1
+# that stamps itself; 2 = durable-storage record kinds ``spill`` (a shuffle's
+# PART outputs were flushed to the shuffle store) and ``restore`` (a recovery
+# served surviving senders' partitions from the store).  The reader is
+# tolerant both ways: lines without ``v`` replay as version 0, and unknown
+# fields from future versions are ignored, so v0/v1 journals still recover.
+JOURNAL_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -47,7 +50,9 @@ class ShuffleRecord:
     paper's records), ``stage`` (a worker completed one hierarchy stage —
     recovery's restart-set evidence), ``failure`` (detector diagnosis),
     ``recovery`` (restart/resume decision for a retry attempt), ``speculation``
-    (straggler work duplicated onto backups).  Old journals (no ``stage`` /
+    (straggler work duplicated onto backups), ``spill`` (schema v2: blocks
+    flushed to the durable shuffle store), ``restore`` (schema v2: a recovery
+    served senders from the store).  Old journals (no ``stage`` /
     ``attempt`` / ``info`` / ``tenant`` fields) still replay: the new fields
     default — in particular, records written before the multi-tenant service
     existed belong to :data:`~repro.core.tenancy.DEFAULT_TENANT`, which is
@@ -171,6 +176,20 @@ class ShuffleManager:
     def record_recovery(self, shuffle_id: int, info: dict, attempt: int = 0,
                         tenant: str = DEFAULT_TENANT) -> None:
         self._append(ShuffleRecord(-1, shuffle_id, "", "recovery", self._clock(),
+                                   attempt=attempt, info=info, tenant=tenant))
+
+    def record_spill(self, shuffle_id: int, info: dict, attempt: int = 0,
+                     tenant: str = DEFAULT_TENANT) -> None:
+        """Schema v2: a shuffle's PART outputs were flushed to the durable
+        shuffle store (block/byte counts in ``info``)."""
+        self._append(ShuffleRecord(-1, shuffle_id, "", "spill", self._clock(),
+                                   attempt=attempt, info=info, tenant=tenant))
+
+    def record_restore(self, shuffle_id: int, info: dict, attempt: int = 0,
+                       tenant: str = DEFAULT_TENANT) -> None:
+        """Schema v2: a recovery attempt served surviving senders' partitions
+        from the shuffle store instead of re-executing them."""
+        self._append(ShuffleRecord(-1, shuffle_id, "", "restore", self._clock(),
                                    attempt=attempt, info=info, tenant=tenant))
 
     def record_speculation(self, shuffle_id: int, info: dict,

@@ -41,6 +41,8 @@ class ShuffleReport:
     cache: dict | None = None              # outcome / reason / diff / closest
     skew: dict | None = None               # rebalance verdict of this run
     drift: dict | None = None              # invalidation this run triggered
+    storage: dict | None = None            # store mode / spill + restore
+    #                                        telemetry / decline reason
     status: str | None = None              # "ok" | "failed" | None (unknown)
     attempts: int = 0
     streamed: bool = False
@@ -80,6 +82,25 @@ class ShuffleReport:
                 f"{self.skew.get('threshold', 0.0):.2f})")
         if self.drift is not None:
             out.append(f"plan drift-invalidated ({self.drift.get('kind')})")
+        if self.storage is not None:
+            st = self.storage
+            if st.get("decline") == "template_not_persistable":
+                out.append(
+                    "store persistence declined: template produces no final "
+                    "per-(src, dst) partitions (durable mode ran as spill)")
+            if st.get("decline_reason") == "quota_exceeded":
+                out.append(
+                    f"store put(s) declined over the tenant storage quota "
+                    f"({st.get('declines', 0)} decline(s))")
+            if st.get("flushed_blocks"):
+                out.append(
+                    f"spilled {st['flushed_blocks']} block(s) / "
+                    f"{st.get('flushed_bytes', 0)} bytes to the shuffle store")
+            if st.get("restored_blocks"):
+                out.append(
+                    f"restored {st['restored_blocks']} block(s) / "
+                    f"{st.get('restored_bytes', 0)} bytes from the shuffle "
+                    "store")
         if self.status == "failed":
             out.append("shuffle failed (see .failures)")
         elif self.attempts > 1:
@@ -100,7 +121,7 @@ def build_report(cluster, shuffle_id: int) -> ShuffleReport:
     if noted:
         for field in ("tenant", "template", "execution", "requested_executor",
                       "engine", "fallback_reason", "cache", "skew", "drift",
-                      "status"):
+                      "storage", "status"):
             if field in noted:
                 setattr(rep, field, noted[field])
         rep.fallbacks = list(noted.get("fallbacks", ()))
@@ -119,7 +140,8 @@ def build_report(cluster, shuffle_id: int) -> ShuffleReport:
     rep.failures = [{"attempt": r.attempt, "info": r.info}
                     for r in recs if r.kind == "failure"]
     rep.recovery = [{"attempt": r.attempt, "kind": r.kind, "info": r.info}
-                    for r in recs if r.kind in ("recovery", "speculation")]
+                    for r in recs
+                    if r.kind in ("recovery", "speculation", "restore")]
     if rep.status is None and rep.failures and rep.attempts == 0:
         rep.status = "failed"
     rep.spans = cluster.obs.tracer.spans(shuffle_id)

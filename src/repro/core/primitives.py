@@ -92,6 +92,14 @@ class CostLedger:
         self._stream_nchunks: dict[int, int] = {}
         self._stream_levels: set[int] = set()
         self._closed_time = 0.0                              # folded epochs
+        # durable-storage lanes: bytes flushed to / restored from the shuffle
+        # store.  Deliberately separate from ``total_bytes`` and modelled
+        # time — spilling is a lifetime decision, not a wire transfer, and
+        # keeping the lanes apart is what preserves byte-identical stats
+        # between storage modes.
+        self._spill_bytes = 0
+        self._restore_bytes = 0
+        self._tenant_spill: dict[str, int] = {}
 
     def _charge_lane(self, tenant: str | None, nbytes: int, cost: float) -> None:
         """Fold a charge into its tenant's lane (lock held by the caller)."""
@@ -175,6 +183,24 @@ class CostLedger:
                 self._stream_nchunks[wid] = max(self._stream_nchunks.get(wid, 0),
                                                 chunk + 1)
 
+    def charge_spill(self, nbytes: int, *, tenant: str | None = None,
+                     restore: bool = False) -> None:
+        """Charge a storage flush (or, with ``restore=True``, a store read).
+
+        Spill traffic never enters ``total_bytes``, per-level lanes, or the
+        modelled-time epochs: those describe the shuffle's wire plan, which
+        is identical whether or not its blocks were also persisted.
+        """
+        if nbytes == 0:
+            return
+        t = DEFAULT_TENANT if tenant is None else tenant
+        with self._lock:
+            if restore:
+                self._restore_bytes += nbytes
+            else:
+                self._spill_bytes += nbytes
+                self._tenant_spill[t] = self._tenant_spill.get(t, 0) + nbytes
+
     def recv_imbalance(self, dsts: Sequence[int]) -> float:
         """max/mean of received data bytes across ``dsts`` so far (1.0 when the
         ledger has seen no received bytes for them).  The skew-aware EFF/COST
@@ -257,6 +283,9 @@ class CostLedger:
                 "recv_bytes_per_worker": dict(self._recv_bytes),
                 "bytes_per_tenant": dict(self._tenant_bytes),
                 "cost_per_tenant": dict(self._tenant_cost),
+                "spill_bytes": self._spill_bytes,
+                "restore_bytes": self._restore_bytes,
+                "spill_bytes_per_tenant": dict(self._tenant_spill),
                 "modelled_time_s": (self._closed_time + self._open_epoch_time()
                                     + self._open_stream_time()),
             }
@@ -267,7 +296,15 @@ class CostLedger:
         recv_before = before.get("recv_bytes_per_worker", {})
         tb_before = before.get("bytes_per_tenant", {})
         tc_before = before.get("cost_per_tenant", {})
+        ts_before = before.get("spill_bytes_per_tenant", {})
         return {
+            "spill_bytes": (after.get("spill_bytes", 0)
+                            - before.get("spill_bytes", 0)),
+            "restore_bytes": (after.get("restore_bytes", 0)
+                              - before.get("restore_bytes", 0)),
+            "spill_bytes_per_tenant": {
+                t: b - ts_before.get(t, 0)
+                for t, b in after.get("spill_bytes_per_tenant", {}).items()},
             "total_bytes": after["total_bytes"] - before["total_bytes"],
             "sample_bytes": after["sample_bytes"] - before["sample_bytes"],
             "modelled_time_s": after["modelled_time_s"] - before["modelled_time_s"],
@@ -419,6 +456,9 @@ class ShuffleArgs:
     # ^ resilience.recovery.RecoveryContext when the service runs with
     #   resilience enabled (checkpoint store, resume map, attempt number,
     #   speculation set); None keeps every primitive on its zero-overhead path.
+    storage: "object | None" = None
+    # ^ storage.StorageContext when the storage knob is "spill" or "durable";
+    #   None keeps the pre-storage data plane byte-for-byte.
 
 
 class LocalCluster:
@@ -441,6 +481,11 @@ class LocalCluster:
         # pull-mode publish board, keyed (shuffle_id, src) so invocations don't alias
         self._published: dict[tuple[int, int], dict[int, Msgs]] = {}
         self._published_ev: dict[tuple[int, int], threading.Event] = {}
+        # per-shuffle key indexes so end_shuffle tears down O(own keys) state
+        # instead of scanning every live key on the board (a concurrent-tenant
+        # service pays that scan once per shuffle, per tenant)
+        self._pub_index: dict[int, set] = {}
+        self._rv_index: dict[int, set] = {}
         self._rendezvous: dict[tuple, Rendezvous] = {}
         self._rv_lock = threading.Lock()
         self.failed_workers: set[int] = set()
@@ -466,7 +511,14 @@ class LocalCluster:
         ev = self._published_ev.get(key)
         if ev is None:
             ev = self._published_ev.setdefault(key, threading.Event())
+            self._pub_index.setdefault(key[0], set()).add(key)
         return ev
+
+    def publish(self, key: tuple, value) -> None:
+        """Post to the publish board (and index the key for teardown)."""
+        self._published[key] = value
+        self._pub_index.setdefault(key[0], set()).add(key)
+        self._publish_event(key).set()
 
     # ---- failure signalling ---------------------------------------------------
     def abort_event(self, shuffle_id: int) -> threading.Event:
@@ -509,6 +561,7 @@ class LocalCluster:
                 # key[0] is the owning shuffle id for all rendezvous uses
                 rv = self._rendezvous[key] = Rendezvous(
                     nparticipants, abort_event=self.abort_event(key[0]))
+                self._rv_index.setdefault(key[0], set()).add(key)
             return rv
 
     def end_shuffle(self, shuffle_id: int, *, aborted: bool = False,
@@ -530,11 +583,10 @@ class LocalCluster:
         cleanup falls back to orphaning every queue.
         """
         with self._rv_lock:
-            for k in [k for k in self._rendezvous if k[0] == shuffle_id]:
-                del self._rendezvous[k]
-        for k in [k for k in self._published if k[0] == shuffle_id]:
+            for k in self._rv_index.pop(shuffle_id, ()):
+                self._rendezvous.pop(k, None)
+        for k in self._pub_index.pop(shuffle_id, ()):
             self._published.pop(k, None)
-        for k in [k for k in self._published_ev if k[0] == shuffle_id]:
             self._published_ev.pop(k, None)
         self._abort_ev.pop(shuffle_id, None)
         self._unreachable.pop(shuffle_id, None)
@@ -645,6 +697,17 @@ class WorkerContext:
     def _abort(self, message: str) -> None:
         raise ShuffleAborted(message, shuffle_id=self.args.shuffle_id)
 
+    def _served_block(self, src: int) -> Msgs | None:
+        """On a retry where ``src`` is store-served, its global partition for
+        this worker comes from the shuffle store — ``src`` is not running."""
+        rc = self.args.recovery
+        st = self.args.storage
+        if (rc is None or st is None
+                or src not in getattr(rc, "store_served", ())):
+            return None
+        return st.store.get_block(st.tenant, self.args.shuffle_id, "global",
+                                  src, self.wid)
+
     # ---- Table-2 primitives ---------------------------------------------------
     def SEND(self, dst: int, msgs: Msgs, *, sample: bool = False,
              chunk: int | None = None) -> None:
@@ -671,6 +734,9 @@ class WorkerContext:
         races ahead of data that actually arrived.
         """
         self._check_fault()
+        blk = self._served_block(src)
+        if blk is not None:   # restore charged by the store; no wire transfer
+            return blk
         timeout = self.cluster.rpc_timeout if timeout is None else timeout
         q = self.cluster._mailbox(src, self.wid)
         deadline = time.monotonic() + timeout
@@ -694,6 +760,9 @@ class WorkerContext:
 
         Data bytes are charged to the fetching worker (it pays the wait)."""
         self._check_fault()
+        blk = self._served_block(src)
+        if blk is not None:   # restore charged by the store; no wire transfer
+            return blk
         timeout = self.cluster.rpc_timeout if timeout is None else timeout
         key = (self.args.shuffle_id, src)
         ev = self.cluster._publish_event(key)
@@ -746,19 +815,48 @@ class WorkerContext:
              *, publish: bool = False, chunk: int | None = None) -> dict[int, Msgs]:
         self._check_fault()
         parts = partition(msgs, list(dsts), part_fn or self.part_fn)
+        st = self.args.storage
+        if (st is not None and st.persist and chunk is None
+                and tuple(dsts) == self.args.dsts
+                and self.stages_done >= st.min_stages):
+            # durable mode: the global PART output outlives this worker.  The
+            # publish board / mailboxes stay the fast path (a cache over the
+            # store); the persisted copy is what recovery serves from.
+            st.store.put_parts(st.tenant, self.args.shuffle_id, "global",
+                               self.wid, parts)
         if publish:  # pull mode: make partitions visible to FETCHers
             key = ((self.args.shuffle_id, self.wid) if chunk is None
                    else (self.args.shuffle_id, self.wid, chunk))
-            self.cluster._published[key] = parts
-            self.cluster._publish_event(key).set()
+            self.cluster.publish(key, parts)
         return parts
+
+    def PUT_BLOCK(self, stage: str, parts: dict[int, Msgs], *,
+                  chunk: int | None = None) -> bool:
+        """Persist one PART output to the shuffle store (no-op without one).
+
+        Returns ``False`` when there is no store for this shuffle or the
+        tenant's quota declined the put."""
+        self._check_fault()
+        st = self.args.storage
+        if st is None:
+            return False
+        return st.store.put_parts(st.tenant, self.args.shuffle_id, stage,
+                                  self.wid, parts, chunk=chunk)
+
+    def GET_BLOCK(self, stage: str, src: int, *,
+                  chunk: int | None = None) -> Msgs | None:
+        """Read this worker's slice of ``src``'s persisted PART output."""
+        self._check_fault()
+        st = self.args.storage
+        if st is None:
+            return None
+        return st.store.get_block(st.tenant, self.args.shuffle_id, stage,
+                                  src, self.wid, chunk=chunk)
 
     def PUBLISH_EOS(self, nchunks: int) -> None:
         """Close this worker's published chunk stream (pull-mode end-of-stream)."""
         self._check_fault()
-        key = (self.args.shuffle_id, self.wid, "eos")
-        self.cluster._published[key] = nchunks
-        self.cluster._publish_event(key).set()
+        self.cluster.publish((self.args.shuffle_id, self.wid, "eos"), nchunks)
 
     def COMB(self, msgs: Msgs | Sequence[Msgs], comb_fn: Combiner | None = None) -> Msgs:
         self._check_fault()

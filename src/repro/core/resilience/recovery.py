@@ -177,6 +177,10 @@ class RecoveryContext:
     resume_stages: dict[int, int] = dataclasses.field(default_factory=dict)
     speculated: frozenset = frozenset()
     record_stage: Callable[[int, str], None] | None = None
+    store_served: frozenset = frozenset()
+    # ^ senders whose global PART outputs survive in the shuffle store: the
+    #   retry serves their partitions from the store (RECV/FETCH short-circuit)
+    #   instead of re-executing them — they run nothing and journal nothing.
 
 
 class RecoveryCoordinator:
@@ -208,28 +212,71 @@ class RecoveryCoordinator:
                       topology: NetworkTopology, report: FailureReport,
                       attempt: int,
                       speculated: frozenset = frozenset(),
-                      tenant: str = DEFAULT_TENANT) -> RecoveryContext:
+                      tenant: str = DEFAULT_TENANT,
+                      storage=None, dsts=None,
+                      hierarchical: bool = False) -> RecoveryContext:
         """Restart the dead, compute the minimal restart set, journal it.
 
         The restart set (workers that will re-execute at least one stage) is
         ``srcs - {fully resumed}``; everyone else replays checkpoints.  For a
         mid-stage death this is exactly the dead worker's neighbor group at
         the failed level — §6's "subset of participants".
+
+        With durable ``storage`` (a :class:`repro.core.storage.StorageContext`)
+        and the shuffle's ``dsts``, the restart set shrinks further: a sender
+        whose *entire* global PART output survives in the shuffle store is
+        **served** — the retry reads its partitions from the store and the
+        worker re-executes nothing at all.  Only workers whose un-persisted
+        outputs died re-run.  A dead worker's staged (not-yet-flushed) blocks
+        are discarded first: they died with the worker that wrote them.  For
+        ``hierarchical`` templates a served sender must additionally be fully
+        resumed (all local stages group-consistent): otherwise a re-executing
+        group member would wait on it at a local exchange it will never run.
         """
         for w in report.dead:
             self.cluster.restart_worker(w)
         raw = self.store.stages(shuffle_id)
         resume = consistent_resume_stages(raw, srcs, topology)
         n_local = max(0, len(topology.levels) - 1)
-        restart = sorted(w for w in srcs if resume.get(w, -1) < n_local - 1)
-        self.manager.record_recovery(shuffle_id, {
+        served: list[int] = []
+        served_blocks = served_bytes = 0
+        if storage is not None and dsts:
+            store = storage.store
+            for w in report.dead:
+                store.discard_staged(storage.tenant, shuffle_id, w)
+            store.flush(shuffle_id)
+            for w in srcs:
+                if hierarchical and resume.get(w, -1) < n_local - 1:
+                    continue
+                sizes = [store.block_bytes(storage.tenant, shuffle_id,
+                                           "global", w, d) for d in dsts]
+                if all(s is not None for s in sizes):
+                    served.append(w)
+                    served_blocks += len(sizes)
+                    served_bytes += sum(sizes)
+        restart = sorted(w for w in srcs
+                         if w not in served
+                         and resume.get(w, -1) < n_local - 1)
+        info = {
             "restarted": sorted(report.dead),
             "restart_set": restart,
             "resume_stages": {str(w): s for w, s in sorted(resume.items())},
             "failure_kind": report.kind,
-        }, attempt=attempt, tenant=tenant)
+        }
+        if storage is not None:
+            info["store_served"] = sorted(served)
+        self.manager.record_recovery(shuffle_id, info, attempt=attempt,
+                                     tenant=tenant)
+        if served:
+            self.manager.record_restore(shuffle_id, {
+                "served": sorted(served),
+                "blocks": served_blocks,
+                "bytes": served_bytes,
+                "restart_set": restart,
+            }, attempt=attempt, tenant=tenant)
         return RecoveryContext(
             store=self.store, attempt=attempt, resume_stages=resume,
             speculated=speculated,
             record_stage=self._stage_recorder(shuffle_id, template_id, attempt,
-                                              tenant=tenant))
+                                              tenant=tenant),
+            store_served=frozenset(served))

@@ -101,6 +101,8 @@ from .primitives import LocalCluster, ShuffleAborted, ShuffleArgs
 from .resilience import (CheckpointStore, FailureDetector, RecoveryCoordinator,
                          SpeculationPolicy, try_repair)
 from .skew import DEFAULT_SKEW_THRESHOLD, imbalance
+from .storage import (STORAGE_MODES, STORE_DIRECT, LocalDirBackend,
+                      MemoryBackend, ShuffleStore, StorageContext)
 from .streaming import (DEFAULT_CHUNK_BYTES, DEFAULT_MAX_INFLIGHT, ChunkPlan,
                         StreamSession)
 from .tenancy import DEFAULT_TENANT, AdmissionQueue, TenantRegistry, TenantSpec
@@ -123,7 +125,7 @@ EXECUTORS = ("vectorized", "jax")
 # be set on the cluster (the fleet default), overridden at tenant registration
 # (the application's default), and overridden again on an individual call.
 _KNOBS = ("execution", "executor", "resilience", "balance", "skew_threshold",
-          "streaming", "chunk_bytes", "max_inflight", "max_retries")
+          "streaming", "chunk_bytes", "max_inflight", "max_retries", "storage")
 
 # next_shuffle_id tags at most this many recent ids with their owning tenant
 # (shuffle_owner); older tags fall off — the journal keeps the full history.
@@ -160,7 +162,8 @@ def _check_knobs(knobs: dict) -> dict:
                           ("executor", EXECUTORS),
                           ("resilience", RESILIENCE_MODES),
                           ("balance", BALANCE_MODES),
-                          ("streaming", STREAMING_MODES)):
+                          ("streaming", STREAMING_MODES),
+                          ("storage", STORAGE_MODES)):
         if name in out:
             _check_mode(name, out[name], allowed)
     for name, floor in (("chunk_bytes", 1), ("max_inflight", 1),
@@ -209,25 +212,31 @@ class TenantClient:
                 skew_threshold: float | None = None,
                 streaming: str | None = None, chunk_bytes: int | None = None,
                 max_inflight: int | None = None,
-                max_retries: int | None = None) -> ShuffleResult:
+                max_retries: int | None = None,
+                storage: str | None = None) -> ShuffleResult:
         return self._cluster._shuffle(
             self, template_id, bufs, srcs, dsts, part_fn=part_fn,
             comb_fn=comb_fn, rate=rate, shuffle_id=shuffle_id, seed=seed,
             execution=execution, executor=executor, resilience=resilience,
             balance=balance, skew_threshold=skew_threshold,
             streaming=streaming, chunk_bytes=chunk_bytes,
-            max_inflight=max_inflight, max_retries=max_retries)
+            max_inflight=max_inflight, max_retries=max_retries,
+            storage=storage)
 
     def open_stream(self, template_id: str, srcs: Sequence[int],
                     dsts: Sequence[int], *, part_fn: PartFn = HASH_PART,
                     comb_fn: Combiner | None = None,
                     chunk_bytes: int | None = None,
                     max_inflight: int | None = None,
-                    shuffle_id: int | None = None) -> StreamSession:
+                    shuffle_id: int | None = None,
+                    storage: str | None = None) -> StreamSession:
         """Open a continuous-ingest shuffle: ``feed()`` source buffers as they
         arrive, ``drain()`` the combined per-destination accumulators at end
         of source.  ``max_inflight`` is enforced backpressure — see
-        :class:`repro.core.streaming.StreamSession`."""
+        :class:`repro.core.streaming.StreamSession`.  With ``storage`` in
+        ``("spill", "durable")`` a full window spills its oldest chunks to the
+        shuffle store instead of folding early, so total inflight bytes may
+        exceed ``max_inflight`` x ``chunk_bytes`` without changing the folds."""
         cl = self._cluster
         template = cl.manager.get_template(template_id, wid=None)
         if not template.streamable:
@@ -237,11 +246,18 @@ class TenantClient:
         chunk = ChunkPlan(
             chunk_bytes=self.knob("chunk_bytes", chunk_bytes),
             max_inflight=self.knob("max_inflight", max_inflight))
+        mode = _check_mode("storage", self.knob("storage", storage),
+                           STORAGE_MODES)
+        sid = (cl.next_shuffle_id(self.tenant_id) if shuffle_id is None
+               else shuffle_id)
+        # streams never persist final partitions (they have none until drain);
+        # spill and durable both enable window spill-to-store
+        ctx = (StorageContext(cl.store, mode, self.tenant_id)
+               if mode != "off" else None)
         return StreamSession(
-            cl.cluster, cl.manager, template,
-            cl.next_shuffle_id(self.tenant_id) if shuffle_id is None
-            else shuffle_id,
-            srcs, dsts, part_fn, comb_fn, chunk, tenant=self.tenant_id)
+            cl.cluster, cl.manager, template, sid,
+            srcs, dsts, part_fn, comb_fn, chunk, tenant=self.tenant_id,
+            storage=ctx)
 
     def submit(self, template_id: str, bufs: dict[int, Msgs],
                srcs: Sequence[int], dsts: Sequence[int], *,
@@ -305,6 +321,8 @@ class TeShuCluster:
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  max_inflight: int = DEFAULT_MAX_INFLIGHT,
                  max_retries: int = 2,
+                 storage: str = "off",
+                 storage_dir: str | None = None,
                  admission: str = "wfair",
                  admission_rate: float = 0.05,
                  tracing: bool = False,
@@ -314,6 +332,7 @@ class TeShuCluster:
         _check_mode("resilience", resilience, RESILIENCE_MODES)
         _check_mode("balance", balance, BALANCE_MODES)
         _check_mode("streaming", streaming, STREAMING_MODES)
+        _check_mode("storage", storage, STORAGE_MODES)
         _check_mode("admission", admission, POLICIES)
         self.topology = topology
         self.cluster = LocalCluster(topology)
@@ -328,6 +347,13 @@ class TeShuCluster:
         self.chunk_bytes = chunk_bytes
         self.max_inflight = max_inflight
         self.max_retries = max_retries
+        # knob attr holds the *mode string* (resolved like every other knob);
+        # the store object itself lives separately on ``self.store``
+        self.storage = storage
+        self.store = ShuffleStore(
+            LocalDirBackend(storage_dir) if storage_dir is not None
+            else MemoryBackend())
+        self.store.bind(self.cluster)
         self.admission_policy = admission
         self.admission_rate = admission_rate
         self.checkpoints = CheckpointStore()
@@ -382,24 +408,30 @@ class TeShuCluster:
     # ---- tenants --------------------------------------------------------------
     def tenant(self, tenant_id: str = DEFAULT_TENANT, *,
                quota: int | None = None, priority: float | None = None,
+               storage_quota: int | None = None,
                **knobs) -> TenantClient:
         """Create-or-fetch the :class:`TenantClient` for ``tenant_id``.
 
         ``quota`` bounds the tenant's private plan-cache namespace (entries;
         unset = the namespace inherits the cache's default capacity);
-        ``priority`` is its scheduling weight.  Remaining keyword knobs
-        (``execution``, ``executor``, ``resilience``, ``balance``,
-        ``skew_threshold``, ``streaming``, ``chunk_bytes``, ``max_inflight``,
-        ``max_retries``) become the tenant's defaults.  Re-fetching an existing tenant with
+        ``priority`` is its scheduling weight; ``storage_quota`` bounds the
+        tenant's shuffle-store namespace (bytes; unset = unbounded).
+        Remaining keyword knobs (``execution``, ``executor``, ``resilience``,
+        ``balance``, ``skew_threshold``, ``streaming``, ``chunk_bytes``,
+        ``max_inflight``, ``max_retries``, ``storage``) become the tenant's
+        defaults.  Re-fetching an existing tenant with
         explicit arguments updates them; omitted ones are kept.
         """
         # validate knobs BEFORE touching cluster state: a rejected call must
         # not leave a phantom tenant behind (register() itself validates
         # quota/priority before mutating anything)
         knobs = _check_knobs(knobs)
-        spec = self.registry.register(tenant_id, quota=quota, priority=priority)
+        spec = self.registry.register(tenant_id, quota=quota, priority=priority,
+                                      storage_quota=storage_quota)
         if quota is not None:
             self.plan_cache.set_budget(tenant_id, quota)
+        if storage_quota is not None:
+            self.store.set_quota(tenant_id, storage_quota)
         with self._clients_lock:
             client = self._clients.get(tenant_id)
             if client is None:
@@ -445,6 +477,26 @@ class TeShuCluster:
             out.append(("teshu_bytes_per_tenant", {"tenant": t}, float(b)))
         for lvl, b in snap.get("bytes_per_level", {}).items():
             out.append(("teshu_bytes_per_level", {"level": str(lvl)}, float(b)))
+        out.append(("teshu_spill_bytes_total", {},
+                    float(snap.get("spill_bytes", 0))))
+        out.append(("teshu_restore_bytes_total", {},
+                    float(snap.get("restore_bytes", 0))))
+        st = self.store.stats()
+        out.append(("teshu_storage_puts_total", {}, float(st["puts"])))
+        out.append(("teshu_storage_put_bytes_total", {}, float(st["put_bytes"])))
+        out.append(("teshu_storage_gets_total", {}, float(st["gets"])))
+        out.append(("teshu_storage_staged_blocks", {},
+                    float(st["staged_blocks"])))
+        out.append(("teshu_storage_flushed_blocks_total", {},
+                    float(st["flushed_blocks"])))
+        out.append(("teshu_storage_flushed_bytes_total", {},
+                    float(st["flushed_bytes"])))
+        out.append(("teshu_storage_restored_bytes_total", {},
+                    float(st["restored_bytes"])))
+        out.append(("teshu_storage_declines_total", {},
+                    float(st["declines"])))
+        for t, b in st.get("usage_per_tenant", {}).items():
+            out.append(("teshu_storage_usage_bytes", {"tenant": t}, float(b)))
         tracer = self.obs.tracer
         if tracer.enabled:
             out.append(("teshu_spans_recorded_total", {},
@@ -599,7 +651,8 @@ class TeShuCluster:
                  streaming: str | None, chunk_bytes: int | None,
                  max_inflight: int | None,
                  max_retries: int | None = None,
-                 executor: str | None = None) -> ShuffleResult:
+                 executor: str | None = None,
+                 storage: str | None = None) -> ShuffleResult:
         tenant = client.tenant_id
         execution = _check_mode("execution", client.knob("execution", execution),
                                 EXECUTION_MODES)
@@ -612,6 +665,8 @@ class TeShuCluster:
                               BALANCE_MODES)
         streaming = _check_mode("streaming", client.knob("streaming", streaming),
                                 STREAMING_MODES)
+        storage_mode = _check_mode("storage", client.knob("storage", storage),
+                                   STORAGE_MODES)
         template = self.manager.get_template(template_id, wid=None)
         if balance == "auto" and not template.rebalanceable:
             # a template that re-partitions en route never carries a skew
@@ -683,18 +738,39 @@ class TeShuCluster:
             args.stream = (plan.stream
                            if plan is not None and plan.stream is not None
                            else chunk)
+            if storage_mode != "off":
+                # persist = write final per-(src, dst) partitions behind the
+                # publish boards — only store-direct templates produce them
+                # (hierarchical folds have no per-sender final block to keep);
+                # min_stages pins a network-aware sender's persist point to
+                # its *global* PART, past every local fold
+                args.storage = StorageContext(
+                    self.store, storage_mode, tenant,
+                    persist=(storage_mode == "durable"
+                             and template_id in STORE_DIRECT),
+                    min_stages=(len(self.topology.levels) - 1
+                                if template_id == "network_aware" else 0),
+                    decline=("template_not_persistable"
+                             if storage_mode == "durable"
+                             and template_id not in STORE_DIRECT else None))
 
             try:
-                if resilience == "off":
-                    res = self._run_plain(args, bufs, key, execution, executor)
-                else:
-                    res = self._run_resilient(
-                        args, bufs, key, execution, resilience, repaired,
-                        client.knob("max_retries", max_retries), executor)
-            except Exception as exc:
-                self._note(args.shuffle_id, status="failed",
-                           error=f"{type(exc).__name__}: {exc}")
-                raise
+                try:
+                    if resilience == "off":
+                        res = self._run_plain(args, bufs, key, execution,
+                                              executor)
+                    else:
+                        res = self._run_resilient(
+                            args, bufs, key, execution, resilience, repaired,
+                            client.knob("max_retries", max_retries), executor)
+                except Exception as exc:
+                    self._note(args.shuffle_id, status="failed",
+                               error=f"{type(exc).__name__}: {exc}")
+                    raise
+            finally:
+                # every exit drains + releases the shuffle's store namespace
+                # and folds its storage telemetry into the decision log
+                self._storage_epilogue(args, storage_mode)
             # ---- success notes + metrics ------------------------------------
             skew_info = None
             for d in res.decisions:
@@ -714,6 +790,32 @@ class TeShuCluster:
             root.set(engine=res.engine, attempts=res.attempts,
                      cache=cache_info["outcome"])
             return res
+
+    def _storage_epilogue(self, args: ShuffleArgs, mode: str) -> None:
+        """Drain + release one shuffle's store namespace on every exit.
+
+        The synchronous ``flush`` is the last write-behind barrier (executors
+        already flush before their after-snapshot, so ledger deltas stay
+        deterministic — this one only catches aborted runs); the per-shuffle
+        stats are journaled as a ``spill`` record when anything was flushed
+        and folded into the decision log for ``explain()``."""
+        st = args.storage
+        if st is None:
+            return
+        sid = args.shuffle_id
+        self.store.flush(sid)
+        stats = self.store.take_shuffle_stats(st.tenant, sid)
+        if stats.get("flushed_blocks"):
+            self.manager.record_spill(
+                sid, {"blocks": stats["flushed_blocks"],
+                      "bytes": stats["flushed_bytes"]},
+                tenant=st.tenant)
+        info = {"mode": mode, "persist": st.persist}
+        if st.decline is not None:
+            info["decline"] = st.decline
+        info.update({k: v for k, v in stats.items() if v})
+        self._note(sid, storage=info)
+        self.store.drop(st.tenant, sid)
 
     # ---- execution paths ------------------------------------------------------
     def _execute(self, args: ShuffleArgs, bufs: dict[int, Msgs],
@@ -833,17 +935,30 @@ class TeShuCluster:
                                                 attempt=attempt, tenant=tenant)
                     if not recover or attempt == attempts - 1:
                         raise
+                    # store-serving gate: only persisting, non-streamed runs;
+                    # a fresh balance="auto" retry re-sizes the skew
+                    # rendezvous by live participants, which served senders
+                    # would break
+                    serving = (args.storage is not None and args.storage.persist
+                               and args.stream is None
+                               and not (args.plan is None
+                                        and args.balance == "auto"))
                     rc = self.coordinator.prepare_retry(
                         sid, args.template_id, args.srcs, self.topology,
                         report, attempt + 1,
                         speculated=self._speculate(sid, participants,
                                                    attempt=attempt + 1,
                                                    enabled=True, tenant=tenant),
-                        tenant=tenant)
+                        tenant=tenant,
+                        storage=args.storage if serving else None,
+                        dsts=args.dsts,
+                        hierarchical=(args.template_id == "network_aware"))
                     recovery_info = {
                         "restarted": sorted(report.dead),
                         "resume_stages": dict(rc.resume_stages),
                     }
+                    if rc.store_served:
+                        recovery_info["store_served"] = sorted(rc.store_served)
                     restart_set = {w for w in participants
                                    if rc.resume_stages.get(w, -1) < 0} \
                         | set(report.dead)
@@ -955,6 +1070,8 @@ class TeShuService(TeShuCluster):
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  max_inflight: int = DEFAULT_MAX_INFLIGHT,
                  max_retries: int = 2,
+                 storage: str = "off",
+                 storage_dir: str | None = None,
                  tracing: bool = False,
                  span_capacity: int = 8192):
         super().__init__(topology, journal_path=journal_path, replicas=replicas,
@@ -963,7 +1080,8 @@ class TeShuService(TeShuCluster):
                          balance=balance,
                          skew_threshold=skew_threshold, streaming=streaming,
                          chunk_bytes=chunk_bytes, max_inflight=max_inflight,
-                         max_retries=max_retries, tracing=tracing,
+                         max_retries=max_retries, storage=storage,
+                         storage_dir=storage_dir, tracing=tracing,
                          span_capacity=span_capacity)
         self.tenant(DEFAULT_TENANT)
 

@@ -139,8 +139,14 @@ class StreamSession:
     def __init__(self, cluster, manager, template, shuffle_id: int,
                  srcs: Sequence[int], dsts: Sequence[int], part_fn: PartFn,
                  comb_fn: Combiner | None, chunk_plan: ChunkPlan,
-                 tenant: str = DEFAULT_TENANT):
+                 tenant: str = DEFAULT_TENANT, storage=None):
         self.cluster = cluster
+        self.storage = storage
+        # ^ storage.StorageContext when the storage knob is "spill"/"durable":
+        #   a full window spills its oldest chunk to the shuffle store instead
+        #   of folding early, so feed() can exceed aggregate memory while the
+        #   drained folds stay bitwise-identical (restores replay the exact
+        #   arrival order the fold contract requires).
         self.manager = manager
         self.template = template
         self.shuffle_id = shuffle_id
@@ -156,9 +162,15 @@ class StreamSession:
         self.chunks_fed = 0
         self.rows_fed = 0
         self.closed = False
-        # inflight window: chunks transferred but not yet folded, oldest first
-        self._inflight: collections.deque[tuple[int, dict[int, Msgs]]] = \
+        # inflight window: (chunk, src, parts) transferred but not yet folded,
+        # oldest first
+        self._inflight: collections.deque[tuple[int, int, dict[int, Msgs]]] = \
             collections.deque()
+        # chunks spilled to the store, in fold (arrival) order: always a
+        # contiguous prefix of the chunk sequence, strictly older than
+        # anything still in the window
+        self._spilled: list[tuple[int, int]] = []
+        self.spilled_chunks = 0
         self.backpressure_stalls = 0
         self.max_inflight_observed = 0
         self._participants = sorted(set(self.srcs) | set(self.dsts))
@@ -184,9 +196,26 @@ class StreamSession:
         self.acc[dst] = self.comb_fn(batch)
 
     def _fold_oldest(self) -> None:
-        c, parts = self._inflight.popleft()
+        c, _src, parts = self._inflight.popleft()
         for d in self.dsts:
             self._fold(d, parts[d], c)
+
+    def _spill_oldest(self) -> bool:
+        """Move the window's oldest chunk to the shuffle store.
+
+        Returns ``False`` when the put was declined (tenant quota) — the
+        caller then falls back to the fold-early backpressure path, so a
+        quota'd stream degrades to pre-storage behavior instead of failing.
+        """
+        c, src, parts = self._inflight[0]
+        st = self.storage
+        if not st.store.put_parts(st.tenant, self.shuffle_id, "stream", src,
+                                  parts, chunk=c):
+            return False
+        self._inflight.popleft()
+        self._spilled.append((c, src))
+        self.spilled_chunks += 1
+        return True
 
     def feed(self, bufs: dict[int, Msgs]) -> int:
         """Ingest one batch of source buffers; returns the chunks streamed.
@@ -206,6 +235,7 @@ class StreamSession:
             "stream_feed", shuffle_id=self.shuffle_id, tenant=self.tenant,
         ) if obs.tracer.enabled else None
         stalls_before = self.backpressure_stalls
+        spilled_before = self.spilled_chunks
         ledger = self.cluster.ledger
         topo = self.cluster.topology
         fed = 0
@@ -224,34 +254,42 @@ class StreamSession:
                 # max_inflight chunks, even transiently (a comb_fn running
                 # during the spill observes the invariant too)
                 if len(self._inflight) >= self.chunk_plan.max_inflight:
-                    self.backpressure_stalls += 1
-                    while len(self._inflight) >= self.chunk_plan.max_inflight:
-                        self._fold_oldest()
-                self._inflight.append((c, parts))
+                    if self.storage is None or not self._spill_oldest():
+                        self.backpressure_stalls += 1
+                        while len(self._inflight) >= self.chunk_plan.max_inflight:
+                            self._fold_oldest()
+                self._inflight.append((c, w, parts))
                 self.max_inflight_observed = max(self.max_inflight_observed,
                                                  len(self._inflight))
                 self.chunks_fed += 1
                 self.rows_fed += piece.n
                 fed += 1
         stalled = self.backpressure_stalls - stalls_before
+        spilled = self.spilled_chunks - spilled_before
         obs.metrics.counter(
             "teshu_stream_chunks_total",
             "Chunks streamed through StreamSession.feed()").inc(
                 fed, tenant=self.tenant)
+        if spilled:
+            obs.metrics.counter(
+                "teshu_storage_spilled_chunks_total",
+                "Inflight chunks spilled to the shuffle store instead of "
+                "folding early").inc(spilled, tenant=self.tenant)
         if stalled:
             obs.metrics.counter(
                 "teshu_stream_backpressure_stalls_total",
                 "feed() producer stalls (inflight window full)").inc(
                     stalled, tenant=self.tenant)
         if sp is not None:
-            sp.end(chunks=fed, stalls=stalled, inflight=len(self._inflight))
+            sp.end(chunks=fed, stalls=stalled, spilled=spilled,
+                   inflight=len(self._inflight))
         return fed
 
     def drain(self) -> dict:
         """End-of-stream: close the streamed epoch and return the result.
 
         Returns ``{"bufs": per-dst Msgs, "stats": ledger delta, "chunks": n,
-        "rows": n}``.  The session cannot be fed afterwards.
+        "rows": n, "spilled": n}``.  The session cannot be fed afterwards.
         """
         if self.closed:
             raise RuntimeError("stream session already drained")
@@ -260,9 +298,29 @@ class StreamSession:
             "stream_drain", shuffle_id=self.shuffle_id, tenant=self.tenant,
         ) if tracer.enabled else None
         self.closed = True
+        st = self.storage
+        if st is not None and self._spilled:
+            # spilled chunks are strictly older than anything still in the
+            # window: restoring and folding them first replays the exact
+            # arrival order, so the folds are bitwise-identical to a session
+            # that never spilled
+            rsp = tracer.span(
+                "spill", shuffle_id=self.shuffle_id, tenant=self.tenant,
+                phase="restore") if tracer.enabled else None
+            for c, src in self._spilled:
+                for d in self.dsts:
+                    blk = st.store.get_block(st.tenant, self.shuffle_id,
+                                             "stream", src, d, chunk=c)
+                    self._fold(d, blk if blk is not None else Msgs.empty(), c)
+            if rsp is not None:
+                rsp.end(chunks=len(self._spilled))
         while self._inflight:                 # flush the window
             self._fold_oldest()
         self.cluster.ledger.end_stream()
+        if st is not None:
+            # deterministic spill charges: drain whatever the write-behind
+            # thread has not flushed yet before taking the after-snapshot
+            st.store.flush(self.shuffle_id)
         after = self.cluster.ledger.snapshot()
         if self.manager is not None:
             for w in self._participants:
@@ -273,9 +331,13 @@ class StreamSession:
                     default=1)
         bufs = {d: (m if m is not None else Msgs.empty(width))
                 for d, m in self.acc.items()}
+        if st is not None:
+            st.store.drop(st.tenant, self.shuffle_id)
         if sp is not None:
             sp.end(chunks=self.chunks_fed, rows=self.rows_fed,
-                   stalls=self.backpressure_stalls)
+                   stalls=self.backpressure_stalls,
+                   spilled=self.spilled_chunks)
         return {"bufs": bufs,
                 "stats": self.cluster.ledger.delta(self._before, after),
-                "chunks": self.chunks_fed, "rows": self.rows_fed}
+                "chunks": self.chunks_fed, "rows": self.rows_fed,
+                "spilled": self.spilled_chunks}

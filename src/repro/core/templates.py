@@ -556,6 +556,14 @@ def run_shuffle(
     rc = args.recovery
     attempt = rc.attempt if rc is not None else 0
     speculated = rc.speculated if rc is not None else frozenset()
+    served = (frozenset(getattr(rc, "store_served", ()) or ())
+              if rc is not None else frozenset())
+    if served:
+        # store-served pure senders run nothing at all on this attempt (their
+        # partitions are read back from the shuffle store), so they record no
+        # start/end/stage — the journal evidence that they did not re-execute
+        participants = [w for w in participants
+                        if w in args.dsts or w not in served]
     may_stream = args.stream is not None and template.streamable
     before = cluster.ledger.snapshot()
 
@@ -577,7 +585,7 @@ def run_shuffle(
                                            and skew_dec.triggered)
             sender = template.stream_sender if streamed else template.sender
             receiver = template.stream_receiver if streamed else template.receiver
-            if wid in args.srcs:
+            if wid in args.srcs and wid not in served:
                 sender(ctx, bufs.get(wid, Msgs.empty()))
             if wid in args.dsts:
                 out = receiver(ctx)
@@ -608,6 +616,9 @@ def run_shuffle(
         cluster.end_shuffle(args.shuffle_id, aborted=True,
                             participants=participants)
         raise
+    if args.storage is not None and args.storage.persist:
+        # write-behind barrier: spill charges land before the after-snapshot
+        args.storage.store.flush(args.shuffle_id)
     cluster.ledger.advance_epoch()        # any non-streamed residue is a barrier
     cluster.end_shuffle(args.shuffle_id)  # free per-invocation control state
     after = cluster.ledger.snapshot()

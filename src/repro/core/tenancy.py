@@ -47,6 +47,8 @@ class TenantSpec:
     quota: int | None = None  # plan-cache namespace budget (entries);
     #                           None = inherit the cache's default capacity
     priority: float = 1.0     # scheduling weight (cross-tenant coflow fairness)
+    storage_quota: int | None = None  # shuffle-store namespace budget (bytes);
+    #                                   None = unbounded
 
     def __post_init__(self):
         if not self.tenant_id:
@@ -55,6 +57,9 @@ class TenantSpec:
             raise ValueError(f"quota must be >= 1: {self.quota}")
         if self.priority <= 0:
             raise ValueError(f"priority must be > 0: {self.priority}")
+        if self.storage_quota is not None and self.storage_quota < 1:
+            raise ValueError(
+                f"storage_quota must be >= 1: {self.storage_quota}")
 
 
 class TenantRegistry:
@@ -65,7 +70,8 @@ class TenantRegistry:
         self._tenants: dict[str, TenantSpec] = {}
 
     def register(self, tenant_id: str, *, quota: int | None = None,
-                 priority: float | None = None) -> TenantSpec:
+                 priority: float | None = None,
+                 storage_quota: int | None = None) -> TenantSpec:
         """Create-or-fetch a tenant.  Re-registering with explicit knobs
         updates them; omitted knobs keep their current values."""
         with self._lock:
@@ -73,20 +79,26 @@ class TenantRegistry:
             if spec is None:
                 spec = TenantSpec(
                     tenant_id, quota=quota,
-                    priority=1.0 if priority is None else priority)
+                    priority=1.0 if priority is None else priority,
+                    storage_quota=storage_quota)
                 self._tenants[tenant_id] = spec
             else:
-                # validate BOTH before assigning EITHER (same rules as
+                # validate ALL before assigning ANY (same rules as
                 # TenantSpec.__post_init__; the spec object is mutated in
                 # place so existing TenantClient handles observe the update)
                 if quota is not None and quota < 1:
                     raise ValueError(f"quota must be >= 1: {quota}")
                 if priority is not None and priority <= 0:
                     raise ValueError(f"priority must be > 0: {priority}")
+                if storage_quota is not None and storage_quota < 1:
+                    raise ValueError(
+                        f"storage_quota must be >= 1: {storage_quota}")
                 if quota is not None:
                     spec.quota = quota
                 if priority is not None:
                     spec.priority = priority
+                if storage_quota is not None:
+                    spec.storage_quota = storage_quota
             return spec
 
     def get(self, tenant_id: str) -> TenantSpec:

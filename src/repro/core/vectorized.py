@@ -164,6 +164,16 @@ def _run_vectorized_impl(
     resume = dict(rc.resume_stages) if rc is not None else {}
     srcs, dsts = list(args.srcs), list(args.dsts)
     participants = sorted(set(srcs) | set(dsts))
+    st = args.storage
+    persist = st is not None and st.persist
+    served = (frozenset(getattr(rc, "store_served", ()) or ())
+              if rc is not None else frozenset())
+    if served:
+        # store-served pure senders execute nothing and journal nothing —
+        # the same evidence the threaded driver leaves
+        participants = [w for w in participants
+                        if w in dsts or w not in served]
+    live = [w for w in srcs if w not in served]
     skew = plan.skew if plan.skew is not None and plan.skew.triggered else None
     # the effective partFunc mirrors the threaded ctx.part_fn: the hot-key
     # scatter wraps every PART the plan replays (it passes through untouched
@@ -207,17 +217,17 @@ def _run_vectorized_impl(
     if args.template_id == "network_aware":
         # local combine, then each hierarchical stage from the plan; on a
         # recovery attempt, workers past a stage replay its checkpoint instead
-        state = {w: (None if resume.get(w, -1) >= 0
+        state = {w: (None if w in served or resume.get(w, -1) >= 0
                      else _comb(args, ledger, w, bufs.get(w, Msgs.empty())))
                  for w in srcs}
         for li, ld in enumerate(plan.levels):
-            bad = _first_casualty(li, srcs)
+            bad = _first_casualty(li, live)
             if bad is not None:
                 _abort(*bad, ld.level)
-            for w in srcs:
+            for w in live:
                 if resume.get(w, -1) == li:
                     state[w] = rc.store.load(sid, w, li)
-            execute = [w for w in srcs if resume.get(w, -1) < li]
+            execute = [w for w in live if resume.get(w, -1) < li]
             if ld.eff_cost.beneficial and execute:
                 tracer = cluster.obs.tracer
                 stage_sp = tracer.span(
@@ -257,20 +267,49 @@ def _run_vectorized_impl(
 
     # faults that mature at (or before) the global exchange, incl. dead
     # receivers — static templates reach here with zero completed stages
-    bad = _first_casualty(len(plan.levels), srcs)
+    bad = _first_casualty(len(plan.levels), live)
     if bad is None:
         dead_dst = next((d for d in dsts if d in cluster.failed_workers), None)
         if dead_dst is not None:
             bad = (dead_dst, "is failed")
     if bad is not None:
+        if persist:
+            # mirror the threaded driver: surviving senders' global PARTs
+            # complete (and persist) even though the exchange aborts, so the
+            # retry's store-served set is identical on both executors
+            n_stages = len(plan.levels)
+            for w in live:
+                if w == bad[0] or w in cluster.failed_workers:
+                    continue
+                fi = cluster.fault_injections.get(w)
+                if (fi is not None and fi.after_chunk is None
+                        and n_stages > fi.after_stage):
+                    continue
+                st.store.put_parts(st.tenant, sid, "global", w,
+                                   partition(state[w], dsts, eff_part))
         _abort(*bad, "global")
 
     # ---- global stage ------------------------------------------------------
-    parts_by_src = {w: partition(state[w], dsts, eff_part) for w in srcs}
+    parts_by_src = {}
+    for w in srcs:
+        if w in served:
+            # store-backed replay: this sender's persisted partitions, read
+            # back byte-identically (restore charged by the store; no wire
+            # transfer and no re-execution)
+            loaded = {}
+            for d in dsts:
+                blk = st.store.get_block(st.tenant, sid, "global", w, d)
+                loaded[d] = blk if blk is not None else Msgs.empty()
+            parts_by_src[w] = loaded
+        else:
+            parts_by_src[w] = partition(state[w], dsts, eff_part)
+            if persist:
+                st.store.put_parts(st.tenant, sid, "global", w,
+                                   parts_by_src[w])
 
     if args.template_id in ("vanilla_push", "network_aware"):
-        # push: the sender pays the transfer
-        for w in srcs:
+        # push: the sender pays the transfer (served senders send nothing)
+        for w in live:
             ledger.charge_transfers(
                 w,
                 np.fromiter((topo.crossing_level(w, d) for d in dsts),
@@ -294,13 +333,16 @@ def _run_vectorized_impl(
     for d in dsts:
         got = [parts_by_src[s][d] for s in fetch_order[d]]
         if charge_receiver:
+            # pull mode: the receiver pays — but a served sender's partition
+            # came from the store, not the wire, so it is never charged
+            chg = [s for s in fetch_order[d] if s not in served]
             ledger.charge_transfers(
                 d,
-                np.fromiter((topo.crossing_level(s, d) for s in fetch_order[d]),
-                            dtype=np.int64, count=len(got)),
-                np.fromiter((g.nbytes for g in got), dtype=np.int64,
-                            count=len(got)),
-                dsts=np.full(len(got), d, dtype=np.int64),
+                np.fromiter((topo.crossing_level(s, d) for s in chg),
+                            dtype=np.int64, count=len(chg)),
+                np.fromiter((parts_by_src[s][d].nbytes for s in chg),
+                            dtype=np.int64, count=len(chg)),
+                dsts=np.full(len(chg), d, dtype=np.int64),
                 tenant=args.tenant)
         out[d] = _comb(args, ledger, d, got)
 
@@ -327,6 +369,9 @@ def _run_vectorized_impl(
             out[owner] = _comb(args, ledger, owner,
                                Msgs.concat([out[owner]] + got))
 
+    if persist:
+        # write-behind barrier: spill charges land before the after-snapshot
+        st.store.flush(sid)
     ledger.advance_epoch()                # shuffle completion is a barrier
     if rc is not None:
         cluster.end_shuffle(sid)          # symmetric with the threaded driver

@@ -34,6 +34,8 @@ def diagnose_shuffle(mgr: ShuffleManager, sid: int,
     failures = [r for r in recs if r.kind == "failure"]
     recoveries = [r for r in recs if r.kind == "recovery"]
     speculations = [r for r in recs if r.kind == "speculation"]
+    spills = [r for r in recs if r.kind == "spill"]
+    restores = [r for r in recs if r.kind == "restore"]
     attempts = max((r.attempt for r in recs), default=0) + 1
     template = next((r.template_id for r in recs if r.template_id), None)
     tenant = next((r.tenant for r in recs), None)
@@ -63,6 +65,8 @@ def diagnose_shuffle(mgr: ShuffleManager, sid: int,
         "failures": [r.info for r in failures if r.info],
         "recoveries": [r.info for r in recoveries if r.info],
         "speculations": [r.info for r in speculations if r.info],
+        "spills": [r.info for r in spills if r.info],
+        "restores": [r.info for r in restores if r.info],
         "journal_versions": sorted({r.version for r in recs}),
     }
 
@@ -105,6 +109,17 @@ def render(reports: list[dict]) -> str:
             out.append(f"  recovery: {rec}")
         for s in r["speculations"]:
             out.append(f"  speculation: {s}")
+        for s in r["spills"]:
+            out.append(f"  spill: {s['blocks']} block(s) / {s['bytes']} bytes "
+                       "written behind to the shuffle store")
+        for s in r["restores"]:
+            served = s.get("served", [])
+            restart = s.get("restart_set", [])
+            out.append(
+                f"  restore: {len(served)} sender(s) served from the store "
+                f"({s.get('blocks', 0)} block(s) / {s.get('bytes', 0)} bytes)"
+                f" vs {len(restart)} re-executed: served={served} "
+                f"re-executed={restart}")
     return "\n".join(out)
 
 

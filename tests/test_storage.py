@@ -1,0 +1,487 @@
+"""Durable shuffle storage: the write-behind spill store (PR 8).
+
+Covers, per the acceptance criteria:
+
+* the :class:`repro.core.storage.ShuffleStore` unit surface — serialization
+  round trips, staging vs flushed backends, atomic per-tenant quotas,
+  namespace teardown;
+* **recovery-from-store**: with ``storage="durable"`` a mid-stage worker kill
+  recovers by *reading* the surviving senders' persisted PART outputs — the
+  journal shows no re-execution of surviving senders — byte-identical across
+  the threaded / vectorized / jax executors, fresh and cache-hit;
+* **streaming spill**: a session whose inflight bytes exceed ``max_inflight``
+  completes via spill-to-store with bitwise-identical folds;
+* the ledger's ``spill_bytes`` / ``restore_bytes`` lanes stay out of the
+  exact byte-conformance keys;
+* satellite regressions: O(own-keys) ``end_shuffle`` teardown, journal
+  schema v2 with a pre-storage migration fixture, and direct
+  CheckpointStore / StreamCheckpoint unit coverage.
+"""
+import dataclasses
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from conformance import (EXECUTORS, assert_identical, copy_bufs, make_bufs,
+                        make_topology, service_for)
+from repro.core import Msgs, SUM, TeShuCluster, TeShuService
+from repro.core.manager import JOURNAL_VERSION, ShuffleManager, ShuffleRecord
+from repro.core.resilience import CheckpointStore
+from repro.core.storage import (BlockKey, LocalDirBackend, MemoryBackend,
+                                ShuffleStore, StorageContext, deserialize_msgs,
+                                serialize_msgs)
+from repro.launch import doctor
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+SRCS = [0, 1, 2, 3]
+DSTS = [4, 5, 6, 7]
+
+
+def _bufs(seed=0, n=240, width=2):
+    rng = np.random.default_rng(seed)
+    return {w: Msgs(rng.integers(0, 500, n + 20 * w).astype(np.int64),
+                    rng.random((n + 20 * w, width))) for w in SRCS}
+
+
+# ---------------------------------------------------------------------------
+# serialization + backends
+# ---------------------------------------------------------------------------
+
+def test_msgs_serialization_round_trips_bitwise():
+    rng = np.random.default_rng(3)
+    m = Msgs(rng.integers(0, 99, 57).astype(np.int64), rng.random((57, 3)))
+    back = deserialize_msgs(serialize_msgs(m))
+    np.testing.assert_array_equal(m.keys, back.keys)
+    np.testing.assert_array_equal(m.vals, back.vals)
+    # empty buffers keep their width through the wire
+    e = deserialize_msgs(serialize_msgs(Msgs.empty(width=4)))
+    assert e.n == 0 and e.width == 4
+
+
+@pytest.mark.parametrize("backend_kind", ["memory", "dir"])
+def test_backend_put_get_delete(tmp_path, backend_kind):
+    be = (MemoryBackend() if backend_kind == "memory"
+          else LocalDirBackend(str(tmp_path / "store")))
+    k1 = BlockKey("a/b tenant", 7, "global", 0, 4)
+    k2 = BlockKey("a/b tenant", 7, "stream", 1, 5, chunk=3)
+    be.put(k1, b"xyz")
+    be.put(k2, b"pq")
+    assert be.get(k1) == b"xyz" and be.get(k2) == b"pq"
+    assert be.get(BlockKey("a/b tenant", 7, "global", 0, 5)) is None
+    be.delete_shuffle("a/b tenant", 7)
+    assert be.get(k1) is None and be.get(k2) is None
+    be.close()
+
+
+# ---------------------------------------------------------------------------
+# the store: staging, write-behind, quotas, teardown
+# ---------------------------------------------------------------------------
+
+def test_store_put_get_flush_and_drop():
+    store = ShuffleStore(MemoryBackend(), write_behind=False)
+    rng = np.random.default_rng(1)
+    parts = {d: Msgs(rng.integers(0, 9, 10).astype(np.int64),
+                     rng.random((10, 2))) for d in DSTS}
+    assert store.put_parts("t", 5, "global", 0, parts)
+    # staged blocks are readable before any flush
+    got = store.get_block("t", 5, "global", 0, 4)
+    np.testing.assert_array_equal(got.keys, parts[4].keys)
+    assert store.has_block("t", 5, "global", 0, 7)
+    assert store.block_bytes("t", 5, "global", 0, 7) > 0
+    assert store.get_block("t", 5, "global", 1, 4) is None
+    n = store.flush(5)
+    assert n == len(DSTS)
+    # flushed blocks still read back identically (now from the backend)
+    got2 = store.get_block("t", 5, "global", 0, 4)
+    np.testing.assert_array_equal(got2.vals, parts[4].vals)
+    st = store.stats()
+    assert st["flushed_blocks"] == len(DSTS) and st["staged_blocks"] == 0
+    assert store.usage("t") > 0
+    store.drop("t", 5)
+    assert store.usage("t") == 0
+    assert store.get_block("t", 5, "global", 0, 4) is None
+    store.close()
+
+
+def test_store_quota_is_atomic_all_or_none():
+    store = ShuffleStore(MemoryBackend(), write_behind=False)
+    rng = np.random.default_rng(2)
+    parts = {d: Msgs(rng.integers(0, 9, 50).astype(np.int64),
+                     rng.random((50, 2))) for d in DSTS}
+    total = sum(len(serialize_msgs(m)) for m in parts.values())
+    store.set_quota("t", total - 1)
+    assert not store.put_parts("t", 5, "global", 0, parts)
+    # nothing staged: the put is all-or-none
+    assert store.usage("t") == 0
+    assert all(store.get_block("t", 5, "global", 0, d) is None for d in DSTS)
+    assert store.shuffle_stats("t", 5)["decline_reason"] == "quota_exceeded"
+    store.set_quota("t", total)
+    assert store.put_parts("t", 5, "global", 0, parts)
+    assert store.usage("t") == total
+    # overwrites are quota-checked on the delta, not the gross size
+    assert store.put_parts("t", 5, "global", 0, parts)
+    assert store.usage("t") == total
+    # ...and another tenant is unaffected by "t"'s quota
+    assert store.put_parts("u", 5, "global", 0, parts)
+    store.close()
+
+
+def test_store_discard_staged_drops_only_that_sender():
+    store = ShuffleStore(MemoryBackend(), write_behind=False)
+    m = {4: Msgs(np.arange(3, dtype=np.int64), np.ones((3, 1)))}
+    store.put_parts("t", 9, "global", 0, m)
+    store.put_parts("t", 9, "global", 1, m)
+    store.flush(9)                       # worker 0's block is now durable
+    store.put_parts("t", 9, "global", 0, m)   # re-staged (overwrite pending)
+    assert store.discard_staged("t", 9, 1) == 0   # already flushed? no: 1 is
+    # flushed too — only *staged* blocks are discarded
+    assert store.discard_staged("t", 9, 0) == 1
+    # the durable version written before the discard still serves
+    assert store.get_block("t", 9, "global", 0, 4) is not None
+    store.close()
+
+
+def test_write_behind_flusher_lands_blocks_without_sync_flush():
+    store = ShuffleStore(MemoryBackend(), write_behind=True)
+    m = {4: Msgs(np.arange(8, dtype=np.int64), np.ones((8, 2)))}
+    store.put_parts("t", 3, "global", 0, m)
+    # flush() doubles as the barrier for the background thread
+    store.flush(3)
+    assert store.stats()["staged_blocks"] == 0
+    assert store.backend.get(BlockKey("t", 3, "global", 0, 4)) is not None
+    store.close()
+
+
+def test_storage_knob_validation():
+    with pytest.raises(ValueError):
+        TeShuCluster(make_topology(), storage="bogus")
+    cl = TeShuCluster(make_topology())
+    with pytest.raises(ValueError):
+        cl.tenant("a", storage="bogus")
+    t = cl.tenant("a")
+    with pytest.raises(ValueError):
+        t.shuffle("vanilla_push", _bufs(), SRCS, DSTS, storage="bogus")
+    with pytest.raises(ValueError):
+        cl.tenant("b", storage_quota=0)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: durable recovery serves surviving senders from the store
+# ---------------------------------------------------------------------------
+
+def _run_durable(executor, *, fault, prime=False):
+    sv = service_for(executor, resilience="recover", storage="durable")
+    bufs = _bufs()
+    if prime:
+        sv.shuffle("vanilla_push", copy_bufs(bufs), SRCS, DSTS, comb_fn=SUM)
+    if fault:
+        sv.inject_fault(3, after_stage=-1)
+    res = sv.shuffle("vanilla_push", copy_bufs(bufs), SRCS, DSTS, comb_fn=SUM)
+    return sv, res
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+@pytest.mark.parametrize("prime", [False, True], ids=["fresh", "cache_hit"])
+def test_durable_recovery_reads_survivors_from_store(executor, prime):
+    _, base = _run_durable(executor, fault=False, prime=prime)
+    sv, res = _run_durable(executor, fault=True, prime=prime)
+    assert res.attempts == 2
+    assert res.recovery["store_served"] == [0, 1, 2]
+    assert_identical(res.bufs, base.bufs)
+    # journal evidence: served senders ran NOTHING on the retry — no start
+    # (hence no stage/end) records at attempt 1; only the dead sender and
+    # the receivers re-ran
+    sid = 2 if prime else 1
+    starts1 = sorted({r.wid for r in sv.manager.records(sid, "start")
+                      if r.attempt == 1})
+    assert starts1 == [3] + DSTS
+    restores = [r for r in sv.manager.records(sid, "restore")]
+    assert restores and restores[0].info["served"] == [0, 1, 2]
+    assert restores[0].info["restart_set"] == [3]
+
+
+def test_durable_recovery_outputs_identical_across_executors():
+    outs = []
+    for ex in EXECUTORS:
+        _, res = _run_durable(ex, fault=True, prime=True)
+        outs.append(res.bufs)
+    assert_identical(outs[0], outs[1])
+    assert_identical(outs[0], outs[2])
+
+
+def test_jax_declines_persisting_runs_with_reason():
+    sv = service_for("jax", storage="durable")     # no recovery context
+    bufs = _bufs()
+    sv.shuffle("vanilla_push", copy_bufs(bufs), SRCS, DSTS, comb_fn=SUM)
+    res = sv.shuffle("vanilla_push", copy_bufs(bufs), SRCS, DSTS, comb_fn=SUM)
+    # the lowered kernel has no store hook: durable replay must land on the
+    # byte-identical vectorized rung with a machine-checkable reason
+    assert res.engine == "vectorized"
+    assert res.fallback_reason == "storage_persist"
+    # spill mode has no persistence contract: the jitted plane still runs it
+    sv2 = service_for("jax", storage="spill")
+    sv2.shuffle("vanilla_push", copy_bufs(bufs), SRCS, DSTS, comb_fn=SUM)
+    hit = sv2.shuffle("vanilla_push", copy_bufs(bufs), SRCS, DSTS, comb_fn=SUM)
+    assert hit.engine == "jax"
+    assert_identical(hit.bufs, res.bufs)
+
+
+def test_spill_lanes_stay_out_of_exact_conformance_stats():
+    _, off = _run_durable("threaded", fault=False)
+    sv, on = _run_durable("threaded", fault=False)
+    assert on.stats.get("spill_bytes", 0) > 0          # durable run spilled
+    assert on.stats["total_bytes"] == off.stats["total_bytes"]
+    assert on.stats["recv_bytes_per_worker"] == off.stats["recv_bytes_per_worker"]
+    # the epilogue dropped the namespace: the store holds nothing afterwards
+    assert sv.store.usage("default") == 0
+
+
+def test_durable_non_persistable_template_declines_cleanly():
+    sv = service_for("threaded", storage="durable")
+    workers = list(range(8))
+    bufs = make_bufs(workers, "uniform", n=200)
+    res = sv.shuffle("bruck", copy_bufs(bufs), workers, workers, comb_fn=SUM)
+    base = service_for("threaded").shuffle(
+        "bruck", copy_bufs(bufs), workers, workers, comb_fn=SUM)
+    assert_identical(res.bufs, base.bufs)
+    rep = sv.explain(1)
+    assert rep.storage["decline"] == "template_not_persistable"
+    assert any("no final per-(src, dst) partitions" in w for w in rep.why())
+
+
+def test_storage_quota_decline_surfaces_in_explain():
+    cl = TeShuCluster(make_topology(), resilience="recover", storage="durable")
+    t = cl.tenant("tiny", storage_quota=8)       # nothing fits
+    res = t.shuffle("vanilla_push", _bufs(), SRCS, DSTS, comb_fn=SUM)
+    base = TeShuCluster(make_topology()).tenant("tiny").shuffle(
+        "vanilla_push", _bufs(), SRCS, DSTS, comb_fn=SUM)
+    assert_identical(res.bufs, base.bufs)        # declines never change bytes
+    rep = cl.explain(1)
+    assert rep.storage["decline_reason"] == "quota_exceeded"
+    assert any("storage quota" in w for w in rep.why())
+
+
+def test_storage_metrics_families_exported():
+    sv, _ = _run_durable("threaded", fault=True, prime=False)
+    snap = sv.metrics()
+    assert "teshu_storage_puts_total" in snap
+    assert "teshu_storage_flushed_bytes_total" in snap
+    assert "teshu_storage_restored_bytes_total" in snap
+    assert "teshu_spill_bytes_total" in snap
+
+
+def test_doctor_reports_store_served_vs_reexecuted(tmp_path):
+    journal = str(tmp_path / "journal.jsonl")
+    sv = service_for("threaded", journal_path=journal, resilience="recover",
+                     storage="durable")
+    sv.inject_fault(3, after_stage=-1)
+    res = sv.shuffle("vanilla_push", _bufs(), SRCS, DSTS, comb_fn=SUM)
+    assert res.attempts == 2
+    reports = doctor.diagnose(journal)
+    assert reports[0]["restores"][0]["served"] == [0, 1, 2]
+    assert reports[0]["spills"]                      # write-behind journaled
+    text = doctor.render(reports)
+    assert "3 sender(s) served from the store" in text
+    assert "re-executed=[3]" in text
+
+
+# ---------------------------------------------------------------------------
+# streaming: a full window spills instead of folding early
+# ---------------------------------------------------------------------------
+
+def _stream(storage, *, quota=None, chunks=12, n=300):
+    cl = TeShuCluster(make_topology(), storage=storage, chunk_bytes=2048,
+                      max_inflight=2)
+    t = (cl.tenant("app", storage_quota=quota) if quota is not None
+         else cl.tenant("app"))
+    s = t.open_stream("vanilla_push", SRCS, DSTS, comb_fn=SUM)
+    rng = np.random.default_rng(7)
+    for i in range(chunks):
+        w = SRCS[i % len(SRCS)]
+        s.feed({w: Msgs(rng.integers(0, 500, n).astype(np.int64),
+                        rng.random((n, 2)))})
+    return s.drain(), cl
+
+
+def test_stream_spill_exceeds_window_with_identical_folds():
+    off, _ = _stream("off")
+    sp, cl = _stream("spill")
+    assert sp["spilled"] > 0                 # inflight exceeded max_inflight
+    assert sp["chunks"] == off["chunks"]
+    assert_identical(sp["bufs"], off["bufs"])
+    # spill/restore are charged on their own lanes; transfer bytes identical
+    assert sp["stats"]["spill_bytes"] > 0
+    assert sp["stats"]["spill_bytes"] == sp["stats"]["restore_bytes"]
+    assert sp["stats"]["total_bytes"] == off["stats"]["total_bytes"]
+    # modelled transfer time is untouched by spilling
+    assert sp["stats"]["modelled_time_s"] == off["stats"]["modelled_time_s"]
+    # drain() released the stream's namespace
+    assert cl.store.usage("app") == 0
+
+
+def test_stream_quota_decline_degrades_to_fold_early():
+    off, _ = _stream("off")
+    sp, cl = _stream("spill", quota=1)       # every put declines
+    assert sp["spilled"] == 0
+    assert_identical(sp["bufs"], off["bufs"])
+    assert cl.store.stats()["declines"] > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: end_shuffle teardown is indexed per shuffle
+# ---------------------------------------------------------------------------
+
+def test_end_shuffle_clears_publish_boards_across_many_tenants():
+    cl = TeShuCluster(make_topology())
+    for i in range(12):
+        t = cl.tenant(f"tenant-{i}")
+        t.shuffle("vanilla_push", _bufs(seed=i), SRCS, DSTS, comb_fn=SUM)
+    lc = cl.cluster
+    assert lc._published == {} and lc._published_ev == {}
+    assert lc._pub_index == {} and lc._rv_index == {}
+    assert lc._rendezvous == {}
+
+
+def test_end_shuffle_leaves_other_shuffles_keys_alone():
+    cl = TeShuCluster(make_topology())
+    lc = cl.cluster
+    lc.publish((101, 0), "mine")
+    lc.publish((202, 0), "other")
+    lc.end_shuffle(101)
+    assert (101, 0) not in lc._published
+    assert lc._published[(202, 0)] == "other"
+    assert 202 in lc._pub_index
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: journal schema v2 + pre-storage migration
+# ---------------------------------------------------------------------------
+
+def test_journal_version_is_2_with_storage_kinds():
+    assert JOURNAL_VERSION == 2
+    rec = ShuffleRecord(-1, 4, "", "spill", 1.0, info={"blocks": 2,
+                                                       "bytes": 99})
+    d = json.loads(rec.to_json())
+    assert d["v"] == 2 and d["kind"] == "spill"
+    back = ShuffleRecord.from_json(rec.to_json())
+    assert back.kind == "spill" and back.info == {"blocks": 2, "bytes": 99}
+
+
+def test_pre_storage_journal_migrates(tmp_path):
+    fixture = os.path.join(FIXTURES, "pre_storage_journal.jsonl")
+    mgr = ShuffleManager.recover(fixture)
+    recs = mgr.records()
+    assert len(recs) == 8
+    assert {r.version for r in recs} == {1}      # v1 provenance preserved
+    assert mgr.progress(1) == {"started": [0, 1], "finished": [0, 1],
+                               "pending": []}
+    assert mgr.recovery_records(2)[0].info["restarted"] == [3]
+    # a mixed journal — pre-storage lines plus v2 spill/restore records —
+    # replays cleanly end to end
+    mixed = tmp_path / "mixed.jsonl"
+    lines = open(fixture).read().splitlines()
+    lines.append(json.dumps(
+        {"wid": -1, "shuffle_id": 3, "template_id": "", "kind": "spill",
+         "ts": 12.0, "v": 2, "tenant": "ml", "info": {"blocks": 4,
+                                                      "bytes": 512}}))
+    lines.append(json.dumps(
+        {"wid": -1, "shuffle_id": 3, "template_id": "", "kind": "restore",
+         "ts": 12.1, "v": 2, "attempt": 1, "tenant": "ml",
+         "info": {"served": [0, 1], "blocks": 8, "bytes": 1024,
+                  "restart_set": [2]}}))
+    mixed.write_text("\n".join(lines) + "\n")
+    mgr2 = ShuffleManager.recover(str(mixed))
+    spills = [r for r in mgr2.records(3) if r.kind == "spill"]
+    restores = [r for r in mgr2.records(3) if r.kind == "restore"]
+    assert spills[0].info["blocks"] == 4
+    assert restores[0].info["served"] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: CheckpointStore / StreamCheckpoint direct unit coverage
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_store_copies_and_scopes_by_shuffle():
+    cs = CheckpointStore()
+    m = Msgs(np.arange(4, dtype=np.int64), np.ones((4, 2)))
+    cs.save(1, 0, 0, "server", m)
+    m.vals[:] = -1                                  # caller aliasing
+    loaded = cs.load(1, 0, 0)
+    assert float(loaded.vals.sum()) == 8.0          # snapshot unaffected
+    loaded.vals[:] = -1
+    assert float(cs.load(1, 0, 0).vals.sum()) == 8.0   # loads are copies too
+    assert cs.load(2, 0, 0) is None                 # shuffle-scoped
+    assert cs.last_stage(1, 0) == 0 and cs.last_stage(1, 9) == -1
+    cs.save(1, 0, 1, "rack", m)
+    assert cs.stages(1) == {0: 1}
+    st = cs.stats()
+    assert st["shuffles"] == 1 and st["checkpoints"] == 2
+    cs.clear(1)
+    assert cs.load(1, 0, 0) is None and cs.stats()["checkpoints"] == 0
+
+
+def test_stream_checkpoint_cursor_round_trip():
+    cs = CheckpointStore()
+    acc = Msgs(np.arange(3, dtype=np.int64), np.zeros((3, 1)))
+    cs.save_stream(5, 4, "global", peer_idx=2, folded=7, pre_bytes=99,
+                   acc=acc)
+    acc.vals[:] = 1.0
+    ck = cs.load_stream(5, 4, "global")
+    assert (ck.peer_idx, ck.folded, ck.pre_bytes) == (2, 7, 99)
+    assert float(ck.acc.vals.sum()) == 0.0          # snapshot isolated
+    assert cs.load_stream(5, 4, "rack") is None     # tag-scoped
+    assert cs.load_stream(6, 4, "global") is None   # shuffle-scoped
+    cs.save_stream(5, 4, "global", peer_idx=3, folded=0, pre_bytes=0,
+                   acc=None)
+    assert cs.load_stream(5, 4, "global").acc is None
+    assert cs.stats()["stream_checkpoints"] == 1
+    cs.clear(5)
+    assert cs.load_stream(5, 4, "global") is None
+
+
+# ---------------------------------------------------------------------------
+# concurrency: parallel tenants through one store
+# ---------------------------------------------------------------------------
+
+def test_parallel_tenants_share_the_store_safely():
+    store = ShuffleStore(MemoryBackend(), write_behind=True)
+    errs = []
+
+    def worker(tenant, sid):
+        try:
+            rng = np.random.default_rng(sid)
+            for src in range(4):
+                parts = {d: Msgs(rng.integers(0, 9, 20).astype(np.int64),
+                                 rng.random((20, 1))) for d in DSTS}
+                store.put_parts(tenant, sid, "global", src, parts)
+            store.flush(sid)
+            for src in range(4):
+                for d in DSTS:
+                    if store.get_block(tenant, sid, "global", src, d) is None:
+                        raise AssertionError((tenant, sid, src, d))
+            store.drop(tenant, sid)
+            if store.usage(tenant) != 0:
+                raise AssertionError(f"{tenant} usage leak")
+        except Exception as e:  # noqa: BLE001 — surfaced to the main thread
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(f"t{i}", i))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert store.stats()["staged_blocks"] == 0
+    store.close()
+
+
+def test_storage_context_is_frozen_and_defaults_off():
+    ctx = StorageContext(None, "spill", "t")
+    assert not ctx.persist and ctx.min_stages == 0 and ctx.decline is None
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ctx.persist = True
