@@ -4,7 +4,8 @@ the plan-cache / vectorization benchmark (beyond-paper: repeated shuffles),
 the skew-rebalance benchmark (``BENCH_skew.json``, machine-readable), the
 streaming benchmark (``BENCH_streaming.json``: barrier vs chunk-pipelined
 modelled time on both executors), the jitted-replay benchmark
-(``BENCH_jaxplan.json``: fresh vs vectorized-hit vs jax-hit) and the
+(``BENCH_jaxplan.json``: fresh vs vectorized-hit vs jax-hit on all six
+templates, plus serial-vs-batched multi-tenant dispatch) and the
 durable-storage benchmark (``BENCH_storage.json``: off vs spill vs durable
 overhead plus recovery-from-store vs naive re-execution)."""
 from __future__ import annotations
@@ -371,34 +372,45 @@ def multitenant_profile(*, smoke: bool = False,
 
 def jaxplan_profile(iters: int = 4, *, smoke: bool = False,
                     json_path: str | None = None) -> CsvOut:
-    """Jitted plan replay: fresh vs vectorized-hit vs jax-hit.
+    """Jitted plan replay: fresh vs vectorized-hit vs jax-hit, all six
+    templates, plus batched multi-tenant dispatch.
 
     Three paths through the *same* (template, topology, workload) key:
 
     * ``fresh``          — paper-faithful re-instantiation every call;
-    * ``vectorized_hit`` — plan-cache hit on the batched-numpy data plane;
-    * ``jax_hit``        — plan-cache hit lowered to one jitted ``lax.scan``
-      program (``executor="jax"``).
+    * ``vectorized_hit`` — plan-cache hit on the batched-numpy data plane
+      (falls to ``threaded`` on the irregular bruck / two_level routes,
+      which only the jitted plane lowers);
+    * ``jax_hit``        — plan-cache hit lowered to one jitted program
+      (``executor="jax"``) — every template, including bruck / two_level.
 
-    Outputs are asserted byte-identical (sorted key order) across all three
-    paths before anything is reported, ``traces`` records jit-cache growth
-    *during the timed loop* (must be 0: one trace per plan shape, paid at
+    Then two batched-dispatch rows on ``vanilla_push``:
+
+    * ``serial_batch``   — four same-signature tenants replayed one by one;
+    * ``batched``        — the same four submitted through the admission
+      queue and executed as ONE vmapped dispatch by ``run_pending()``.
+
+    Outputs are asserted byte-identical across paths before anything is
+    reported, ``traces`` records jit-cache growth *during the timed loop*
+    (must be 0: one trace per plan shape — and one per batch width — paid at
     warmup), and ``engine`` is what :class:`ShuffleResult` reports actually
     ran.  When ``json_path`` is set the rows are written machine-readable
     (``BENCH_jaxplan.json``), consumed by the CI smoke job, which gates on
-    byte-identity, zero steady-state retraces, and jax-hit modelled cost no
-    worse than the vectorized hit.
+    byte-identity, zero steady-state retraces, jax-hit modelled cost no
+    worse than the vectorized hit on every template, and batched modelled
+    cost strictly below the serial jax-hit pass.
     """
     out = CsvOut("jaxplan_profile",
                  ["template", "path", "engine", "identical", "traces",
                   "modelled_ms", "wall_ms", "total_mb", "cache_hits"])
-    topo = datacenter(4, 2, 2, oversubscription=4.0)
+    topo = datacenter(4, 2, 2, oversubscription=4.0)   # 16 = 4x4: square grid
     nw = topo.num_workers
     workers = list(range(nw))
     n_per = 2_000 if smoke else 20_000
     loops = 2 if smoke else iters
     rows = []
-    for tid in ("vanilla_push", "coordinated", "network_aware"):
+    for tid in ("vanilla_push", "vanilla_pull", "coordinated", "bruck",
+                "two_level", "network_aware"):
         base = zipf_shards(nw, n_per, 5_000, alpha=0.0, seed=13)
         ref = None
         for path, kw in (
@@ -442,6 +454,64 @@ def jaxplan_profile(iters: int = 4, *, smoke: bool = False,
                 cache_hits=svc.cache_stats()["hits"])
             rows.append(row)
             out.add(**row)
+
+    # ---- batched multi-tenant dispatch: 4 same-signature wfair tenants ----
+    base = zipf_shards(nw, n_per, 5_000, alpha=0.0, seed=13)
+    cl = TeShuCluster(topo, execution="auto", executor="jax")
+    tenants = [cl.tenant(f"t{i}") for i in range(4)]
+
+    def batch_pass(batched):
+        t0 = time.perf_counter()
+        if batched:
+            tickets = [t.submit("vanilla_push",
+                                {w: m.copy() for w, m in base.items()},
+                                workers, workers, comb_fn=SUM, rate=0.01)
+                       for t in tenants]
+            res = cl.run_pending()
+            outs = [res[tk] for tk in tickets]
+        else:
+            outs = [t.shuffle("vanilla_push",
+                              {w: m.copy() for w, m in base.items()},
+                              workers, workers, comb_fn=SUM, rate=0.01)
+                    for t in tenants]
+        return time.perf_counter() - t0, outs
+
+    for t in tenants:
+        batch_pass(False)        # warm: plan (miss) + the one solo jit trace
+    batch_pass(True)             # warm: the one stacked (vmapped) trace
+    serial_out = None
+    for path, batched in (("serial_batch", False), ("batched", True)):
+        traces_before = replay_cache_size()
+        m0 = cl.cluster.ledger.snapshot()
+        runs = [batch_pass(batched) for _ in range(loops)]
+        m1 = cl.cluster.ledger.snapshot()
+        outs = runs[-1][1]
+        engines = {r.engine for r in outs}
+        assert engines == {"jax"}, (path, engines)
+        assert batched == all(r.batched for r in outs), path
+        identical = True
+        if serial_out is None:
+            serial_out = [r.bufs for r in outs]
+        else:                    # batched output == serial, physical order
+            for ref_b, r in zip(serial_out, outs):
+                for d in ref_b:
+                    identical = (identical
+                                 and np.array_equal(ref_b[d].keys,
+                                                    r.bufs[d].keys)
+                                 and np.array_equal(ref_b[d].vals,
+                                                    r.bufs[d].vals))
+            assert identical, "batched dispatch diverged from serial"
+        row = dict(
+            template="vanilla_push", path=path, engine="jax",
+            identical=identical,
+            traces=replay_cache_size() - traces_before,
+            modelled_ms=(m1["modelled_time_s"] - m0["modelled_time_s"])
+            / loops * 1e3,
+            wall_ms=float(np.median([t for t, _ in runs])) * 1e3,
+            total_mb=(m1["total_bytes"] - m0["total_bytes"]) / loops / 1e6,
+            cache_hits=sum(t.cache_stats()["hits"] for t in tenants))
+        rows.append(row)
+        out.add(**row)
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"meta": {"bench": "jaxplan_profile", "workers": nw,

@@ -33,12 +33,33 @@ becomes a whole-array operation:
   dead and sort to the end; row capacity stays ``N`` throughout, keeping
   every shape static.
 
-The program also returns per-level ``[nworkers, nworkers]`` routing-count
-matrices; the Python wrapper converts row counts to wire bytes and replays
-the vectorized executor's exact :class:`~repro.core.primitives.CostLedger`
-charge sequence (same epochs, same per-worker transfer/combine charges,
-same per-destination recv accounting), so modelled bytes and costs are
-identical across all three executors.
+Irregular templates lower too.  ``bruck``'s log-round piece routing is
+simulated symbolically at lower time (pieces move whole and never split, so
+the final arrival order per destination is a static permutation of
+origins): the simulation yields the ``global_rank`` fold table the generic
+program consumes plus per-round wire flows the ledger replays.
+``two_level`` runs a dedicated three-phase traced program (group-local
+exchange, transpose handoff, final exchange) whose sorts replay the grid's
+exact mailbox concat orders.  Skew-rebalanced plans freeze the hot-key
+scatter (:func:`repro.core.skew.scatter_part_fn`'s occurrence-cycled share
+slots) into the trace as static tables — a per-row occurrence index among
+same-(owner, key) rows reproduces the positional cycle — and the final
+owner merge replays Python-side, mirroring the vectorized executor.
+
+The program also returns routing-count matrices; the Python wrapper
+converts row counts to wire bytes and replays the reference executors'
+exact :class:`~repro.core.primitives.CostLedger` charge sequence (same
+epochs, same per-worker transfer/combine charges, same per-destination
+recv accounting), so modelled bytes and costs are identical across all
+three executors.
+
+Batched dispatch: :func:`prepare_batch` stacks same-signature submissions
+(same spec, shapes, and routing tables — the admission batcher groups
+them) into ONE vmapped jit dispatch; each member's replay then consumes
+its slice and charges its own tenant's ledger lanes exactly as a serial
+run would, with the epoch barrier deferred until the whole batch settles —
+per-tenant byte/cost lanes equal serial charges while modelled time pays
+the barrier once.
 
 Precision: the hot path runs in float64 under ``jax.experimental
 .enable_x64`` — byte identity is the acceptance contract, and the
@@ -50,23 +71,27 @@ tolerance-validated kernel path (``kernels.ops.part`` / ``kernels.ops
 Decline conditions (the service falls back to the vectorized executor,
 which may fall back to threaded):
 
-* template outside :data:`JAX_TEMPLATES` (bruck / two_level interleave
-  SEND/RECV rounds that are inherently sequential per worker);
-* a triggered skew rebalance (positional scatter partFuncs are
-  decision-state the lowering does not encode);
+* template outside :data:`JAX_TEMPLATES` (a custom registration this
+  module has no lowering for — all six built-ins lower);
 * streamed replays (``args.stream``), recovery contexts, or any cluster
   fault state (failed workers, delays, fault injections);
 * partFuncs outside the jnp registry (hash / range) or combiners outside
   {sum, min, max}; mixed payload widths; an all-empty workload;
-* ``coordinated`` with destinations outside the source ring.
+* ``coordinated`` with destinations outside the source ring, or ``bruck``
+  with mismatched src/dst sets (``ring_mismatch``); ``two_level`` off a
+  square src==dst grid (``grid_mismatch``);
+* a triggered skew rebalance whose scatter cannot be frozen: the
+  decision's slot space collides with a level's group size
+  (``skew_group_collision``) or no longer matches the destination count
+  (``skew_shape_mismatch``).
 
 See ``docs/jaxplan.md`` for the full lowering rules and executor matrix.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import re
+from collections import OrderedDict
 from typing import NamedTuple
 
 import numpy as np
@@ -74,12 +99,14 @@ import numpy as np
 from .messages import Msgs
 from .plancache import CompiledPlan, attach_lowering, get_lowering
 from .primitives import LocalCluster, ShuffleArgs
+from .skew import owner_merge_plan, scatter_tables
 from .templates import ShuffleResult, aggregate_observed
-from .vectorized import VECTORIZABLE
+from .vectorized import VECTORIZABLE, combine_msgs
 
-# Same support set as the vectorized executor: these templates' replays are
-# pure PART -> exchange -> COMB dataflow once a plan is frozen.
-JAX_TEMPLATES = frozenset(VECTORIZABLE)
+# Every built-in template lowers: the four regular replays share the rolled
+# scan program; bruck rides the same program behind a lower-time routing
+# simulation; two_level runs its own three-phase traced program.
+JAX_TEMPLATES = frozenset(VECTORIZABLE | {"bruck", "two_level"})
 
 _RANGE_NAME = re.compile(r"^range\[(\d+)\]$")
 _JAX_COMBINERS = ("sum", "min", "max")
@@ -99,6 +126,7 @@ class _PlanSpec(NamedTuple):
     initial_comb: bool        # network_aware combines locally before stage 0
     ns: int                   # len(srcs)
     ndst: int                 # len(dsts)
+    skew: bool                # frozen hot-key scatter at the global stage
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +142,12 @@ class JaxLowering:
     active: np.ndarray               # [L] bool: level beneficial?
     global_rank: np.ndarray          # [ns, ndst] int32: (sender, dst) -> fold rank
     levels_staged: tuple             # per level: ((wid, peers), ...) in srcs order
+    bruck_flows: tuple | None = None
+    # ^ per src position: per round (peer wid, ((origin pos, dst pos), ...)) —
+    #   the symbolic piece simulation's wire flows, replayed by the ledger
+    skew_hot: np.ndarray | None = None    # [H] int64 sorted hot keys
+    skew_share: np.ndarray | None = None  # [H, S] int32 padded share slots
+    skew_len: np.ndarray | None = None    # [H] int32 share counts
 
 
 def _part_spec(part_fn) -> tuple | None:
@@ -126,32 +160,67 @@ def _part_spec(part_fn) -> tuple | None:
     return None
 
 
+def _bruck_sim(ns: int):
+    """Symbolic bruck rounds over piece lists.
+
+    A piece is (origin position, destination position): an origin's whole
+    partition for one destination, which the algorithm moves whole and never
+    splits.  Invariant: ``blocks[me][j]`` holds pieces destined for ring
+    position ``(me + j) % ns``.  Returns the per-round flows (who sends which
+    pieces to whom) and the final arrival order of origins per destination.
+    """
+    blocks = [[[(me, (me + j) % ns)] for j in range(ns)] for me in range(ns)]
+    rounds = []
+    step = 1
+    while step < ns:
+        js = [j for j in range(ns) if j & step]
+        sent = {}
+        flows = []
+        for me in range(ns):
+            pieces = []
+            for j in js:
+                pieces.extend(blocks[me][j])
+                sent[(me, j)] = blocks[me][j]
+                blocks[me][j] = []
+            flows.append(((me + step) % ns, tuple(pieces)))
+        for me in range(ns):
+            peer_from = (me - step) % ns
+            for j in js:
+                blocks[me][j - step] = blocks[me][j - step] + sent[(peer_from, j)]
+        rounds.append(flows)
+        step *= 2
+    arrival = [[o for (o, _d) in blocks[me][0]] for me in range(ns)]
+    return rounds, arrival
+
+
+def _is_square(ns: int) -> bool:
+    q = int(round(ns ** 0.5))
+    return q * q == ns
+
+
 def lower_plan(plan: CompiledPlan) -> JaxLowering | None:
     """Extract the dense routing tables; None when the plan shape is not
-    lowerable (unsupported template, triggered skew, ring mismatch)."""
-    if plan.template_id not in JAX_TEMPLATES:
-        return None
-    if plan.skew is not None and plan.skew.triggered:
+    lowerable (unsupported template, ring/grid mismatch, unfreezable
+    scatter)."""
+    if plan_decline(plan) is not None:
         return None
     srcs, dsts = list(plan.srcs), list(plan.dsts)
-    if plan.template_id == "coordinated" and any(d not in srcs for d in dsts):
-        return None                       # ring fold order needs dsts in srcs
     ns, ndst = len(srcs), len(dsts)
     src_pos = {w: i for i, w in enumerate(srcs)}
     dst_pos = {d: i for i, d in enumerate(dsts)}
-    nlv = len(plan.levels)
+    irregular = plan.template_id in ("bruck", "two_level")
+    nlv = 0 if irregular else len(plan.levels)
     gsize = np.ones((nlv, ns), np.int32)
     slot_map = np.tile(np.arange(ns, dtype=np.int32), (nlv, ns, 1))
     rank_map = np.zeros((nlv, ns, ns), np.int32)
     active = np.zeros((nlv,), bool)
     levels_staged = []
-    for li, ld in enumerate(plan.levels):
+    for li in range(nlv):
+        ld = plan.levels[li]
         active[li] = ld.eff_cost.beneficial
         staged = []
         for w in srcs:
             nbrs = list(ld.nbrs.get(w, (w,)))
-            if any(n not in src_pos for n in nbrs):
-                return None               # a repaired plan routing off-srcs
             wp = src_pos[w]
             gsize[li, wp] = len(nbrs)
             for s, n in enumerate(nbrs):
@@ -169,23 +238,40 @@ def lower_plan(plan: CompiledPlan) -> JaxLowering | None:
                 staged.append((w, tuple(n for n in nbrs if n != w)))
         levels_staged.append(tuple(staged))
     global_rank = np.zeros((ns, ndst), np.int32)
+    bruck_flows = None
     if plan.template_id == "coordinated":
         # fetch_order[d][t] = srcs[(idx(d) - t) % n]  =>  rank(s at d) = idx(d) - idx(s) mod n
         for d in dsts:
             for s in srcs:
                 global_rank[src_pos[s], dst_pos[d]] = \
                     (src_pos[d] - src_pos[s]) % ns
+    elif plan.template_id == "bruck":
+        rounds, arrival = _bruck_sim(ns)
+        for me in range(ns):
+            dp = dst_pos[srcs[me]]
+            for rank, origin in enumerate(arrival[me]):
+                global_rank[origin, dp] = rank
+        bruck_flows = tuple(
+            tuple((srcs[flows[me][0]],
+                   tuple((o, dst_pos[srcs[dr]]) for o, dr in flows[me][1]))
+                  for flows in rounds)
+            for me in range(ns))
     else:
-        # push / pull / network_aware all fold arrivals in srcs order
+        # push / pull / network_aware / two_level fold arrivals in srcs order
+        # (two_level's fold orders live inside its own traced program)
         global_rank[:] = np.arange(ns, dtype=np.int32)[:, None]
+    skew_hot = skew_share = skew_len = None
+    if plan.skew is not None and plan.skew.triggered:
+        skew_hot, skew_share, skew_len = scatter_tables(plan.skew)
     return JaxLowering(
         src_pos=src_pos, dst_pos=dst_pos, gsize=gsize, slot_map=slot_map,
         rank_map=rank_map, active=active, global_rank=global_rank,
-        levels_staged=tuple(levels_staged))
+        levels_staged=tuple(levels_staged), bruck_flows=bruck_flows,
+        skew_hot=skew_hot, skew_share=skew_share, skew_len=skew_len)
 
 
 # ---------------------------------------------------------------------------
-# The jitted program
+# The jitted programs
 # ---------------------------------------------------------------------------
 
 def _splitmix64(keys):
@@ -206,6 +292,35 @@ def _slot_of(part: tuple, keys, ndst):
     g = ndst.astype(jnp.int64)
     per = (jnp.int64(key_space) + g - 1) // g          # ceil, like -(-ks // n)
     return jnp.minimum(jnp.floor_divide(keys, per), g - 1).astype(jnp.int32)
+
+
+def _skew_slot(keys, owner, alive, base_slot, ns, hot_keys, share_slots,
+               share_len):
+    """The frozen hot-key scatter: scatter_part_fn's occurrence cycle as a
+    whole-array op.  The cycle position of a hot row is its occurrence index
+    among same-(owner, key) alive rows in array order — array order per
+    owner IS that worker's buffer order, the byte-order invariant the sorts
+    maintain — computed with one stable (owner, key) lexsort and a
+    segment-relative position."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    n = keys.shape[0]
+    pos = jnp.arange(n)
+    so = jnp.where(alive, jnp.minimum(owner, ns - 1), ns)
+    perm = jnp.argsort(jnp.where(alive, keys, jnp.int64(0)), stable=True)
+    perm = perm[jnp.argsort(so[perm], stable=True)]
+    sk, sso = keys[perm], so[perm]
+    prev_same = ((sso == jnp.roll(sso, 1))
+                 & (sk == jnp.roll(sk, 1))).at[0].set(False)
+    seg_start = lax.cummax(jnp.where(~prev_same, pos, 0))
+    occ = jnp.zeros((n,), jnp.int64).at[perm].set(pos - seg_start)
+    hp = jnp.searchsorted(hot_keys, keys)
+    hpc = jnp.minimum(hp, hot_keys.shape[0] - 1)
+    is_hot = (hot_keys[hpc] == keys) & alive
+    share = share_slots[hpc,
+                        (occ % jnp.maximum(share_len[hpc], 1)).astype(jnp.int32)]
+    return jnp.where(is_hot, share.astype(jnp.int32), base_slot)
 
 
 def _combine(comb: str, keys, vals, owner, alive, participate, sentinel: int):
@@ -244,119 +359,250 @@ def _combine(comb: str, keys, vals, owner, alive, participate, sentinel: int):
     return keys, folded, owner, alive & seg_end
 
 
-def _make_replay():
+def _replay_impl(spec: _PlanSpec, keys, vals, owner,
+                 gsize, slot_map, rank_map, active, global_rank,
+                 hot_keys, share_slots, share_len):
+    """The rolled-scan replay shared by the four regular templates and (with
+    zero levels plus a simulated global_rank) bruck."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    ns, ndst = spec.ns, spec.ndst
+    n = keys.shape[0]
+    alive = jnp.ones((n,), bool)
+    if spec.initial_comb:
+        keys, vals, owner, alive = _combine(
+            spec.comb, keys, vals, owner, alive, alive, ns)
+
+    def level_body(carry, xs):
+        keys, vals, owner, alive = carry
+        g_l, slot_l, rank_l, act = xs
+        oc = jnp.minimum(owner, ns - 1)
+        g = g_l[oc]
+        part_row = act & alive & (g > 1)
+        slot = _slot_of(spec.part, keys, jnp.maximum(g, 1))
+        new_owner = jnp.where(part_row, slot_l[oc, slot], owner)
+        noc = jnp.minimum(new_owner, ns - 1)
+        rank = jnp.where(part_row, rank_l[oc, noc], 0)
+        moved = jnp.zeros((ns, ns), jnp.int32).at[oc, noc].add(
+            part_row.astype(jnp.int32))
+        # the exchange: one stable sort by (receiver, fold rank); within
+        # a (sender -> receiver) flow rows keep buffer order = the stable
+        # argsort inside messages.partition
+        sort_owner = jnp.where(alive, new_owner, ns)
+        ck = sort_owner.astype(jnp.int64) * jnp.int64(ns + 1) + rank
+        perm = jnp.argsort(ck, stable=True)
+        keys2, vals2 = keys[perm], vals[perm]
+        owner2, alive2 = new_owner[perm], alive[perm]
+        staged_owner = act & (g_l[jnp.minimum(owner2, ns - 1)] > 1)
+        if spec.comb is not None:
+            keys2, vals2, owner2, alive2 = _combine(
+                spec.comb, keys2, vals2, owner2, alive2,
+                staged_owner & alive2, ns)
+        post_row = (alive2 & act
+                    & (g_l[jnp.minimum(owner2, ns - 1)] > 1))
+        post = jnp.zeros((ns,), jnp.int32).at[
+            jnp.minimum(owner2, ns - 1)].add(post_row.astype(jnp.int32))
+        return (keys2, vals2, owner2, alive2), (moved, moved.sum(0), post)
+
+    (keys, vals, owner, alive), (lvl_moved, lvl_pre, lvl_post) = lax.scan(
+        level_body, (keys, vals, owner, alive),
+        (gsize, slot_map, rank_map, active))
+
+    # ---- global exchange: every alive row repartitions over the dsts ----
+    oc = jnp.minimum(owner, ns - 1)
+    slot = _slot_of(spec.part, keys,
+                    jnp.full((n,), ndst, jnp.int32))
+    if spec.skew:
+        slot = _skew_slot(keys, owner, alive, slot, ns,
+                          hot_keys, share_slots, share_len)
+    new_owner = jnp.where(alive, slot, ndst)
+    sc = jnp.minimum(slot, ndst - 1)
+    gmoved = jnp.zeros((ns, ndst), jnp.int32).at[oc, sc].add(
+        alive.astype(jnp.int32))
+    rank = jnp.where(alive, global_rank[oc, sc], 0)
+    ck = new_owner.astype(jnp.int64) * jnp.int64(ns + 1) + rank
+    perm = jnp.argsort(ck, stable=True)
+    keys, vals = keys[perm], vals[perm]
+    owner, alive = new_owner[perm], alive[perm]
+    if spec.comb is not None:
+        keys, vals, owner, alive = _combine(
+            spec.comb, keys, vals, owner, alive, alive, ndst)
+    return keys, vals, owner, alive, lvl_moved, lvl_pre, lvl_post, gmoved
+
+
+def _two_level_impl(spec: _PlanSpec, keys, vals, owner):
+    """two_level's three-phase replay on a square src==dst grid.
+
+    Every row's final slot ``d`` (a pure function of its key) determines all
+    three hops: phase 1 sends it within the row group to member ``d // q``,
+    phase 2 hands whole blocks to the transpose partner — a pure owner
+    relabel, since blocks move unsplit (and, combined, already hold unique
+    keys, so the threaded re-COMB is an order-preserving identity) — and
+    phase 3 delivers within the destination group.  Each exchange is one
+    stable sort on the grid's exact mailbox concat order: (receiver, sender
+    member index, slot).  Returns the phase flow counts the ledger replays.
+    """
+    import jax.numpy as jnp
+
+    ns = spec.ns
+    q = int(round(ns ** 0.5))
+    n = keys.shape[0]
+    alive = jnp.ones((n,), bool)
+    nsv = jnp.full((n,), ns, jnp.int32)
+
+    # phase 1: (g0, i0) routes each row toward its final slot's group column
+    d = _slot_of(spec.part, keys, nsv)
+    w1 = (owner // q) * q + d // q
+    rank1 = (owner % q).astype(jnp.int64) * ns + d
+    gmoved_init = jnp.zeros((ns, ns), jnp.int32).at[owner, d].add(1)
+    ck = w1.astype(jnp.int64) * jnp.int64(q * ns) + rank1
+    perm = jnp.argsort(ck, stable=True)
+    keys, vals, owner, alive = keys[perm], vals[perm], w1[perm], alive[perm]
+    if spec.comb is not None:
+        keys, vals, owner, alive = _combine(
+            spec.comb, keys, vals, owner, alive, alive, ns)
+    post1 = jnp.zeros((ns,), jnp.int32).at[
+        jnp.minimum(owner, ns - 1)].add(alive.astype(jnp.int32))
+
+    # phase 2: (g, i) hands its whole block to the transpose partner (i, g)
+    owner = (owner % q) * q + owner // q
+
+    # phase 3: final partition within the destination group
+    d = _slot_of(spec.part, keys, nsv)
+    rank3 = owner % q
+    p3moved = jnp.zeros((ns, ns), jnp.int32).at[
+        jnp.minimum(owner, ns - 1), d].add(alive.astype(jnp.int32))
+    so = jnp.where(alive, d, ns)
+    ck = so.astype(jnp.int64) * jnp.int64(q) + rank3
+    perm = jnp.argsort(ck, stable=True)
+    keys, vals, alive = keys[perm], vals[perm], alive[perm]
+    owner = d[perm]
+    if spec.comb is not None:
+        keys, vals, owner, alive = _combine(
+            spec.comb, keys, vals, owner, alive, alive, ns)
+    return keys, vals, owner, alive, gmoved_init, post1, p3moved
+
+
+# ---------------------------------------------------------------------------
+# The trace cache: one jit instance per (program kind, spec, shape), LRU
+# ---------------------------------------------------------------------------
+
+_PROGRAMS: OrderedDict = OrderedDict()
+_REPLAY_LIMIT = 64
+_TRACE_EVICTIONS = 0
+
+
+def _program(kind: str, sig: tuple, batch: int = 0):
+    """The jit instance for one (program kind, static spec, shape signature),
+    creating and LRU-evicting under the replay-cache limit."""
+    global _TRACE_EVICTIONS
     import jax
 
-    @functools.partial(jax.jit, static_argnames=("spec",))
-    def _replay(spec: _PlanSpec, keys, vals, owner,
-                gsize, slot_map, rank_map, active, global_rank):
-        import jax.numpy as jnp
-        from jax import lax
+    key = (kind, batch, sig)
+    fn = _PROGRAMS.get(key)
+    if fn is None:
+        impl = _two_level_impl if kind == "two_level" else _replay_impl
 
-        ns, ndst = spec.ns, spec.ndst
-        n = keys.shape[0]
-        alive = jnp.ones((n,), bool)
-        if spec.initial_comb:
-            keys, vals, owner, alive = _combine(
-                spec.comb, keys, vals, owner, alive, alive, ns)
-
-        def level_body(carry, xs):
-            keys, vals, owner, alive = carry
-            g_l, slot_l, rank_l, act = xs
-            oc = jnp.minimum(owner, ns - 1)
-            g = g_l[oc]
-            part_row = act & alive & (g > 1)
-            slot = _slot_of(spec.part, keys, jnp.maximum(g, 1))
-            new_owner = jnp.where(part_row, slot_l[oc, slot], owner)
-            noc = jnp.minimum(new_owner, ns - 1)
-            rank = jnp.where(part_row, rank_l[oc, noc], 0)
-            moved = jnp.zeros((ns, ns), jnp.int32).at[oc, noc].add(
-                part_row.astype(jnp.int32))
-            # the exchange: one stable sort by (receiver, fold rank); within
-            # a (sender -> receiver) flow rows keep buffer order = the stable
-            # argsort inside messages.partition
-            sort_owner = jnp.where(alive, new_owner, ns)
-            ck = sort_owner.astype(jnp.int64) * jnp.int64(ns + 1) + rank
-            perm = jnp.argsort(ck, stable=True)
-            keys2, vals2 = keys[perm], vals[perm]
-            owner2, alive2 = new_owner[perm], alive[perm]
-            staged_owner = act & (g_l[jnp.minimum(owner2, ns - 1)] > 1)
-            if spec.comb is not None:
-                keys2, vals2, owner2, alive2 = _combine(
-                    spec.comb, keys2, vals2, owner2, alive2,
-                    staged_owner & alive2, ns)
-            post_row = (alive2 & act
-                        & (g_l[jnp.minimum(owner2, ns - 1)] > 1))
-            post = jnp.zeros((ns,), jnp.int32).at[
-                jnp.minimum(owner2, ns - 1)].add(post_row.astype(jnp.int32))
-            return (keys2, vals2, owner2, alive2), (moved, moved.sum(0), post)
-
-        (keys, vals, owner, alive), (lvl_moved, lvl_pre, lvl_post) = lax.scan(
-            level_body, (keys, vals, owner, alive),
-            (gsize, slot_map, rank_map, active))
-
-        # ---- global exchange: every alive row repartitions over the dsts ----
-        oc = jnp.minimum(owner, ns - 1)
-        slot = _slot_of(spec.part, keys,
-                        jnp.full((n,), ndst, jnp.int32))
-        new_owner = jnp.where(alive, slot, ndst)
-        sc = jnp.minimum(slot, ndst - 1)
-        gmoved = jnp.zeros((ns, ndst), jnp.int32).at[oc, sc].add(
-            alive.astype(jnp.int32))
-        rank = jnp.where(alive, global_rank[oc, sc], 0)
-        ck = new_owner.astype(jnp.int64) * jnp.int64(ns + 1) + rank
-        perm = jnp.argsort(ck, stable=True)
-        keys, vals = keys[perm], vals[perm]
-        owner, alive = new_owner[perm], alive[perm]
-        if spec.comb is not None:
-            keys, vals, owner, alive = _combine(
-                spec.comb, keys, vals, owner, alive, alive, ndst)
-        return keys, vals, owner, alive, lvl_moved, lvl_pre, lvl_post, gmoved
-
-    return _replay
+        if batch:
+            def entry(spec, keys, vals, owner, *shared):
+                return jax.vmap(
+                    lambda k, v, o: impl(spec, k, v, o, *shared))(
+                        keys, vals, owner)
+        else:
+            # a per-program closure: jit wrappers over the SAME function
+            # share jax's compilation cache, which would make each entry's
+            # _cache_size() report the union and break eviction accounting
+            def entry(spec, *operands, _impl=impl):
+                return _impl(spec, *operands)
+        fn = jax.jit(entry, static_argnames=("spec",))
+        _PROGRAMS[key] = fn
+    _PROGRAMS.move_to_end(key)
+    while len(_PROGRAMS) > _REPLAY_LIMIT:
+        _, old = _PROGRAMS.popitem(last=False)
+        _TRACE_EVICTIONS += int(old._cache_size())
+        old._clear_cache()
+    return fn
 
 
-_replay_fn = None
-
-
-def _replay():
-    global _replay_fn
-    if _replay_fn is None:
-        _replay_fn = _make_replay()
-    return _replay_fn
+def _program_inputs(spec: _PlanSpec, low: JaxLowering):
+    """(program kind, shared traced tables) for a lowered plan."""
+    if spec.template == "two_level":
+        return "two_level", ()
+    hot = low.skew_hot if low.skew_hot is not None else np.zeros((0,), np.int64)
+    share = (low.skew_share if low.skew_share is not None
+             else np.zeros((0, 1), np.int32))
+    slen = low.skew_len if low.skew_len is not None else np.zeros((0,), np.int32)
+    return "scan", (low.gsize, low.slot_map, low.rank_map, low.active,
+                    low.global_rank, hot, share, slen)
 
 
 def replay_cache_size() -> int:
     """Number of compiled replay programs (one per plan spec x shape) — the
     one-trace-per-plan acceptance hook."""
-    return 0 if _replay_fn is None else _replay_fn._cache_size()
+    return sum(int(fn._cache_size()) for fn in _PROGRAMS.values())
+
+
+def replay_cache_limit() -> int:
+    return _REPLAY_LIMIT
+
+
+def set_replay_cache_limit(limit: int) -> int:
+    """Cap the trace cache (LRU over jit instances); returns the previous
+    limit.  Shrinking evicts oldest programs immediately, counted by
+    :func:`trace_evictions` / the ``teshu_jit_trace_evictions`` gauge."""
+    global _REPLAY_LIMIT, _TRACE_EVICTIONS
+    prev, _REPLAY_LIMIT = _REPLAY_LIMIT, max(1, int(limit))
+    while len(_PROGRAMS) > _REPLAY_LIMIT:
+        _, old = _PROGRAMS.popitem(last=False)
+        _TRACE_EVICTIONS += int(old._cache_size())
+        old._clear_cache()
+    return prev
+
+
+def trace_evictions() -> int:
+    """Traces dropped by the replay-cache LRU since process start."""
+    return _TRACE_EVICTIONS
 
 
 # ---------------------------------------------------------------------------
-# The Pallas kernel plane (opt-in, mirrors vectorized.set_comb_backend)
+# The Pallas kernel plane (default-on on TPU, mirrors vectorized.set_comb_backend)
 # ---------------------------------------------------------------------------
 
-_KERNEL_PLANE = False
+_KERNEL_PLANE: bool | None = None      # None = auto: on when the backend is TPU
 
 
-def set_kernel_plane(enabled: bool) -> bool:
+def kernel_plane_enabled() -> bool:
+    """Whether SUM replays route payloads through the Pallas kernels: an
+    explicit set_kernel_plane() override, else auto — enabled exactly when
+    ``kernels.ops.default_interpret()`` reports a real TPU backend (where
+    the MXU kernels compile natively), off on interpret-mode hosts."""
+    if _KERNEL_PLANE is not None:
+        return _KERNEL_PLANE
+    from repro.kernels import ops as kernel_ops
+    return not kernel_ops.default_interpret()
+
+
+def set_kernel_plane(enabled: bool | None) -> bool | None:
     """Route SUM replays' global PART/COMB through the Pallas MXU kernels:
     :func:`repro.kernels.partition.partition_permute` routes rows to their
     destination-major positions (PART as a one-hot permutation matmul) and
     :func:`repro.kernels.combine.segment_combine` folds per-(destination,
     key) segments (COMB as an accumulating one-hot matmul).
 
-    Interpret mode on CPU, compiled natively on TPU (the kernels' default
-    ``interpret=None`` resolves through ``kernels.ops.default_interpret``).
-    The kernels accumulate in float32, so — exactly like
-    ``vectorized.set_comb_backend("pallas")`` — this plane is *opt-in*: the
-    default replay keeps bit-exact float64 semantics, and the kernel plane
-    replaces only the output payloads (routing decisions, output key sets,
-    and all ledger charges still come from the exact program).  Returns the
-    previous setting so callers can restore it.
+    Default is *auto* (``None``): on when the backend probe reports a TPU,
+    where the kernels compile natively, off in interpret mode on CPU hosts.
+    The kernels accumulate in float32, so on TPU the payload plane trades
+    the bit-exact float64 contract for MXU throughput — ``set_kernel_plane
+    (False)`` is the opt-out that restores exact payloads (routing
+    decisions, output key sets, and all ledger charges always come from the
+    exact program either way; skew-scattered replays keep exact payloads
+    unconditionally).  Returns the previous setting (``True``/``False``/
+    ``None``) so callers can restore it.
     """
     global _KERNEL_PLANE
-    prev, _KERNEL_PLANE = _KERNEL_PLANE, bool(enabled)
+    prev = _KERNEL_PLANE
+    _KERNEL_PLANE = None if enabled is None else bool(enabled)
     return prev
 
 
@@ -441,17 +687,36 @@ def plan_decline(plan: CompiledPlan) -> str | None:
     ``None`` when the plan shape is lowerable."""
     if plan.template_id not in JAX_TEMPLATES:
         return "template_not_lowerable"
-    if plan.skew is not None and plan.skew.triggered:
-        return "skew_rebalance_triggered"
-    srcs = list(plan.srcs)
-    if plan.template_id == "coordinated" and any(d not in srcs
-                                                 for d in plan.dsts):
+    srcs, dsts = list(plan.srcs), list(plan.dsts)
+    if plan.template_id == "coordinated" and any(d not in srcs for d in dsts):
         return "ring_mismatch"
+    if plan.template_id == "bruck" and set(srcs) != set(dsts):
+        return "ring_mismatch"              # the ring IS the destination set
+    if plan.template_id == "two_level" and (
+            tuple(srcs) != tuple(dsts) or not _is_square(len(srcs))):
+        return "grid_mismatch"              # needs a square src==dst grid
+    if plan.skew is not None and plan.skew.triggered:
+        if plan.template_id == "two_level":
+            # phase-3 re-partition would need fresh occurrence indices; the
+            # registry marks two_level non-rebalanceable, so only a
+            # hand-built plan can get here
+            return "skew_shape_mismatch"
+        if plan.skew.ndst != len(dsts):
+            return "skew_shape_mismatch"    # scatter aimed at another width
+        for ld in plan.levels:
+            if not ld.eff_cost.beneficial:
+                continue
+            for w in srcs:
+                if len(ld.nbrs.get(w, (w,))) == plan.skew.ndst:
+                    # a level-local exchange the scattered partFunc would
+                    # also rewrite — occurrence state the trace can't freeze
+                    return "skew_group_collision"
     src_set = set(srcs)
-    for ld in plan.levels:
-        for w in srcs:
-            if any(n not in src_set for n in ld.nbrs.get(w, (w,))):
-                return "routing_off_srcs"   # a repaired plan routing off-srcs
+    if plan.template_id not in ("bruck", "two_level"):
+        for ld in plan.levels:
+            for w in srcs:
+                if any(n not in src_set for n in ld.nbrs.get(w, (w,))):
+                    return "routing_off_srcs"   # a repaired plan routing off-srcs
     return None
 
 
@@ -471,12 +736,22 @@ def can_lower(cluster: LocalCluster, args: ShuffleArgs,
     return _call_decline(cluster, args, bufs) is None
 
 
-def try_run_jax(cluster: LocalCluster, args: ShuffleArgs,
-                bufs: dict[int, Msgs], manager=None) -> ShuffleResult | None:
-    """Replay ``args.plan`` as one jitted program; None = declined (the
-    service falls back to the vectorized executor)."""
-    if not can_lower(cluster, args, bufs):
-        return None
+def _spec_of(args: ShuffleArgs) -> _PlanSpec:
+    plan = args.plan
+    return _PlanSpec(
+        template=args.template_id,
+        comb=args.comb_fn.name if args.comb_fn is not None else None,
+        part=_part_spec(args.part_fn),
+        initial_comb=(args.template_id == "network_aware"
+                      and args.comb_fn is not None),
+        ns=len(args.srcs), ndst=len(args.dsts),
+        skew=bool(plan is not None and plan.skew is not None
+                  and plan.skew.triggered))
+
+
+def _attached_lowering(cluster, args) -> "JaxLowering | None":
+    """The plan's lowering, deriving and attaching on first use (the lower
+    span mirrors try_run_jax's solo path)."""
     plan = args.plan
     low = get_lowering(plan)
     if low is None:
@@ -490,18 +765,226 @@ def try_run_jax(cluster: LocalCluster, args: ShuffleArgs,
         else:
             low = lower_plan(plan)
         attach_lowering(plan, _DECLINED if low is None else low)
-    if low is _DECLINED or low is None:
+    return None if low is _DECLINED else low
+
+
+def try_run_jax(cluster: LocalCluster, args: ShuffleArgs,
+                bufs: dict[int, Msgs], manager=None) -> ShuffleResult | None:
+    """Replay ``args.plan`` as one jitted program; None = declined (the
+    service falls back to the vectorized executor)."""
+    if not can_lower(cluster, args, bufs):
         return None
+    low = _attached_lowering(cluster, args)
+    if low is None:
+        return None
+    slot = _BATCH_SLOTS.get(id(bufs))
+    if slot is not None and slot.plan is not args.plan:
+        slot = None                       # re-planned since the batch probe
+    if slot is not None:
+        _BATCH_SLOTS.pop(id(bufs), None)
     tracer = cluster.obs.tracer
     if not tracer.enabled:
-        return _run_lowered(cluster, args, bufs, low, manager)
+        return _run_lowered(cluster, args, bufs, low, manager, batch_slot=slot)
     with tracer.span("exec", shuffle_id=args.shuffle_id, tenant=args.tenant,
                      engine="jax", template=args.template_id):
-        return _run_lowered(cluster, args, bufs, low, manager)
+        return _run_lowered(cluster, args, bufs, low, manager, batch_slot=slot)
+
+
+# ---------------------------------------------------------------------------
+# Batched dispatch: one vmapped program over same-signature submissions
+# ---------------------------------------------------------------------------
+
+class _BatchHandle:
+    """One stacked dispatch covering ``size`` same-signature submissions.
+    The shared epoch barrier closes once every member has either consumed
+    its slice or been abandoned (declined solo / invalidated mid-batch)."""
+
+    def __init__(self, size: int):
+        self.size = size
+        self.pending = size
+        self.consumed = 0
+        self.closed = False
+
+    def member_done(self, ledger) -> None:
+        self.consumed += 1
+        self._settle(ledger)
+
+    def abandon(self, ledger) -> None:
+        self._settle(ledger)
+
+    def _settle(self, ledger) -> None:
+        self.pending -= 1
+        if self.pending <= 0 and not self.closed:
+            self.closed = True
+            if self.consumed:
+                ledger.advance_epoch()
+
+
+@dataclasses.dataclass
+class _BatchSlot:
+    handle: _BatchHandle
+    plan: object                     # the probed CompiledPlan (identity check)
+    outputs: tuple                   # this member's slice of the stacked run
+
+
+# Pending batch slices, keyed by id() of the submission's buffer dict — the
+# one object that flows unchanged from admission through client.shuffle to
+# try_run_jax, so a member is matched without widening any call signature.
+_BATCH_SLOTS: dict[int, _BatchSlot] = {}
+
+
+def batch_signature(cluster: LocalCluster, args: ShuffleArgs,
+                    bufs: dict[int, Msgs]):
+    """Hashable grouping key for batched dispatch, or None when this
+    submission would not run on the jax executor.  Submissions agreeing on
+    the key share one trace AND identical routing tables, so one vmapped
+    call replays all of them."""
+    if decline_reason(cluster, args, bufs) is not None:
+        return None
+    low = _attached_lowering(cluster, args)
+    if low is None:
+        return None
+    spec = _spec_of(args)
+    width = next((m.width for m in bufs.values() if m.n), 1)
+    nrows = sum(bufs.get(w, Msgs.empty(width)).n for w in args.srcs)
+    skew_sig = None if low.skew_hot is None else (
+        low.skew_hot.tobytes(), low.skew_share.tobytes(),
+        low.skew_len.tobytes())
+    return (spec, tuple(args.srcs), tuple(args.dsts), nrows, width,
+            low.gsize.tobytes(), low.slot_map.tobytes(),
+            low.rank_map.tobytes(), low.active.tobytes(),
+            low.global_rank.tobytes(), low.bruck_flows, skew_sig)
+
+
+def prepare_batch(cluster: LocalCluster, members) -> "_BatchHandle | None":
+    """Run ONE stacked (vmapped) jit dispatch for ``members`` — a list of
+    ``(args, bufs)`` sharing :func:`batch_signature` — and register each
+    member's output slice for consumption by its own replay, which charges
+    its own tenant's ledger lanes exactly as a serial run would."""
+    if len(members) < 2:
+        return None
+    from jax.experimental import enable_x64
+
+    args0, bufs0 = members[0]
+    low = get_lowering(args0.plan)
+    if low is None or low is _DECLINED:
+        return None
+    spec = _spec_of(args0)
+    width = next((m.width for m in bufs0.values() if m.n), 1)
+    keys, vals, owner = [], [], []
+    for a, b in members:
+        per_w = [b.get(w, Msgs.empty(width)) for w in a.srcs]
+        keys.append(np.concatenate([m.keys for m in per_w]))
+        vals.append(np.concatenate([np.ascontiguousarray(m.vals)
+                                    for m in per_w]))
+        owner.append(np.concatenate([np.full(m.n, low.src_pos[w], np.int32)
+                                     for w, m in zip(a.srcs, per_w)]))
+    keys, vals, owner = np.stack(keys), np.stack(vals), np.stack(owner)
+    kind, shared = _program_inputs(spec, low)
+    sig = (spec, keys.shape[1:], vals.shape[1:],
+           tuple(a.shape for a in shared))
+    with enable_x64():
+        out = _program(kind, sig, batch=len(members))(
+            spec, keys, vals, owner, *shared)
+    arrs = [np.asarray(a) for a in out]
+    handle = _BatchHandle(len(members))
+    for i, (a, b) in enumerate(members):
+        _BATCH_SLOTS[id(b)] = _BatchSlot(
+            handle=handle, plan=a.plan,
+            outputs=tuple(x[i] for x in arrs))
+    return handle
+
+
+def finish_batches(handles, ledger) -> None:
+    """Abandon any slice left unconsumed (its member declined solo or was
+    re-planned mid-batch) so the shared epoch barrier still closes."""
+    live = {id(h) for h in handles}
+    stale = [k for k, slot in _BATCH_SLOTS.items() if id(slot.handle) in live]
+    for k in stale:
+        _BATCH_SLOTS.pop(k).handle.abandon(ledger)
+
+
+# ---------------------------------------------------------------------------
+# Ledger replay of the irregular templates
+# ---------------------------------------------------------------------------
+
+def _charge_bruck(ledger, topo, args, low, gmoved, rowb: int) -> None:
+    """bruck's wire flows from the lower-time simulation: per worker, one
+    batched charge per round (totals per (worker, level, peer) are what the
+    epoch folds, and the threaded sender's per-piece SENDs sum to exactly
+    these), then the final self-delivery combine."""
+    srcs, dsts = list(args.srcs), list(args.dsts)
+    for me, w in enumerate(srcs):
+        for peer, pieces in low.bruck_flows[me]:
+            if not pieces:
+                continue
+            nbytes = sum(int(gmoved[o, dp]) for o, dp in pieces) * rowb
+            ledger.charge_transfer(w, topo.crossing_level(w, peer), nbytes,
+                                   dst=peer, tenant=args.tenant)
+    if args.comb_fn is not None:
+        for d in dsts:
+            dp = low.dst_pos[d]
+            ledger.charge_combine(d, int(gmoved[:, dp].sum()) * rowb,
+                                  tenant=args.tenant)
+
+
+def _charge_two_level(ledger, topo, args, low, gmoved_init, post1, p3moved,
+                      rowb: int) -> None:
+    """two_level's three phases from the traced flow counts, all in the one
+    replay epoch (self-sends are free — crossing_level(w, w) < 0 — exactly
+    like the threaded mailbox path)."""
+    srcs = list(args.srcs)
+    ns, q = len(srcs), int(round(len(srcs) ** 0.5))
+    comb = args.comb_fn is not None
+    # rows sender p holds for destination-group column j after phase 1
+    groupsum = np.zeros((ns, q), np.int64)
+    for p in range(ns):
+        for d in range(ns):
+            groupsum[p, d // q] += int(gmoved_init[p, d])
+    for p, w in enumerate(srcs):
+        g = p // q
+        peers = [srcs[g * q + j] for j in range(q)]
+        ledger.charge_transfers(
+            w,
+            np.fromiter((topo.crossing_level(w, n) for n in peers),
+                        dtype=np.int64, count=q),
+            groupsum[p] * rowb,
+            dsts=np.asarray(peers, dtype=np.int64), tenant=args.tenant)
+    if comb:
+        for p, w in enumerate(srcs):
+            g, j = divmod(p, q)
+            pre = int(sum(groupsum[g * q + i, j] for i in range(q))) * rowb
+            ledger.charge_combine(w, pre, tenant=args.tenant)
+    transpose = [(p % q) * q + p // q for p in range(ns)]
+    for p, w in enumerate(srcs):
+        partner = srcs[transpose[p]]
+        ledger.charge_transfer(w, topo.crossing_level(w, partner),
+                               int(post1[p]) * rowb, dst=partner,
+                               tenant=args.tenant)
+    if comb:
+        for p, w in enumerate(srcs):
+            # the received (possibly own) block is re-COMBed whole
+            ledger.charge_combine(w, int(post1[transpose[p]]) * rowb,
+                                  tenant=args.tenant)
+    for p, w in enumerate(srcs):
+        g = p // q
+        peers = [srcs[g * q + j] for j in range(q)]
+        ledger.charge_transfers(
+            w,
+            np.fromiter((topo.crossing_level(w, n) for n in peers),
+                        dtype=np.int64, count=q),
+            np.fromiter((int(p3moved[p, g * q + j]) * rowb for j in range(q)),
+                        dtype=np.int64, count=q),
+            dsts=np.asarray(peers, dtype=np.int64), tenant=args.tenant)
+    if comb:
+        for p, w in enumerate(srcs):
+            ledger.charge_combine(w, int(p3moved[:, p].sum()) * rowb,
+                                  tenant=args.tenant)
 
 
 def _run_lowered(cluster, args: ShuffleArgs, bufs: dict[int, Msgs],
-                 low: JaxLowering, manager) -> ShuffleResult:
+                 low: JaxLowering, manager,
+                 batch_slot: "_BatchSlot | None" = None) -> ShuffleResult:
     from jax.experimental import enable_x64
 
     plan = args.plan
@@ -511,13 +994,7 @@ def _run_lowered(cluster, args: ShuffleArgs, bufs: dict[int, Msgs],
     participants = sorted(set(srcs) | set(dsts))
     width = next((m.width for m in bufs.values() if m.n), 1)
     rowb = 8 + 8 * width                  # the wire format Msgs.nbytes charges
-    spec = _PlanSpec(
-        template=args.template_id,
-        comb=args.comb_fn.name if args.comb_fn is not None else None,
-        part=_part_spec(args.part_fn),
-        initial_comb=(args.template_id == "network_aware"
-                      and args.comb_fn is not None),
-        ns=len(srcs), ndst=len(dsts))
+    spec = _spec_of(args)
 
     if manager is not None:
         manager.get_template(args.template_id, wid=None)
@@ -531,96 +1008,140 @@ def _run_lowered(cluster, args: ShuffleArgs, bufs: dict[int, Msgs],
     per_w = [bufs.get(w, Msgs.empty(width)) for w in srcs]
     keys = np.concatenate([m.keys for m in per_w])
     vals = np.concatenate([np.ascontiguousarray(m.vals) for m in per_w])
-    owner = np.concatenate([np.full(m.n, low.src_pos[w], np.int32)
-                            for w, m in zip(srcs, per_w)])
-    tracer = cluster.obs.tracer
-    jit_sp = tracer.span(
-        "jit_replay", shuffle_id=args.shuffle_id, tenant=args.tenant,
-        rows=int(keys.shape[0]), traces_before=replay_cache_size(),
-    ) if tracer.enabled else None
-    with enable_x64():
-        out = _replay()(spec, keys, vals, owner, low.gsize, low.slot_map,
-                        low.rank_map, low.active, low.global_rank)
-    if jit_sp is not None:
-        jit_sp.end(traces_after=replay_cache_size())
-    (f_keys, f_vals, f_owner, f_alive,
-     lvl_moved, lvl_pre, lvl_post, gmoved) = (np.asarray(a) for a in out)
+    if batch_slot is not None:
+        arrs = batch_slot.outputs         # this member's slice of the batch
+    else:
+        owner = np.concatenate([np.full(m.n, low.src_pos[w], np.int32)
+                                for w, m in zip(srcs, per_w)])
+        kind, shared = _program_inputs(spec, low)
+        sig = (spec, keys.shape, vals.shape, tuple(a.shape for a in shared))
+        tracer = cluster.obs.tracer
+        jit_sp = tracer.span(
+            "jit_replay", shuffle_id=args.shuffle_id, tenant=args.tenant,
+            rows=int(keys.shape[0]), traces_before=replay_cache_size(),
+        ) if tracer.enabled else None
+        with enable_x64():
+            out = _program(kind, sig)(spec, keys, vals, owner, *shared)
+        if jit_sp is not None:
+            jit_sp.end(traces_after=replay_cache_size())
+        arrs = tuple(np.asarray(a) for a in out)
 
-    # ---- ledger replay: the vectorized executor's exact charge sequence ---
-    if spec.initial_comb:
-        for w, m in zip(srcs, per_w):     # network_aware local pre-combine
-            ledger.charge_combine(w, m.nbytes, tenant=args.tenant)
-    for li, ld in enumerate(plan.levels):
-        if not ld.eff_cost.beneficial:
-            continue
-        ledger.advance_epoch()            # the stage barrier (PLAN_STAGE)
-        staged = low.levels_staged[li]
-        for w, peers in staged:
-            wp = low.src_pos[w]
-            ledger.charge_transfers(
-                w,
-                np.fromiter((topo.crossing_level(w, n) for n in peers),
-                            dtype=np.int64, count=len(peers)),
-                np.fromiter(
-                    (int(lvl_moved[li, wp, low.src_pos[n]]) * rowb
-                     for n in peers), dtype=np.int64, count=len(peers)),
-                dsts=np.asarray(peers, dtype=np.int64), tenant=args.tenant)
-        for w, _peers in staged:
-            pre = int(lvl_pre[li, low.src_pos[w]]) * rowb
-            post = int(lvl_post[li, low.src_pos[w]]) * rowb
-            if args.comb_fn is not None:
-                ledger.charge_combine(w, pre, tenant=args.tenant)
-            observed.append((ld.level, pre, post))
+    # ---- ledger replay: the reference executors' exact charge sequence ----
+    if spec.template == "two_level":
+        (f_keys, f_vals, f_owner, f_alive, gmoved_init, post1, p3moved) = arrs
+        _charge_two_level(ledger, topo, args, low, gmoved_init, post1,
+                          p3moved, rowb)
+    else:
+        (f_keys, f_vals, f_owner, f_alive,
+         lvl_moved, lvl_pre, lvl_post, gmoved) = arrs
+        if spec.initial_comb:
+            for w, m in zip(srcs, per_w):  # network_aware local pre-combine
+                ledger.charge_combine(w, m.nbytes, tenant=args.tenant)
+        for li, ld in enumerate(plan.levels if spec.template != "bruck" else ()):
+            if not ld.eff_cost.beneficial:
+                continue
+            if batch_slot is None:
+                ledger.advance_epoch()    # the stage barrier (PLAN_STAGE)
+            staged = low.levels_staged[li]
+            for w, peers in staged:
+                wp = low.src_pos[w]
+                ledger.charge_transfers(
+                    w,
+                    np.fromiter((topo.crossing_level(w, n) for n in peers),
+                                dtype=np.int64, count=len(peers)),
+                    np.fromiter(
+                        (int(lvl_moved[li, wp, low.src_pos[n]]) * rowb
+                         for n in peers), dtype=np.int64, count=len(peers)),
+                    dsts=np.asarray(peers, dtype=np.int64), tenant=args.tenant)
+            for w, _peers in staged:
+                pre = int(lvl_pre[li, low.src_pos[w]]) * rowb
+                post = int(lvl_post[li, low.src_pos[w]]) * rowb
+                if args.comb_fn is not None:
+                    ledger.charge_combine(w, pre, tenant=args.tenant)
+                observed.append((ld.level, pre, post))
 
-    if args.template_id in ("vanilla_push", "network_aware"):
-        for w in srcs:                    # push: the sender pays
-            wp = low.src_pos[w]
-            ledger.charge_transfers(
-                w,
-                np.fromiter((topo.crossing_level(w, d) for d in dsts),
-                            dtype=np.int64, count=len(dsts)),
-                gmoved[wp].astype(np.int64) * rowb,
-                dsts=np.asarray(dsts, dtype=np.int64), tenant=args.tenant)
-        fetch_order = {d: srcs for d in dsts}
-        charge_receiver = False
-    elif args.template_id == "vanilla_pull":
-        fetch_order = {d: srcs for d in dsts}
-        charge_receiver = True
-    else:                                 # coordinated: ring order, receiver pays
-        n = len(srcs)
-        fetch_order = {d: [srcs[(srcs.index(d) - t) % n] for t in range(n)]
-                       for d in dsts}
-        charge_receiver = True
-    for d in dsts:
-        dp = low.dst_pos[d]
-        order = fetch_order[d]
-        if charge_receiver:
-            ledger.charge_transfers(
-                d,
-                np.fromiter((topo.crossing_level(s, d) for s in order),
-                            dtype=np.int64, count=len(order)),
-                np.fromiter((int(gmoved[low.src_pos[s], dp]) * rowb
-                             for s in order), dtype=np.int64,
-                            count=len(order)),
-                dsts=np.full(len(order), d, dtype=np.int64),
-                tenant=args.tenant)
-        if args.comb_fn is not None:
-            ledger.charge_combine(d, int(gmoved[:, dp].sum()) * rowb,
-                                  tenant=args.tenant)
-    ledger.advance_epoch()                # shuffle completion is a barrier
+        if spec.template == "bruck":
+            _charge_bruck(ledger, topo, args, low, gmoved, rowb)
+        else:
+            if spec.template in ("vanilla_push", "network_aware"):
+                for w in srcs:            # push: the sender pays
+                    wp = low.src_pos[w]
+                    ledger.charge_transfers(
+                        w,
+                        np.fromiter((topo.crossing_level(w, d) for d in dsts),
+                                    dtype=np.int64, count=len(dsts)),
+                        gmoved[wp].astype(np.int64) * rowb,
+                        dsts=np.asarray(dsts, dtype=np.int64),
+                        tenant=args.tenant)
+                fetch_order = {d: srcs for d in dsts}
+                charge_receiver = False
+            elif spec.template == "vanilla_pull":
+                fetch_order = {d: srcs for d in dsts}
+                charge_receiver = True
+            else:                         # coordinated: ring order, receiver pays
+                n = len(srcs)
+                fetch_order = {d: [srcs[(srcs.index(d) - t) % n]
+                                   for t in range(n)] for d in dsts}
+                charge_receiver = True
+            for d in dsts:
+                dp = low.dst_pos[d]
+                order = fetch_order[d]
+                if charge_receiver:
+                    ledger.charge_transfers(
+                        d,
+                        np.fromiter((topo.crossing_level(s, d) for s in order),
+                                    dtype=np.int64, count=len(order)),
+                        np.fromiter((int(gmoved[low.src_pos[s], dp]) * rowb
+                                     for s in order), dtype=np.int64,
+                                    count=len(order)),
+                        dsts=np.full(len(order), d, dtype=np.int64),
+                        tenant=args.tenant)
+                if args.comb_fn is not None:
+                    ledger.charge_combine(d, int(gmoved[:, dp].sum()) * rowb,
+                                          tenant=args.tenant)
 
     out_bufs: dict[int, Msgs] = {}
     for d in dsts:
         mask = (f_owner == low.dst_pos[d]) & f_alive
         out_bufs[d] = Msgs(f_keys[mask],
                            f_vals[mask].reshape(-1, width))
-    if _KERNEL_PLANE and spec.comb == "sum":
-        # opt-in Pallas plane: same routing and key sets, payloads re-folded
-        # on the MXU kernels (float32 accumulation — see set_kernel_plane)
+    if (kernel_plane_enabled() and spec.comb == "sum" and not spec.skew
+            and spec.template not in ("bruck", "two_level")):
+        # Pallas plane (default-on on TPU): same routing and key sets,
+        # payloads re-folded on the MXU kernels (float32 accumulation —
+        # see set_kernel_plane)
         for d, (kk, vv) in zip(dsts,
                                kernel_global_stage(args.part_fn, keys, vals,
                                                    len(dsts))):
             out_bufs[d] = Msgs(kk, vv.reshape(-1, width))
+    if spec.skew:
+        # the owner-merge stage: scattered hot rows travel back to their base
+        # destination — Python-side, mirroring the vectorized replay exactly
+        merge = owner_merge_plan(plan.skew, args.part_fn, tuple(dsts))
+        inbox: dict[int, list] = {}
+        for owner_w, (owned_keys, sharers) in merge.items():
+            got = []
+            for s in sharers:
+                hit = np.isin(out_bufs[s].keys, owned_keys)
+                rows = out_bufs[s].take(np.nonzero(hit)[0])
+                out_bufs[s] = out_bufs[s].take(np.nonzero(~hit)[0])
+                ledger.charge_transfer(s, topo.crossing_level(s, owner_w),
+                                       rows.nbytes, dst=owner_w,
+                                       tenant=args.tenant)
+                got.append(rows)
+            inbox[owner_w] = got
+        for owner_w, got in inbox.items():
+            batch = Msgs.concat([out_bufs[owner_w]] + got)
+            if args.comb_fn is not None:
+                ledger.charge_combine(owner_w, batch.nbytes,
+                                      tenant=args.tenant)
+                out_bufs[owner_w] = combine_msgs(args.comb_fn, batch)
+            else:
+                out_bufs[owner_w] = batch
+    if batch_slot is None:
+        ledger.advance_epoch()            # shuffle completion is a barrier
+    else:
+        batch_slot.handle.member_done(ledger)   # the batch settles as one
     after = ledger.snapshot()
     if manager is not None:
         for w in participants:
@@ -634,4 +1155,5 @@ def _run_lowered(cluster, args: ShuffleArgs, bufs: dict[int, Msgs],
         cached=True,
         vectorized=False,
         engine="jax",
+        batched=batch_slot is not None,
     )

@@ -15,10 +15,13 @@ Three sources feed it, each durable at a different horizon:
   per-worker progress, failures, recovery and speculation records;
 * the **flight recorder** (when tracing is enabled): the span timeline.
 
-Reason codes are stable strings (``template_not_lowerable``,
-``unsupported_combiner``, ``skew_rebalance_triggered``, ``key_mismatch``,
+Reason codes are stable strings (``unsupported_combiner``,
+``unsupported_part_fn``, ``streamed_replay``, ``key_mismatch``,
 ``invalidated_reduction_drift``, ...) — tests and dashboards match on them,
-``why()`` renders them for humans.
+``why()`` renders them for humans.  Codes retired by the full-coverage jax
+lowering (``template_not_lowerable`` on built-in templates,
+``skew_rebalance_triggered``) are never emitted anymore; dashboards matching
+on them simply stop seeing samples.
 """
 from __future__ import annotations
 

@@ -407,6 +407,16 @@ class PlanCache:
             ns.stats["hits"] += 1
             return plan
 
+    def peek(self, key: tuple, tenant: str = DEFAULT_TENANT) -> CompiledPlan | None:
+        """The cached plan without ANY accounting side effects: no hit/miss
+        counters, no LRU reorder, no periodic refresh.  The admission
+        batcher's probe pass uses this so grouping submissions for one
+        vmapped dispatch leaves cache statistics exactly as the subsequent
+        real ``get`` calls will write them."""
+        with self._lock:
+            ns = self._spaces.get(tenant)
+            return None if ns is None else ns.plans.get(key)
+
     def put(self, key: tuple, plan: CompiledPlan, *, repaired: bool = False,
             tenant: str = DEFAULT_TENANT) -> None:
         with self._lock:

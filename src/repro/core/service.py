@@ -400,6 +400,9 @@ class TeShuCluster:
         self._m_admission_wait = m.histogram(
             "teshu_admission_wait_seconds",
             "Queue wait from submit() to execution in a run_pending() pass")
+        self._m_batched = m.counter(
+            "teshu_batched_dispatches_total",
+            "Vmapped multi-submission jax dispatches by template")
         # per-shuffle decision log (the always-on substrate of explain()),
         # bounded like the owner-tag table
         self._reports: "OrderedDict[int, dict]" = OrderedDict()
@@ -508,6 +511,8 @@ class TeShuCluster:
         if jx is not None:
             out.append(("teshu_jax_replay_traces", {},
                         float(jx.replay_cache_size())))
+            out.append(("teshu_jit_trace_evictions", {},
+                        float(jx.trace_evictions())))
         return out
 
     def _note(self, shuffle_id: int, **kv) -> None:
@@ -602,6 +607,7 @@ class TeShuCluster:
         by_coflow: dict[tuple[str, str], list] = {}
         for s in subs:
             by_coflow.setdefault(s.coflow_id, []).append(s)
+        batch_handles, batches = self._prepare_batches(subs)
         t0 = self.cluster.ledger.modelled_time()
         results: dict[int, ShuffleResult] = {}
         failures: dict[int, str] = {}
@@ -624,16 +630,105 @@ class TeShuCluster:
                     results[s.ticket] = exc
                     failures[s.ticket] = f"{type(exc).__name__}: {exc}"
             ccts[e.coflow_id] = self.cluster.ledger.modelled_time() - t0
+        if batch_handles:
+            # close out any stacked slice whose member ended up declining
+            # solo (re-planned / invalidated mid-pass) so the shared epoch
+            # barrier still settles
+            jx = sys.modules.get("repro.core.jaxplan")
+            if jx is not None:
+                jx.finish_batches(batch_handles, self.cluster.ledger)
         self._last_schedule = {
             "policy": policy,
             "weights": {t: float(w) for t, w in sorted(weights.items())},
             "planned": entries,
             "ccts": ccts,
             "failures": failures,
+            "batches": batches,
             "mean_cct_s": float(np.mean(list(ccts.values()))) if ccts else 0.0,
             "makespan_s": max(ccts.values(), default=0.0),
         }
         return results
+
+    def _prepare_batches(self, subs) -> tuple[list, list[dict]]:
+        """Group drained submissions that will replay on the jax executor
+        with one trace signature AND identical routing tables, and run each
+        group of >= 2 as ONE vmapped dispatch up front
+        (:func:`repro.core.jaxplan.prepare_batch`).  Members then consume
+        their output slice when the scheduled pass reaches them, charging
+        their own tenant's ledger lanes exactly as a serial replay would;
+        the probe itself is side-effect-free (``plan_cache.peek``, no
+        counters), so per-member metrics/journal records are written only by
+        the real execution path.  A submission that fails the probe simply
+        runs solo and reports its own fallback reason."""
+        candidates = []
+        for s in subs:
+            client = self._clients.get(s.tenant)
+            if client is None or s.kwargs.get("shuffle_id") is not None:
+                continue
+            kw = s.kwargs
+            if (client.knob("execution", kw.get("execution")) != "auto"
+                    or client.knob("executor", kw.get("executor")) != "jax"
+                    or client.knob("resilience", kw.get("resilience")) != "off"
+                    or client.knob("storage", kw.get("storage")) != "off"):
+                continue
+            try:
+                template = self.manager.get_template(s.template_id, wid=None)
+            except Exception:
+                continue                      # unknown template fails solo
+            balance = client.knob("balance", kw.get("balance"))
+            if balance == "auto" and not template.rebalanceable:
+                balance = "off"
+            streaming = client.knob("streaming", kw.get("streaming"))
+            if streaming == "auto" and not template.streamable:
+                streaming = "off"
+            if streaming != "off" or balance not in BALANCE_MODES:
+                continue
+            part_fn = kw.get("part_fn", HASH_PART)
+            comb_fn = kw.get("comb_fn")
+            rate = kw.get("rate", 0.01)
+            skew_threshold = client.knob("skew_threshold",
+                                         kw.get("skew_threshold"))
+            key = plan_key(s.template_id, self.topology,
+                           tuple(s.srcs), tuple(s.dsts),
+                           stats_signature(s.bufs, part_fn, comb_fn, rate,
+                                           balance=balance,
+                                           skew_threshold=skew_threshold,
+                                           streaming="off", stream=None))
+            plan = self.plan_cache.peek(key, s.tenant)
+            if plan is None or plan.stream is not None:
+                continue
+            probe = ShuffleArgs(
+                template_id=s.template_id, shuffle_id=-1,
+                srcs=tuple(s.srcs), dsts=tuple(s.dsts),
+                part_fn=part_fn, comb_fn=comb_fn, rate=rate,
+                seed=kw.get("seed", 0), tenant=s.tenant, balance=balance,
+                skew_threshold=skew_threshold, plan=plan)
+            candidates.append((probe, s))
+        if len(candidates) < 2:
+            return [], []
+        from . import jaxplan
+        groups: dict[tuple, list] = {}
+        for probe, s in candidates:
+            sig = jaxplan.batch_signature(self.cluster, probe, s.bufs)
+            if sig is not None:
+                groups.setdefault(sig, []).append((probe, s))
+        handles, batches = [], []
+        for members in groups.values():
+            if len(members) < 2:
+                continue
+            handle = jaxplan.prepare_batch(
+                self.cluster, [(p, s.bufs) for p, s in members])
+            if handle is None:
+                continue
+            handles.append(handle)
+            batches.append({
+                "template": members[0][0].template_id,
+                "size": len(members),
+                "tickets": [s.ticket for _, s in members],
+                "tenants": sorted({s.tenant for _, s in members}),
+            })
+            self._m_batched.inc(template=members[0][0].template_id)
+        return handles, batches
 
     def last_schedule(self) -> dict | None:
         """The most recent ``run_pending`` pass: policy, effective weights,

@@ -372,6 +372,24 @@ def scatter_part_fn(base: PartFn, decision: SkewDecision) -> PartFn:
     return PartFn(f"{base.name}+skew", assign)
 
 
+def scatter_tables(decision: SkewDecision) -> tuple[np.ndarray, np.ndarray,
+                                                    np.ndarray]:
+    """The scatter as dense arrays for a traced replay: sorted hot keys
+    ``[H]`` (int64), a zero-padded share-slot table ``[H, S]`` (int32, rows
+    aligned with the hot keys), and per-key share counts ``[H]`` (int32).
+    A hot row's destination is ``share[key_row, occurrence % count]`` — the
+    same occurrence cycle :func:`scatter_part_fn` applies positionally."""
+    keys = decision.split_keys()
+    shares = [np.asarray(s, dtype=np.int32) for _, s in decision.splits]
+    width = max((s.size for s in shares), default=1)
+    table = np.zeros((keys.size, width), np.int32)
+    counts = np.zeros((keys.size,), np.int32)
+    for i, s in enumerate(shares):
+        table[i, :s.size] = s
+        counts[i] = s.size
+    return keys, table, counts
+
+
 def owner_merge_plan(decision: SkewDecision, part_fn: PartFn,
                      dsts: tuple[int, ...]) -> dict[int, tuple[np.ndarray, tuple[int, ...]]]:
     """owner wid -> (owned hot keys, sharer wids) for the final merge stage.

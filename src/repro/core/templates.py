@@ -457,10 +457,12 @@ class ShuffleResult:
     engine: str = "threaded"              # which executor produced the bytes
     fallback_reason: str | None = None    # why the *requested* engine declined
     # ^ None when the requested engine ran; otherwise its decline code (e.g.
-    #   "template_not_lowerable", "unsupported_combiner",
-    #   "skew_rebalance_triggered") — see jaxplan.decline_reason and
-    #   vectorized.vectorize_decline.  The full chain lives in the service's
+    #   "unsupported_combiner", "streamed_replay", "grid_mismatch") — see
+    #   jaxplan.decline_reason and vectorized.vectorize_decline.  Always the
+    #   shuffle's OWN code, including for members of a batched dispatch that
+    #   individually declined.  The full chain lives in the service's
     #   per-shuffle report (cluster.explain).
+    batched: bool = False                 # member of one vmapped batch dispatch?
 
 
 def aggregate_observed(per_worker: list[list[tuple]]) -> dict[str, float]:

@@ -31,10 +31,12 @@ EXECUTORS = ("threaded", "vectorized", "jax")
 WORKLOADS = ("uniform", "zipf")
 WORKERS = list(range(8))
 
-# Templates the batched-numpy replay supports; the jitted replay supports the
-# same set (asserted against repro.core identities in test_conformance).
+# Templates the batched-numpy replay supports.  The jitted replay now covers
+# every built-in template, including the irregular bruck / two_level routes
+# (asserted against repro.core identities in test_conformance).
 VECTORIZED_TEMPLATES = frozenset(
     {"vanilla_push", "vanilla_pull", "coordinated", "network_aware"})
+JAX_TEMPLATES = frozenset(ALL_TEMPLATES)
 
 
 def make_topology(**kw):
@@ -158,7 +160,7 @@ def expected_engine(template, executor):
     """Which data plane a cache-hit replay must report for a matrix cell:
     executors fall back down the jax -> vectorized -> threaded ladder for
     templates their lowering does not cover."""
-    if executor == "jax" and template in VECTORIZED_TEMPLATES:
+    if executor == "jax" and template in JAX_TEMPLATES:
         return "jax"
     if executor in ("jax", "vectorized") \
             and template in VECTORIZED_TEMPLATES:

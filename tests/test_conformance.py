@@ -10,11 +10,12 @@ identically.  ``tests/conformance.py`` holds the shared harness.
 import numpy as np
 import pytest
 
+import conformance
 from conformance import (ALL_TEMPLATES, EXECUTORS, VECTORIZED_TEMPLATES,
                          WORKLOADS, assert_identical, assert_stats_identical,
                          conformance_case, copy_bufs, expected_engine,
                          make_bufs, service_for, workers_for)
-from repro.core import MAX, MIN, SUM
+from repro.core import MAX, MIN, SUM, datacenter
 from repro.core.jaxplan import JAX_TEMPLATES
 from repro.core.vectorized import VECTORIZABLE
 
@@ -22,8 +23,8 @@ from repro.core.vectorized import VECTORIZABLE
 def test_harness_template_sets_match_core():
     """The harness's fallback expectations mirror the executors' own
     support sets — if a template is ever promoted, this fails first."""
-    assert VECTORIZED_TEMPLATES == VECTORIZABLE == JAX_TEMPLATES
-    assert set(ALL_TEMPLATES) >= VECTORIZED_TEMPLATES
+    assert VECTORIZED_TEMPLATES == VECTORIZABLE
+    assert JAX_TEMPLATES == set(ALL_TEMPLATES) == conformance.JAX_TEMPLATES
 
 
 @pytest.mark.parametrize("workload", WORKLOADS)
@@ -49,7 +50,7 @@ def test_executor_matrix_byte_identity(template, workload):
 
 
 @pytest.mark.parametrize("comb", [None, MIN, MAX], ids=["concat", "min", "max"])
-@pytest.mark.parametrize("template", sorted(VECTORIZED_TEMPLATES))
+@pytest.mark.parametrize("template", ALL_TEMPLATES)
 def test_executor_matrix_combiners(template, comb):
     """Replay planes agree for order-insensitive folds and for plain
     concatenation (comb None) too, not just the order-sensitive SUM."""
@@ -100,6 +101,31 @@ def test_decisions_conform():
     for ex in EXECUTORS:
         got = [(lv, ec.beneficial) for lv, ec in cells[ex][1].decisions]
         assert got == ref_levels
+
+
+def test_skew_rebalanced_replay_conforms():
+    """A plan whose instantiation triggered the hot-key rebalance replays
+    byte-identically on *every* executor — the jitted plane freezes the
+    scatter split into the traced program rather than declining."""
+    workers = list(range(8))
+    results = {}
+    for ex in EXECUTORS:
+        sv = service_for(ex, topo=datacenter(4, 2, 1))
+        bufs = make_bufs(workers, "zipf", n=8000, key_space=500, width=1)
+        sv.shuffle("vanilla_push", copy_bufs(bufs), workers, workers,
+                   comb_fn=SUM, balance="auto")
+        hit = sv.shuffle("vanilla_push", copy_bufs(bufs), workers, workers,
+                         comb_fn=SUM, balance="auto")
+        rebalance = dict(hit.decisions).get("rebalance")
+        assert rebalance is not None and rebalance.triggered  # else vacuous
+        assert hit.cached
+        results[ex] = hit
+    assert results["jax"].engine == "jax"
+    assert results["jax"].fallback_reason is None
+    assert results["vectorized"].engine == "vectorized"
+    for ex in ("vectorized", "jax"):
+        assert_identical(results[ex].bufs, results["threaded"].bufs)
+        assert_stats_identical(results[ex].stats, results["threaded"].stats)
 
 
 def test_zipf_workload_is_actually_skewed():

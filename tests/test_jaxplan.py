@@ -5,14 +5,23 @@ What the conformance matrix (test_conformance.py) does not already pin:
 * compilation economics — the whole replay is ONE rolled ``lax.scan``
   program, so repeated hits, and even *different plans* with the same shape
   signature, reuse a single trace (``replay_cache_size`` deltas);
-* the decline ladder — streaming, triggered skew, fault state, unsupported
-  templates, and exotic partFuncs all fall back (jax -> vectorized ->
-  threaded) with correct engine markers and no behavior change;
+* full template coverage — the irregular bruck / two_level routes and
+  triggered skew rebalances now replay jitted (no decline), byte-identical
+  to the threaded reference;
+* the decline ladder — streaming, fault state, custom templates, and exotic
+  partFuncs still fall back (jax -> vectorized -> threaded) with correct
+  engine markers and no behavior change;
+* trace-cache economics — the LRU bound (``set_replay_cache_limit``) evicts
+  oldest programs and counts ``trace_evictions``;
+* batched multi-tenant dispatch — same-signature wfair submissions execute
+  as one vmapped program with per-tenant ledger lanes identical to serial;
 * the executor knob stack — per-call > per-tenant > cluster resolution;
 * plan-lifetime lowering reuse (``plancache.attach_lowering``);
-* the opt-in Pallas kernel plane (PART via ``partition_permute``, COMB via
+* the Pallas kernel plane (PART via ``partition_permute``, COMB via
   ``segment_combine``) against the bit-exact default plane.
 """
+import math
+
 import numpy as np
 import pytest
 
@@ -20,9 +29,10 @@ from conformance import (assert_identical, conformance_case, copy_bufs,
                          make_bufs, make_topology, service_for, workers_for)
 from repro.core import (SUM, Msgs, PartFn, TeShuCluster, TeShuService,
                         datacenter)
-from repro.core.jaxplan import (kernel_global_stage, lower_plan,
-                                replay_cache_size, set_kernel_plane,
-                                try_run_jax)
+from repro.core.jaxplan import (kernel_global_stage, lower_plan, plan_decline,
+                                replay_cache_limit, replay_cache_size,
+                                set_kernel_plane, set_replay_cache_limit,
+                                trace_evictions, try_run_jax)
 from repro.core.plancache import get_lowering
 
 WORKERS = list(range(8))
@@ -75,6 +85,29 @@ def test_distinct_spec_is_a_new_trace():
     assert replay_cache_size() == before + 1
 
 
+def test_trace_cache_is_a_bounded_lru():
+    """``replay_cache_limit`` bounds the program cache: pushing more distinct
+    shapes than the limit evicts the oldest traces and counts them in
+    ``trace_evictions`` (surfaced as ``teshu_jit_trace_evictions``)."""
+    sv = _jax_service()
+    prev = set_replay_cache_limit(4)
+    try:
+        assert replay_cache_limit() == 4
+        ev0 = trace_evictions()
+        for i in range(6):                      # 6 distinct shapes > limit 4
+            bufs = make_bufs(WORKERS, "uniform", n=401 + i)
+            r = _run_twice(sv, "vanilla_push", bufs, WORKERS, comb_fn=SUM)
+            assert r.engine == "jax"
+        assert replay_cache_size() <= 4
+        assert trace_evictions() > ev0
+        # a replayed shape still hits after evictions settle
+        bufs = make_bufs(WORKERS, "uniform", n=406)
+        assert sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                          comb_fn=SUM).engine == "jax"
+    finally:
+        set_replay_cache_limit(prev)
+
+
 # ---------------------------------------------------------------------------
 # the decline ladder
 # ---------------------------------------------------------------------------
@@ -93,19 +126,25 @@ def test_streaming_replay_falls_back_to_vectorized():
     assert_identical(hit.bufs, ref.bufs)
 
 
-def test_triggered_skew_falls_back_to_vectorized():
+def test_triggered_skew_replays_jitted():
     """A triggered rebalance rewrites PART into positional hot-key scatter —
-    decision state the lowering declines; the vectorized replay handles it."""
-    topo = datacenter(4, 2, 1)
+    the lowering freezes the split tables into the traced program and replays
+    jitted, byte-identical to the threaded reference."""
     bufs = make_bufs(WORKERS, "zipf", n=8000, key_space=500, width=1)
-    sv = TeShuService(topo, executor="jax")
-    sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
-               comb_fn=SUM, balance="auto")
-    hit = sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
-                     comb_fn=SUM, balance="auto")
+
+    def run(executor):
+        sv = service_for(executor, topo=datacenter(4, 2, 1))
+        sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                   comb_fn=SUM, balance="auto")
+        return sv.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                          comb_fn=SUM, balance="auto")
+
+    hit = run("jax")
     rebalance = dict(hit.decisions).get("rebalance")
     assert rebalance is not None and rebalance.triggered  # else vacuous
-    assert hit.cached and hit.engine == "vectorized"
+    assert hit.cached and hit.engine == "jax"
+    assert hit.fallback_reason is None
+    assert_identical(hit.bufs, run("threaded").bufs)
 
 
 def test_fault_state_falls_back_to_threaded():
@@ -122,15 +161,20 @@ def test_fault_state_falls_back_to_threaded():
     assert_identical(hit.bufs, ref.bufs)
 
 
-def test_unsupported_template_falls_back_to_threaded():
-    """bruck / two_level interleave sequential SEND/RECV rounds: neither
-    replay plane lowers them; the plan still skips re-instantiation."""
+def test_irregular_templates_replay_jitted():
+    """bruck / two_level interleave sequential SEND/RECV rounds: the lowering
+    freezes the round/phase structure into static routing tables and replays
+    them jitted, byte-identical to the threaded reference."""
     for template in ("bruck", "two_level"):
         workers = workers_for(template)
         bufs = make_bufs(workers, "uniform")
         sv = _jax_service()
         hit = _run_twice(sv, template, bufs, workers, comb_fn=SUM)
-        assert hit.cached and hit.engine == "threaded"
+        assert hit.cached and hit.engine == "jax"
+        assert hit.fallback_reason is None
+        ref = _run_twice(service_for("threaded"), template, bufs, workers,
+                         comb_fn=SUM)
+        assert_identical(hit.bufs, ref.bufs)
 
 
 def test_exotic_part_fn_falls_back_to_vectorized():
@@ -193,11 +237,18 @@ def test_lowering_is_attached_to_the_cached_plan():
 
 
 def test_lower_plan_declines_unsupported_shapes():
+    """bruck's lowering is a ring simulation: a plan whose destination set is
+    not the source ring has no static round structure to freeze."""
+    import dataclasses
+
     bufs = make_bufs(WORKERS, "uniform")
     sv = service_for("threaded")
     _run_twice(sv, "bruck", bufs, WORKERS, comb_fn=SUM)
     (_, plan), = sv.plan_cache._spaces["default"].plans.items()
-    assert lower_plan(plan) is None
+    assert lower_plan(plan) is not None               # the real ring lowers
+    broken = dataclasses.replace(plan, dsts=tuple(WORKERS[:4]))
+    assert plan_decline(broken) == "ring_mismatch"
+    assert lower_plan(broken) is None
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +292,91 @@ def test_kernel_global_stage_matches_numpy_fold():
         np.testing.assert_array_equal(kk, sorted(expect))
         for i, k in enumerate(kk):
             np.testing.assert_allclose(vv[i], expect[k], rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-tenant dispatch
+# ---------------------------------------------------------------------------
+
+def _batch_cluster():
+    cl = TeShuCluster(make_topology(), execution="auto", executor="jax")
+    return cl, [cl.tenant(f"t{i}") for i in range(4)]
+
+
+def test_batched_dispatch_matches_serial():
+    """>=4 same-signature wfair submissions execute as ONE vmapped dispatch:
+    outputs byte-identical to serial, per-tenant byte lanes split exactly as
+    serial (cost lanes to the ulp), and the shared epoch makes the batch's
+    modelled cost strictly cheaper than four serial jax hits."""
+    bufs = make_bufs(WORKERS, "zipf")
+
+    def run(batched):
+        cl, tenants = _batch_cluster()
+        for t in tenants:                       # warm: plan + trace per tenant
+            t.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM)
+            t.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM)
+        snap0 = cl.cluster.ledger.snapshot()
+        if batched:
+            tickets = [t.submit("vanilla_push", copy_bufs(bufs), WORKERS,
+                                WORKERS, comb_fn=SUM) for t in tenants]
+            results = cl.run_pending()
+            out = [results[tk] for tk in tickets]
+        else:
+            out = [t.shuffle("vanilla_push", copy_bufs(bufs), WORKERS,
+                             WORKERS, comb_fn=SUM) for t in tenants]
+        return cl, out, snap0, cl.cluster.ledger.snapshot()
+
+    _, serial, s0, s1 = run(False)
+    clb, batch, b0, b1 = run(True)
+    (entry,) = clb.last_schedule()["batches"]
+    assert entry["template"] == "vanilla_push" and entry["size"] == 4
+    for r_s, r_b in zip(serial, batch):
+        assert r_s.engine == "jax" and not r_s.batched
+        assert r_b.engine == "jax" and r_b.batched and r_b.cached
+        assert r_b.fallback_reason is None
+        assert_identical(r_b.bufs, r_s.bufs)
+    for lane, exact in (("bytes_per_tenant", True), ("cost_per_tenant", False)):
+        ds = {k: s1[lane][k] - s0[lane].get(k, 0) for k in s1[lane]}
+        db = {k: b1[lane][k] - b0[lane].get(k, 0) for k in b1[lane]}
+        assert set(ds) == set(db)
+        for k in ds:
+            if exact:
+                assert ds[k] == db[k], (lane, k, ds[k], db[k])
+            else:                               # running float sum: ulp noise
+                assert math.isclose(ds[k], db[k], rel_tol=1e-9,
+                                    abs_tol=1e-18), (lane, k, ds[k], db[k])
+    assert (b1["modelled_time_s"] - b0["modelled_time_s"]) \
+        < (s1["modelled_time_s"] - s0["modelled_time_s"])
+
+
+def test_batch_member_declines_with_its_own_reason():
+    """A submission that cannot join the vmapped dispatch (here: a partFunc
+    outside the jnp registry) runs solo and reports its OWN reason code —
+    not a batch-level code, and not another member's."""
+    mod = PartFn("mod", lambda keys, ndst: keys % ndst)
+    cl, tenants = _batch_cluster()
+    bufs = make_bufs(WORKERS, "uniform")
+    for t in tenants[:3]:
+        for _ in range(2):
+            t.shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                      comb_fn=SUM)
+    for _ in range(2):
+        tenants[3].shuffle("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                           part_fn=mod, comb_fn=SUM)
+    tickets = [t.submit("vanilla_push", copy_bufs(bufs), WORKERS, WORKERS,
+                        comb_fn=SUM) for t in tenants[:3]]
+    odd_ticket = tenants[3].submit("vanilla_push", copy_bufs(bufs), WORKERS,
+                                   WORKERS, part_fn=mod, comb_fn=SUM)
+    results = cl.run_pending()
+    (entry,) = cl.last_schedule()["batches"]
+    assert entry["size"] == 3                   # the odd one never joined
+    for tk in tickets:
+        assert results[tk].engine == "jax" and results[tk].batched
+    odd = results[odd_ticket]
+    assert odd.engine == "vectorized" and not odd.batched
+    assert odd.fallback_reason == "unsupported_part_fn"
 
 
 # ---------------------------------------------------------------------------

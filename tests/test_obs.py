@@ -9,10 +9,11 @@ What the rest of the suite does not already pin:
   kind conflicts, collector merging, the Prometheus text format;
 * one source, no drift — ``teshu_plancache_*`` and the ledger gauges are
   *read* from their canonical owners at snapshot time;
-* the acceptance matrix of ``cluster.explain()`` reason codes: template
-  declines (bruck / two_level), custom-combiner declines, skew-triggered
-  declines, stats-signature key mismatches, and drift invalidations are all
-  machine-checkable strings;
+* the acceptance matrix of ``cluster.explain()`` reason codes:
+  custom-combiner declines, stats-signature key mismatches, and drift
+  invalidations are machine-checkable strings — and the rungs retired by
+  the full-coverage lowering (``template_not_lowerable`` on built-ins,
+  ``skew_rebalance_triggered``) are asserted dead;
 * the doctor CLI (``python -m repro.launch.doctor``) over a real journal;
 * the Shuffle Manager's progress/durations/stragglers views (satellite 3)
   and the versioned journal schema with tolerant migration (satellite 6).
@@ -216,27 +217,27 @@ def test_key_diff_names_signature_components():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("template", ["bruck", "two_level"])
-def test_explain_template_decline(template):
-    """bruck / two_level: neither replay plane lowers them — the report names
-    the requested engine's decline and the full fallback chain."""
+def test_explain_irregular_template_runs_jitted(template):
+    """bruck / two_level now lower: the report shows a clean jitted replay —
+    the ``template_not_lowerable`` rung is DEAD for every built-in template
+    and must never be emitted (it remains reachable only for custom
+    registrations outside the lowering registry)."""
     workers = WORKERS[:4] if template == "two_level" else WORKERS
     sv = service_for("jax")
     bufs = make_bufs(workers, "uniform", n=263)
     hit = _run_twice(sv, template, bufs, workers, comb_fn=SUM,
                      shuffle_id=901)
-    assert hit.engine == "threaded"
-    assert hit.fallback_reason == "template_not_lowerable"
+    assert hit.engine == "jax"
+    assert hit.fallback_reason is None
     rep = sv.explain(901)
-    assert rep.requested_executor == "jax" and rep.engine == "threaded"
-    assert rep.fallback_reason == "template_not_lowerable"
-    assert rep.fallbacks == [
-        {"engine": "jax", "reason": "template_not_lowerable"},
-        {"engine": "vectorized", "reason": "template_not_vectorizable"}]
-    assert any("template_not_lowerable" in line for line in rep.why())
-    # the decline was counted per rung
+    assert rep.requested_executor == "jax" and rep.engine == "jax"
+    assert rep.fallback_reason is None
+    assert rep.fallbacks == []
+    assert not any("template_not_lowerable" in line for line in rep.why())
+    # no decline was counted on any rung
     m = sv.obs.metrics
     assert m.get("teshu_fallbacks_total", tenant=DEFAULT_TENANT,
-                 engine="jax", reason="template_not_lowerable") == 1.0
+                 engine="jax", reason="template_not_lowerable") == 0.0
 
 
 def test_explain_custom_combiner_decline():
@@ -256,9 +257,11 @@ def test_explain_custom_combiner_decline():
     assert rep.engine == "vectorized"
 
 
-def test_explain_skew_triggered_decline():
-    """A triggered rebalance rewrites PART into hot-key scatter — plan state
-    the jax lowering declines; explain names the skew verdict too."""
+def test_explain_skew_triggered_runs_jitted():
+    """A triggered rebalance rewrites PART into hot-key scatter — the jax
+    lowering now freezes the split tables into the trace: explain reports a
+    clean jitted replay (the ``skew_rebalance_triggered`` reason code is
+    dead and must never be emitted), while still naming the skew verdict."""
     topo = datacenter(4, 2, 1)
     sv = TeShuService(topo, executor="jax")
     bufs = make_bufs(WORKERS, "zipf", n=8000, key_space=500, width=1)
@@ -266,12 +269,14 @@ def test_explain_skew_triggered_decline():
                      balance="auto", shuffle_id=903)
     rebalance = dict(hit.decisions).get("rebalance")
     assert rebalance is not None and rebalance.triggered  # else vacuous
-    assert hit.fallback_reason == "skew_rebalance_triggered"
+    assert hit.engine == "jax"
+    assert hit.fallback_reason is None
     rep = sv.explain(903)
-    assert rep.fallback_reason == "skew_rebalance_triggered"
+    assert rep.engine == "jax" and rep.fallback_reason is None
+    assert rep.fallbacks == []
     assert rep.skew is not None and rep.skew["triggered"]
     assert rep.skew["splits"] == len(rebalance.splits)
-    assert any("skew rebalance triggered" in line for line in rep.why())
+    assert not any("skew_rebalance_triggered" in line for line in rep.why())
 
 
 def test_explain_stats_signature_miss():
