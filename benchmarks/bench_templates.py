@@ -11,6 +11,7 @@ overhead plus recovery-from-store vs naive re-execution)."""
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import time
 
@@ -738,6 +739,120 @@ def storage_profile(iters: int = 3, *, smoke: bool = False,
     return out
 
 
+def elastic_profile(*, smoke: bool = False,
+                    json_path: str | None = None) -> CsvOut:
+    """Fixed vs elastic topology under a bursty multi-tenant backlog.
+
+    Two traces through three cluster shapes, on both replay executors:
+
+    * ``bursty``  — nine coflows across three tenants submitted at once: the
+      backlog regime where the :class:`BacklogPolicy` grows one burst rack
+      at the first coflow boundary and re-targets every queued coflow onto
+      the widened worker set;
+    * ``uniform`` — two coflows, below the backlog threshold: the policy
+      must hold (zero scale events) and the elastic cluster must behave
+      exactly like the fixed one.
+
+    Modes: ``fixed`` (the 8-worker base cluster), ``elastic`` (same base,
+    ``elastic="auto"`` capped at 12 workers), and ``fixed_grown`` (a cluster
+    *born* at 12 workers running the widened trace — the byte-identity
+    reference for the elastic run).  ``digest`` hashes every coflow's
+    per-destination output buffers in physical row order, so the CI gate can
+    assert the elastic run's bytes match the born-grown reference on the
+    bursty trace and the fixed base on the uniform trace.  When ``json_path``
+    is set the rows are written machine-readable (``BENCH_elastic.json``),
+    consumed by the ``elastic-bench-smoke`` CI job, which gates on elastic
+    makespan strictly below fixed under backlog, byte identity, and zero
+    scale events on the uniform trace.
+    """
+    out = CsvOut("elastic_profile",
+                 ["trace", "mode", "executor", "coflows", "scale_events",
+                  "workers_final", "makespan_ms", "mean_cct_ms", "digest",
+                  "wall_ms"])
+    # a combine-bound fabric: fat non-oversubscribed pipes, slow combiner.
+    # Scale-out pays when the tail is per-receiver work, not sender wire
+    # time -- burst receivers split the combine load, so the makespan win
+    # is a property of the regime, not of a lucky workload size.
+    fabric = dict(intra_server_bw=50e9, intra_rack_bw=50e9,
+                  oversubscription=1.0, combine_bytes_per_s=2e8)
+    base = datacenter(2, 2, 2, **fabric)                   # 8 workers
+    grown = datacenter(2, 2, 3, **fabric)                  # born at 12
+    nw = base.num_workers
+    scale = 1 if smoke else 4
+    n_per = 2_000 * scale
+
+    def submit_trace(cl: TeShuCluster, trace: str) -> list[int]:
+        # sources always live on the 8 base workers; destinations are "all
+        # workers" of whatever size the receiving cluster was born at (the
+        # elastic coordinator re-targets its own at the scale-out boundary)
+        dsts = list(range(cl.topology.num_workers))
+        tickets = []
+        for i in range(9 if trace == "bursty" else 2):
+            t = cl.tenant(("etl", "ml", "adhoc")[i % 3])
+            tickets.append(t.submit(
+                "vanilla_push",
+                zipf_shards(nw, n_per, 4_096, alpha=0.0, seed=80 + i),
+                list(range(nw)), dsts, comb_fn=SUM, stage=f"s{i}"))
+        return tickets
+
+    def digest(results: dict, tickets: list[int]) -> str:
+        h = hashlib.sha256()
+        for i, tk in enumerate(tickets):
+            res = results[tk]
+            if isinstance(res, Exception):
+                raise res
+            for d in sorted(res.bufs):
+                m = res.bufs[d]
+                h.update(np.int64(i).tobytes())
+                h.update(np.int64(d).tobytes())
+                h.update(np.ascontiguousarray(m.keys).tobytes())
+                h.update(np.ascontiguousarray(m.vals).tobytes())
+        return h.hexdigest()[:16]
+
+    rows = []
+    for executor in ("vectorized", "jax"):
+        for trace in ("bursty", "uniform"):
+            arms = [
+                ("fixed", TeShuCluster(base, execution="auto",
+                                       executor=executor)),
+                ("elastic", TeShuCluster(base, execution="auto",
+                                         executor=executor, elastic="auto",
+                                         elastic_level="rack",
+                                         elastic_backlog=4,
+                                         elastic_max_workers=grown.num_workers)),
+                ("fixed_grown", TeShuCluster(grown, execution="auto",
+                                             executor=executor)),
+            ]
+            for mode, cl in arms:
+                tickets = submit_trace(cl, trace)
+                t0 = time.perf_counter()
+                results = cl.run_pending(policy="fifo")
+                wall = time.perf_counter() - t0
+                sched = cl.last_schedule()
+                row = dict(
+                    trace=trace, mode=mode, executor=executor,
+                    coflows=len(sched["ccts"]),
+                    scale_events=len([e for e
+                                      in sched.get("scale_events", ())
+                                      if e["kind"] != "deny"]),
+                    workers_final=cl.topology.num_workers,
+                    makespan_ms=sched["makespan_s"] * 1e3,
+                    mean_cct_ms=sched["mean_cct_s"] * 1e3,
+                    digest=digest(results, tickets),
+                    wall_ms=wall * 1e3)
+                rows.append(row)
+                out.add(**row)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"meta": {"bench": "elastic_profile", "workers": nw,
+                                "grown_workers": grown.num_workers,
+                                "n_per_worker": n_per,
+                                "template": "vanilla_push", "smoke": smoke},
+                       "rows": rows}, f, indent=2)
+            f.write("\n")
+    return out
+
+
 def run() -> list[CsvOut]:
     return [table3(), template_profile(), plan_cache_profile(),
             skew_profile(json_path="BENCH_skew.json"),
@@ -745,7 +860,8 @@ def run() -> list[CsvOut]:
             multitenant_profile(json_path="BENCH_multitenant.json"),
             jaxplan_profile(json_path="BENCH_jaxplan.json"),
             observability_profile(json_path="BENCH_obs.json"),
-            storage_profile(json_path="BENCH_storage.json")]
+            storage_profile(json_path="BENCH_storage.json"),
+            elastic_profile(json_path="BENCH_elastic.json")]
 
 
 if __name__ == "__main__":
@@ -762,6 +878,8 @@ if __name__ == "__main__":
                     help="run only the telemetry-overhead benchmark")
     ap.add_argument("--storage-only", action="store_true",
                     help="run only the durable-storage benchmark")
+    ap.add_argument("--elastic-only", action="store_true",
+                    help="run only the elastic-topology benchmark")
     ap.add_argument("--smoke", action="store_true",
                     help="small-scale run (CI)")
     ap.add_argument("--skew-json", default="BENCH_skew.json",
@@ -776,6 +894,8 @@ if __name__ == "__main__":
                     help="path for the machine-readable telemetry output")
     ap.add_argument("--storage-json", default="BENCH_storage.json",
                     help="path for the machine-readable storage output")
+    ap.add_argument("--elastic-json", default="BENCH_elastic.json",
+                    help="path for the machine-readable elastic output")
     args = ap.parse_args()
     if args.skew_only:
         skew_profile(smoke=args.smoke, json_path=args.skew_json).emit()
@@ -794,6 +914,9 @@ if __name__ == "__main__":
     elif args.storage_only:
         storage_profile(smoke=args.smoke,
                         json_path=args.storage_json).emit()
+    elif args.elastic_only:
+        elastic_profile(smoke=args.smoke,
+                        json_path=args.elastic_json).emit()
     else:
         for t in run():
             t.emit()

@@ -35,10 +35,13 @@ from .templates import TEMPLATES, ShuffleTemplate
 # (stage/attempt/info/tenant, all defaulted on read); 1 = the first version
 # that stamps itself; 2 = durable-storage record kinds ``spill`` (a shuffle's
 # PART outputs were flushed to the shuffle store) and ``restore`` (a recovery
-# served surviving senders' partitions from the store).  The reader is
-# tolerant both ways: lines without ``v`` replay as version 0, and unknown
-# fields from future versions are ignored, so v0/v1 journals still recover.
-JOURNAL_VERSION = 2
+# served surviving senders' partitions from the store); 3 = elastic-topology
+# record kinds ``scale_out`` / ``scale_in`` (the cluster grew / drained burst
+# workers) and ``drain_handoff`` (a scale-in victim's staged store blocks
+# were flushed before removal).  The reader is tolerant both ways: lines
+# without ``v`` replay as version 0, and unknown fields from future versions
+# are ignored, so v0/v1/v2 journals still recover.
+JOURNAL_VERSION = 3
 
 
 @dataclasses.dataclass
@@ -52,7 +55,10 @@ class ShuffleRecord:
     ``recovery`` (restart/resume decision for a retry attempt), ``speculation``
     (straggler work duplicated onto backups), ``spill`` (schema v2: blocks
     flushed to the durable shuffle store), ``restore`` (schema v2: a recovery
-    served senders from the store).  Old journals (no ``stage`` /
+    served senders from the store), ``scale_out``/``scale_in``/
+    ``drain_handoff`` (schema v3: elastic topology events; ``shuffle_id`` is
+    ``-1`` — they are cluster-scope, not shuffle-scope).  Old journals (no
+    ``stage`` /
     ``attempt`` / ``info`` / ``tenant`` fields) still replay: the new fields
     default — in particular, records written before the multi-tenant service
     existed belong to :data:`~repro.core.tenancy.DEFAULT_TENANT`, which is
@@ -191,6 +197,27 @@ class ShuffleManager:
         from the shuffle store instead of re-executing them."""
         self._append(ShuffleRecord(-1, shuffle_id, "", "restore", self._clock(),
                                    attempt=attempt, info=info, tenant=tenant))
+
+    def record_scale_out(self, info: dict,
+                         tenant: str = DEFAULT_TENANT) -> None:
+        """Schema v3: burst workers joined the topology (ids, new size,
+        epoch, reason in ``info``).  Cluster-scope: ``shuffle_id`` is -1."""
+        self._append(ShuffleRecord(-1, -1, "", "scale_out", self._clock(),
+                                   info=info, tenant=tenant))
+
+    def record_scale_in(self, info: dict,
+                        tenant: str = DEFAULT_TENANT) -> None:
+        """Schema v3: burst workers were drained out of the topology."""
+        self._append(ShuffleRecord(-1, -1, "", "scale_in", self._clock(),
+                                   info=info, tenant=tenant))
+
+    def record_drain_handoff(self, info: dict,
+                             tenant: str = DEFAULT_TENANT) -> None:
+        """Schema v3: a scale-in victim's staged store blocks were flushed
+        (worker ids, block/byte counts in ``info``) before removal — the
+        journal evidence that graceful drain lost nothing."""
+        self._append(ShuffleRecord(-1, -1, "", "drain_handoff", self._clock(),
+                                   info=info, tenant=tenant))
 
     def record_speculation(self, shuffle_id: int, info: dict,
                            attempt: int = 0,

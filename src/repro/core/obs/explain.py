@@ -46,6 +46,8 @@ class ShuffleReport:
     drift: dict | None = None              # invalidation this run triggered
     storage: dict | None = None            # store mode / spill + restore
     #                                        telemetry / decline reason
+    elastic: dict | None = None            # topology epoch / size / burst ids
+    #                                        when the run saw a scaled cluster
     status: str | None = None              # "ok" | "failed" | None (unknown)
     attempts: int = 0
     streamed: bool = False
@@ -104,6 +106,11 @@ class ShuffleReport:
                     f"restored {st['restored_blocks']} block(s) / "
                     f"{st.get('restored_bytes', 0)} bytes from the shuffle "
                     "store")
+        if self.elastic is not None:
+            out.append(
+                f"ran on an elastically scaled topology: epoch "
+                f"{self.elastic.get('epoch')}, {self.elastic.get('workers')} "
+                f"worker(s), burst {self.elastic.get('burst', [])}")
         if self.status == "failed":
             out.append("shuffle failed (see .failures)")
         elif self.attempts > 1:
@@ -124,7 +131,7 @@ def build_report(cluster, shuffle_id: int) -> ShuffleReport:
     if noted:
         for field in ("tenant", "template", "execution", "requested_executor",
                       "engine", "fallback_reason", "cache", "skew", "drift",
-                      "storage", "status"):
+                      "storage", "elastic", "status"):
             if field in noted:
                 setattr(rep, field, noted[field])
         rep.fallbacks = list(noted.get("fallbacks", ()))

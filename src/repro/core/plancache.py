@@ -161,10 +161,40 @@ def stats_signature(
     )
 
 
+def topology_tag(topology: NetworkTopology, epoch: int = 0) -> tuple:
+    """The key's topology component: the fingerprint, epoch-tagged when elastic.
+
+    Epoch 0 (every non-elastic cluster, and an elastic cluster before its
+    first scale event) keeps the bare fingerprint — keys are byte-identical
+    to the pre-elastic format, so existing journals, caches, and tests are
+    untouched.  After a scale event the tag becomes ``(fingerprint, epoch)``:
+    every plan cached under an older epoch stops being *reachable by key*
+    instantly — O(1) invalidation with no namespace scan — while remaining a
+    repair candidate (:func:`repro.core.resilience.repair.try_repair` re-keys
+    it onto the new epoch when the topology still fits).
+    """
+    fp = topology.fingerprint()
+    return fp if epoch == 0 else (fp, epoch)
+
+
+def split_topology_tag(tag: tuple) -> tuple[tuple, int]:
+    """Invert :func:`topology_tag` -> (fingerprint, epoch).
+
+    Unambiguous: a bare fingerprint is a tuple of level *tuples*, so its
+    second element is never an int.
+    """
+    if len(tag) == 2 and isinstance(tag[1], int):
+        return tag[0], tag[1]
+    return tag, 0
+
+
 def plan_key(template_id: str, topology: NetworkTopology,
-             srcs: Sequence[int], dsts: Sequence[int], signature: tuple) -> tuple:
-    """Full cache key: plans never alias across participant sets or topologies."""
-    return (template_id, topology.fingerprint(), tuple(srcs), tuple(dsts), signature)
+             srcs: Sequence[int], dsts: Sequence[int], signature: tuple,
+             epoch: int = 0) -> tuple:
+    """Full cache key: plans never alias across participant sets, topologies,
+    or elastic topology epochs."""
+    return (template_id, topology_tag(topology, epoch), tuple(srcs),
+            tuple(dsts), signature)
 
 
 # Positional names of the plan-key and stats-signature components, for the
@@ -182,6 +212,14 @@ def key_diff(a: tuple, b: tuple) -> list[str]:
     out = []
     for name, xa, xb in zip(KEY_COMPONENTS, a, b):
         if xa == xb:
+            continue
+        if name == "topology":
+            # same physical layout under different elastic epochs is an
+            # epoch-only divergence — its own diagnosis (the plan was
+            # invalidated by a scale event, not by a layout change)
+            fa, ea = split_topology_tag(xa)
+            fb, eb = split_topology_tag(xb)
+            out.append("topology" if fa != fb else "topology.epoch")
             continue
         if name != "signature":
             out.append(name)
@@ -315,7 +353,8 @@ _INVALIDATION_MEMORY = 512
 class _Namespace:
     """One tenant's private plan store: its own LRU order, budget, counters."""
 
-    __slots__ = ("plans", "hits_by_key", "capacity", "stats", "invalidated")
+    __slots__ = ("plans", "hits_by_key", "capacity", "stats", "invalidated",
+                 "tags")
 
     def __init__(self, capacity: int):
         self.plans: OrderedDict[tuple, CompiledPlan] = OrderedDict()
@@ -325,12 +364,29 @@ class _Namespace:
         # key -> why it was dropped ("reduction_drift" | "load_drift" |
         # "refresh" | "explicit"), bounded FIFO
         self.invalidated: OrderedDict[tuple, str] = OrderedDict()
+        # (topology-tag, srcs) -> live entry count: the cheap predicate
+        # behind the repair-scan short-circuit (has_repair_relatives); a
+        # handful of distinct pairs at most, maintained at every
+        # insert/remove
+        self.tags: dict[tuple, int] = {}
 
     def note_invalidated(self, key: tuple, kind: str) -> None:
         self.invalidated[key] = kind
         self.invalidated.move_to_end(key)
         while len(self.invalidated) > _INVALIDATION_MEMORY:
             self.invalidated.popitem(last=False)
+
+    def tag_add(self, key: tuple) -> None:
+        t = key[1:3]
+        self.tags[t] = self.tags.get(t, 0) + 1
+
+    def tag_drop(self, key: tuple) -> None:
+        t = key[1:3]
+        n = self.tags.get(t, 0) - 1
+        if n > 0:
+            self.tags[t] = n
+        else:
+            self.tags.pop(t, None)
 
 
 class PlanCache:
@@ -364,6 +420,10 @@ class PlanCache:
         self._spaces: dict[str, _Namespace] = {}
         self._lock = threading.Lock()
         self._metrics = None
+        # How many times repair has snapshotted a namespace (scan()).  Not
+        # part of _STATS_KEYS: it measures the *gate* in front of repair, not
+        # cache effectiveness, and the zero-scan regression test reads it.
+        self.scans = 0
 
     def _space(self, tenant: str) -> _Namespace:
         ns = self._spaces.get(tenant)
@@ -382,6 +442,7 @@ class PlanCache:
             while len(ns.plans) > ns.capacity:
                 old, _ = ns.plans.popitem(last=False)
                 ns.hits_by_key.pop(old, None)
+                ns.tag_drop(old)
                 ns.stats["evictions"] += 1
 
     # ---- lookup --------------------------------------------------------------
@@ -398,6 +459,7 @@ class PlanCache:
                 # no drift observations) get re-evaluated from fresh samples.
                 del ns.plans[key]
                 del ns.hits_by_key[key]
+                ns.tag_drop(key)
                 ns.note_invalidated(key, "refresh")
                 ns.stats["refreshes"] += 1
                 ns.stats["misses"] += 1
@@ -423,6 +485,8 @@ class PlanCache:
             ns = self._space(tenant)
             if repaired:
                 ns.stats["repairs"] += 1
+            if key not in ns.plans:
+                ns.tag_add(key)
             ns.plans[key] = plan
             ns.invalidated.pop(key, None)   # re-compiled: the drop is history
             ns.plans.move_to_end(key)
@@ -430,6 +494,7 @@ class PlanCache:
             while len(ns.plans) > ns.capacity:
                 old, _ = ns.plans.popitem(last=False)
                 ns.hits_by_key.pop(old, None)
+                ns.tag_drop(old)
                 ns.stats["evictions"] += 1
 
     def scan(self, tenant: str = DEFAULT_TENANT) -> list[tuple[tuple, CompiledPlan]]:
@@ -439,7 +504,22 @@ class PlanCache:
         crosses tenant namespaces; does not touch hit/miss accounting or LRU
         order."""
         with self._lock:
+            self.scans += 1
             return list(self._space(tenant).plans.items())
+
+    def has_repair_relatives(self, key: tuple,
+                             tenant: str = DEFAULT_TENANT) -> bool:
+        """Could a repair scan find a candidate for ``key`` in ``tenant``'s
+        namespace?  Sound over-approximation in O(#distinct pairs): every
+        repair case (degraded topology, elastic epoch re-key, lost-worker
+        participant subset) requires a cached plan differing from ``key`` in
+        its topology tag or its ``srcs`` — when every cached plan shares
+        both, no candidate can exist and the namespace :meth:`scan` is
+        skipped entirely (the cold healthy-cluster fast path)."""
+        with self._lock:
+            ns = self._spaces.get(tenant)
+            return ns is not None and any(t != key[1:3]
+                                          for t in ns.tags)
 
     def invalidate(self, key: tuple, tenant: str = DEFAULT_TENANT,
                    kind: str = "explicit") -> bool:
@@ -451,6 +531,7 @@ class PlanCache:
             if key in ns.plans:
                 del ns.plans[key]
                 ns.hits_by_key.pop(key, None)
+                ns.tag_drop(key)
                 ns.note_invalidated(key, kind)
                 ns.stats["invalidations"] += 1
                 return True
@@ -471,6 +552,7 @@ class PlanCache:
             for ns in spaces:
                 ns.plans.clear()
                 ns.hits_by_key.clear()
+                ns.tags.clear()
 
     # ---- drift ---------------------------------------------------------------
     def observe(self, key: tuple, observed: dict[str, float],

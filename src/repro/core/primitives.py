@@ -101,6 +101,24 @@ class CostLedger:
         self._restore_bytes = 0
         self._tenant_spill: dict[str, int] = {}
 
+    def retarget(self, topology: NetworkTopology) -> None:
+        """Swap the topology under the accounting (elastic grow/shrink).
+
+        Accounting continuity requires the same hierarchy shape — same level
+        count, same level names — so every per-level byte lane keeps its
+        meaning; only the worker count (and, in principle, bandwidths) may
+        change.  Open epochs keep their already-charged costs: a scale event
+        lands at a quiescent point, between shuffles.
+        """
+        if (len(topology.levels) != len(self.topology.levels)
+                or any(a.name != b.name for a, b in
+                       zip(topology.levels, self.topology.levels))):
+            raise ValueError("retarget requires a structurally identical "
+                             "hierarchy (same level count and names)")
+        with self._lock:
+            self.topology = topology
+            self._bws = np.array([lv.bw_bytes_per_s for lv in topology.levels])
+
     def _charge_lane(self, tenant: str | None, nbytes: int, cost: float) -> None:
         """Fold a charge into its tenant's lane (lock held by the caller)."""
         t = DEFAULT_TENANT if tenant is None else tenant
@@ -500,6 +518,17 @@ class LocalCluster:
     # ---- infrastructure ------------------------------------------------------
     def reset_ledger(self) -> None:
         self.ledger = CostLedger(self.topology)
+
+    def set_topology(self, topology: NetworkTopology) -> None:
+        """Grow or shrink the worker set in place (elastic scaling).
+
+        Mailboxes and publish boards are keyed lazily by worker id, so new
+        workers need no setup and removed workers leave no live state once
+        their shuffles have quiesced; the ledger is retargeted (not reset) so
+        byte lanes and modelled time accumulate across scale events.
+        """
+        self.topology = topology
+        self.ledger.retarget(topology)
 
     def _mailbox(self, src: int, dst: int) -> queue.Queue:
         q = self._mail.get((src, dst))

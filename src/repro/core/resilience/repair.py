@@ -21,9 +21,12 @@ rack-level brownout) then hit the cache directly and pay nothing at all.
 """
 from __future__ import annotations
 
+import dataclasses
+
 from ..adaptive import eff_cost_from_ratio
 from ..messages import PartFn
-from ..plancache import CompiledPlan, LevelDecision, PlanCache
+from ..plancache import CompiledPlan, LevelDecision, PlanCache, \
+    split_topology_tag
 from ..skew import estimate_slot_loads, plan_rebalance
 from ..tenancy import DEFAULT_TENANT
 from ..topology import Level, NetworkTopology
@@ -65,7 +68,7 @@ def repair_plan(
     link-degradation repairs keep the splits untouched (membership is
     placement, not bandwidth).
     """
-    old_fp = plan.key[1]
+    old_fp, _ = split_topology_tag(plan.key[1])
     new_fp = new_topology.fingerprint()
     changed = changed_level_indices(old_fp, new_fp)
     old_levels = _levels_from_fingerprint(old_fp)
@@ -149,26 +152,38 @@ def try_repair(cache: PlanCache, key: tuple, topology: NetworkTopology,
                tracer=None) -> CompiledPlan | None:
     """On a cache miss, try to derive the missing plan from a cached relative.
 
-    ``key`` is the (missed) full plan key ``(template, fingerprint, srcs,
+    ``key`` is the (missed) full plan key ``(template, topology-tag, srcs,
     dsts, signature)``.  Candidates must match the template and differ only by
-    topology fingerprint (link degradation, same signature) or by a
-    participant superset (worker loss, signature minus the lost workers'
-    count entries).  Candidates come from ``tenant``'s namespace alone —
-    repair never adapts (or leaks) another tenant's plans.  On success the
-    repaired plan is cached under ``key`` in the same namespace — so the
-    *next* identical failure scenario is a plain cache hit — and the cache's
-    ``repairs`` counter increments.
+    topology (link degradation or elastic growth/shrink, same signature), by
+    elastic epoch alone (same physical layout — the plan is *re-keyed*, no
+    level re-derived), or by a participant superset (worker loss, signature
+    minus the lost workers' count entries).  Candidates come from ``tenant``'s
+    namespace alone — repair never adapts (or leaks) another tenant's plans.
+    On success the repaired plan is cached under ``key`` in the same
+    namespace — so the *next* identical failure scenario is a plain cache
+    hit — and the cache's ``repairs`` counter increments.
     """
-    template_id, fingerprint, srcs, dsts, signature = key
+    template_id, tag, srcs, dsts, signature = key
+    fingerprint, _epoch = split_topology_tag(tag)
     sp = tracer.span("plan_repair", tenant=tenant, template=template_id) \
         if tracer is not None and tracer.enabled else None
     for cand_key, plan in reversed(cache.scan(tenant)):  # MRU candidates first
-        c_template, c_fp, c_srcs, c_dsts, c_sig = cand_key
+        c_template, c_tag, c_srcs, c_dsts, c_sig = cand_key
+        c_fp, _c_epoch = split_topology_tag(c_tag)
         if c_template != template_id:
             continue
+        if (c_fp == fingerprint and c_tag != tag and c_sig == signature
+                and (c_srcs, c_dsts) == (srcs, dsts)):
+            # epoch re-key: same physical layout under a different elastic
+            # epoch — the plan is exactly right, only its key went stale
+            repaired = dataclasses.replace(plan, key=key)
+            cache.put(key, repaired, repaired=True, tenant=tenant)
+            if sp is not None:
+                sp.end(outcome="repaired", levels=[], case="epoch_rekey")
+            return repaired
         if (c_sig == signature and c_fp != fingerprint
                 and (c_srcs, c_dsts) == (srcs, dsts)):
-            kwargs = {}                                 # degraded-topology case
+            kwargs = {}                          # topology-change case
         elif (c_fp == fingerprint and set(srcs) < set(c_srcs)
               and set(dsts) <= set(c_dsts)
               and _signature_shrinks_to(c_sig, signature)):
@@ -182,8 +197,15 @@ def try_repair(cache: PlanCache, key: tuple, topology: NetworkTopology,
             continue
         cache.put(key, repaired, repaired=True, tenant=tenant)
         if sp is not None:
-            sp.end(outcome="repaired", levels=list(levels),
-                   case=("lost_worker" if kwargs else "degraded_topology"))
+            if kwargs:
+                case = "lost_worker"
+            elif fingerprint[-1][1] != c_fp[-1][1]:
+                # outermost group_size differs: the worker set itself grew
+                # or shrank (elastic re-instantiation), not just link speeds
+                case = "grown_topology"
+            else:
+                case = "degraded_topology"
+            sp.end(outcome="repaired", levels=list(levels), case=case)
         return repaired
     if sp is not None:
         sp.end(outcome="no_candidate")

@@ -93,6 +93,9 @@ from typing import Sequence
 import numpy as np
 
 from .coscheduler import POLICIES, CoflowRequest, CoflowScheduler
+from .elastic import (BacklogPolicy, ElasticCoordinator, LoadMonitor,
+                      ManualPolicy, SCALE_IN_TTL, SCALE_REASON_MANUAL,
+                      ScaleDecision)
 from .manager import ShuffleManager
 from .messages import HASH_PART, Combiner, Msgs, PartFn
 from .obs import ShuffleReport, build_report
@@ -112,6 +115,12 @@ from .vectorized import run_shuffle_vectorized, vectorize_decline
 
 EXECUTION_MODES = ("auto", "threaded", "fresh")
 RESILIENCE_MODES = ("off", "detect", "recover")
+# "off" = fixed topology (the pre-elastic behaviour, and the default);
+# "auto" = BacklogPolicy drives scale-out/in from admission backlog;
+# "manual" = scaling happens only on request_scale_out()/request_scale_in()
+# (or the immediate scale_out()/scale_in() ops calls) — deterministic, for
+# tests and operators.
+ELASTIC_MODES = ("off", "auto", "manual")
 BALANCE_MODES = ("off", "auto")
 STREAMING_MODES = ("off", "auto")
 # Which replay data plane "auto" execution prefers on a cache hit:
@@ -278,6 +287,8 @@ class TenantClient:
             "tenant": self.tenant_id,
             "bytes": snap["bytes_per_tenant"].get(self.tenant_id, 0),
             "cost_s": snap["cost_per_tenant"].get(self.tenant_id, 0.0),
+            "burst_worker_s": self._cluster.registry.burst_usage(
+                self.tenant_id),
         }
 
     def cache_stats(self) -> dict:
@@ -326,7 +337,14 @@ class TeShuCluster:
                  admission: str = "wfair",
                  admission_rate: float = 0.05,
                  tracing: bool = False,
-                 span_capacity: int = 8192):
+                 span_capacity: int = 8192,
+                 elastic: str = "off",
+                 elastic_level: str | None = None,
+                 elastic_max_workers: int | None = None,
+                 elastic_backlog: int = 4,
+                 elastic_cooldown_s: float = 0.0,
+                 elastic_hysteresis: int = 2,
+                 elastic_ttl_s: float | None = None):
         _check_mode("execution", execution, EXECUTION_MODES)
         _check_mode("executor", executor, EXECUTORS)
         _check_mode("resilience", resilience, RESILIENCE_MODES)
@@ -334,6 +352,7 @@ class TeShuCluster:
         _check_mode("streaming", streaming, STREAMING_MODES)
         _check_mode("storage", storage, STORAGE_MODES)
         _check_mode("admission", admission, POLICIES)
+        _check_mode("elastic", elastic, ELASTIC_MODES)
         self.topology = topology
         self.cluster = LocalCluster(topology)
         self.manager = ShuffleManager(journal_path=journal_path,
@@ -403,10 +422,24 @@ class TeShuCluster:
         self._m_batched = m.counter(
             "teshu_batched_dispatches_total",
             "Vmapped multi-submission jax dispatches by template")
+        self._m_scale_events = m.counter(
+            "teshu_scale_events_total", "Elastic scale events by kind/reason")
         # per-shuffle decision log (the always-on substrate of explain()),
         # bounded like the owner-tag table
         self._reports: "OrderedDict[int, dict]" = OrderedDict()
         self._reports_lock = threading.Lock()
+        # ---- elastic topology -----------------------------------------------
+        self.elastic = elastic
+        if elastic == "off":
+            self._elastic = None
+        else:
+            policy = ManualPolicy() if elastic == "manual" else BacklogPolicy(
+                backlog_coflows=elastic_backlog,
+                cooldown_s=elastic_cooldown_s,
+                hysteresis=elastic_hysteresis)
+            self._elastic = ElasticCoordinator(
+                self, policy, LoadMonitor(), level=elastic_level,
+                max_workers=elastic_max_workers, ttl_s=elastic_ttl_s)
 
     # ---- tenants --------------------------------------------------------------
     def tenant(self, tenant_id: str = DEFAULT_TENANT, *,
@@ -468,6 +501,63 @@ class TeShuCluster:
     def plan_cache(self) -> PlanCache:
         return self.manager.plan_cache
 
+    # ---- elastic topology ------------------------------------------------------
+    @property
+    def elastic_epoch(self) -> int:
+        """The topology epoch: 0 forever on a fixed cluster, +1 per scale
+        event on an elastic one (part of every plan key past epoch 0)."""
+        return 0 if self._elastic is None else self._elastic.epoch
+
+    def _epoch(self) -> int:
+        return 0 if self._elastic is None else self._elastic.epoch
+
+    def _require_elastic(self) -> ElasticCoordinator:
+        if self._elastic is None:
+            raise RuntimeError("cluster is not elastic (elastic='off')")
+        return self._elastic
+
+    def scale_out(self, groups: int = 1, *,
+                  reason: str = SCALE_REASON_MANUAL,
+                  tenants: tuple = ()) -> tuple[int, ...]:
+        """Ops hook: grow the cluster NOW (between batches).  Returns the new
+        burst worker ids.  For scaling *inside* a pending batch use
+        :meth:`request_scale_out` (manual mode)."""
+        return self._require_elastic().scale_out(groups, reason=reason,
+                                                 tenants=tenants)
+
+    def scale_in(self, workers=None, *,
+                 reason: str = SCALE_REASON_MANUAL) -> tuple[int, ...]:
+        """Ops hook: gracefully drain burst workers NOW (all of them when
+        ``workers`` is None).  Returns the ids removed."""
+        return self._require_elastic().scale_in(workers, reason=reason)
+
+    def request_scale_out(self, groups: int = 1, *,
+                          after_coflows: int = 0) -> None:
+        """Manual mode: arm a scale-out that fires at the first coflow
+        boundary of the next ``run_pending`` pass where ``after_coflows``
+        coflows have already executed (0 = before the first coflow)."""
+        el = self._require_elastic()
+        if not isinstance(el.policy, ManualPolicy):
+            raise RuntimeError("request_scale_out requires elastic='manual'")
+        el.policy.request(ScaleDecision(action="grow",
+                                        reason=SCALE_REASON_MANUAL,
+                                        groups=groups), after_coflows)
+
+    def request_scale_in(self, workers: tuple = (), *,
+                         after_coflows: int = 0) -> None:
+        """Manual mode: arm a graceful scale-in ((), the default, drains all
+        burst workers) for a coflow boundary or the pass-end idle point."""
+        el = self._require_elastic()
+        if not isinstance(el.policy, ManualPolicy):
+            raise RuntimeError("request_scale_in requires elastic='manual'")
+        el.policy.request(ScaleDecision(action="shrink",
+                                        reason=SCALE_REASON_MANUAL,
+                                        workers=tuple(workers)), after_coflows)
+
+    def scale_events(self) -> list[dict]:
+        """Every scale event (and denial) since construction, oldest first."""
+        return [] if self._elastic is None else list(self._elastic.events)
+
     # ---- telemetry -------------------------------------------------------------
     def _collect_gauges(self):
         """Registry collector: gauges read from their canonical sources at
@@ -475,7 +565,14 @@ class TeShuCluster:
         never dual-written, so they can't drift from the sources."""
         snap = self.cluster.ledger.snapshot()
         out = [("teshu_modelled_time_seconds", {}, float(snap["modelled_time_s"])),
-               ("teshu_bytes_total", {}, float(snap["total_bytes"]))]
+               ("teshu_bytes_total", {}, float(snap["total_bytes"])),
+               ("teshu_cluster_workers", {}, float(self.topology.num_workers))]
+        el = self._elastic
+        if el is not None:
+            out.append(("teshu_burst_workers", {}, float(len(el.burst))))
+            for t, s in self.registry.burst_usage().items():
+                out.append(("teshu_burst_worker_seconds", {"tenant": t},
+                            float(s)))
         for t, b in snap.get("bytes_per_tenant", {}).items():
             out.append(("teshu_bytes_per_tenant", {"tenant": t}, float(b)))
         for lvl, b in snap.get("bytes_per_level", {}).items():
@@ -592,8 +689,25 @@ class TeShuCluster:
     def _run_pending_locked(self, policy: str
                             ) -> "dict[int, ShuffleResult | Exception]":
         subs = self._admission.drain()
+        el = self._elastic
+        n_events0 = len(el.events) if el is not None else 0
+        if el is not None:
+            el.monitor.record(
+                ts=self.cluster.ledger.modelled_time(),
+                queue_depth=len(subs),
+                pending_coflows=len({s.coflow_id for s in subs}),
+                tenant_bytes=self.cluster.ledger.tenant_bytes())
         if not subs:
+            # quiescent poll: the only place TTL expiry and policy-driven
+            # scale-in run when no work is queued
+            self._elastic_idle()
             return {}
+        if el is not None:
+            # boundary 0 (before any coflow) + re-target queued "all workers"
+            # coflows BEFORE the scheduler and the jax batch probe see their
+            # destination sets
+            self._elastic_boundary(0, len({s.coflow_id for s in subs}), subs)
+            el.rebalance(subs)
         weights = self.registry.effective_weights(
             self.cluster.ledger.tenant_bytes())
         reqs = [CoflowRequest(
@@ -613,7 +727,13 @@ class TeShuCluster:
         failures: dict[int, str] = {}
         ccts: dict[tuple[str, str], float] = {}
         tracer = self.obs.tracer
-        for e in entries:
+        for i, e in enumerate(entries):
+            if el is not None and i > 0:
+                # mid-batch boundary: the policy may grow the cluster between
+                # coflows; later coflows are re-targeted onto burst workers
+                remaining = [s for e2 in entries[i:]
+                             for s in by_coflow.get(e2.coflow_id, ())]
+                self._elastic_boundary(i, len(entries) - i, remaining)
             for s in by_coflow.get(e.coflow_id, ()):
                 client = self._clients[s.tenant]
                 wait = max(0.0, time.monotonic() - s.ts) if s.ts else 0.0
@@ -637,6 +757,15 @@ class TeShuCluster:
             jx = sys.modules.get("repro.core.jaxplan")
             if jx is not None:
                 jx.finish_batches(batch_handles, self.cluster.ledger)
+        if el is not None:
+            # close the pass with a realized-CCT sample, then the pass-end
+            # idle point (TTL expiry + policy scale-in hysteresis tick)
+            el.monitor.record(
+                ts=self.cluster.ledger.modelled_time(),
+                queue_depth=len(self._admission), pending_coflows=0,
+                tenant_bytes=self.cluster.ledger.tenant_bytes(),
+                ccts=tuple(ccts.values()))
+            self._elastic_idle()
         self._last_schedule = {
             "policy": policy,
             "weights": {t: float(w) for t, w in sorted(weights.items())},
@@ -647,7 +776,66 @@ class TeShuCluster:
             "mean_cct_s": float(np.mean(list(ccts.values()))) if ccts else 0.0,
             "makespan_s": max(ccts.values(), default=0.0),
         }
+        if el is not None:
+            self._last_schedule["scale_events"] = el.events[n_events0:]
         return results
+
+    # ---- elastic hooks ---------------------------------------------------------
+    def _elastic_boundary(self, executed: int, pending: int,
+                          remaining) -> None:
+        """One policy evaluation at a coflow boundary (run_pending only)."""
+        el = self._elastic
+        if el is None:
+            return
+        d = el.policy.evaluate(el.monitor, pending_coflows=pending,
+                               executed_coflows=executed,
+                               at_capacity=el.at_capacity(),
+                               has_burst=el.has_burst(), now=el.now())
+        self._apply_decision(d, remaining)
+
+    def _elastic_idle(self) -> None:
+        """Quiescent point: expire TTL'd burst workers, then let the policy
+        drain idle ones (both are graceful drains, never kills)."""
+        el = self._elastic
+        if el is None:
+            return
+        expired = el.expired()
+        if expired:
+            el.scale_in(expired, reason=SCALE_IN_TTL)
+        d = el.policy.idle(el.monitor, has_burst=el.has_burst(), now=el.now())
+        self._apply_decision(d, ())
+
+    def _apply_decision(self, d: ScaleDecision, remaining) -> None:
+        el = self._elastic
+        if d.action == "grow":
+            tenants = tuple(sorted({s.tenant for s in remaining}))
+            if el.scale_out(max(1, d.groups), reason=d.reason,
+                            tenants=tenants):
+                el.rebalance(remaining)
+        elif d.action == "shrink":
+            if el.scale_in(d.workers or None, reason=d.reason):
+                el.rebalance(remaining)
+        elif d.action == "deny":
+            el.deny(d.reason)
+
+    def _repair_relevant(self, key: tuple, tenant: str) -> bool:
+        """Could a repair scan possibly find a candidate for this miss?
+
+        ``try_repair`` used to scan the tenant's namespace on *every* miss of
+        a resilience-enabled cluster — including the common cold miss on a
+        healthy, never-scaled topology, where no candidate can exist by
+        construction (every cached key carries this same topology tag).
+        Cheap predicate instead: an elastic epoch is active, the cluster
+        carries fault state (lost/slow workers leave full-worker-set
+        relatives behind), or the namespace holds plans under a *different*
+        (topology tag, srcs) pair — the shared-cache degraded-service and
+        participant-subset cases."""
+        if self._epoch() > 0:
+            return True
+        if (self.cluster.failed_workers or self.cluster.worker_delays
+                or self.cluster.fault_injections):
+            return True
+        return self.plan_cache.has_repair_relatives(key, tenant)
 
     def _prepare_batches(self, subs) -> tuple[list, list[dict]]:
         """Group drained submissions that will replay on the jax executor
@@ -693,7 +881,8 @@ class TeShuCluster:
                            stats_signature(s.bufs, part_fn, comb_fn, rate,
                                            balance=balance,
                                            skew_threshold=skew_threshold,
-                                           streaming="off", stream=None))
+                                           streaming="off", stream=None),
+                           epoch=self._epoch())
             plan = self.plan_cache.peek(key, s.tenant)
             if plan is None or plan.stream is not None:
                 continue
@@ -789,7 +978,8 @@ class TeShuCluster:
                        stats_signature(bufs, part_fn, comb_fn, rate,
                                        balance=balance,
                                        skew_threshold=args.skew_threshold,
-                                       streaming=streaming, stream=chunk))
+                                       streaming=streaming, stream=chunk),
+                       epoch=self._epoch())
         tracer = self.obs.tracer
         # the root span: a no-op _NULL_SPAN when tracing is off, a real
         # context-managed span (children nest via the thread-local stack) when on
@@ -806,10 +996,12 @@ class TeShuCluster:
                 plan = self.plan_cache.get(key, tenant)
                 cache_info = {"outcome": "hit"} if plan is not None else None
             repaired = False
-            if plan is None and execution != "fresh" and resilience != "off":
+            if (plan is None and execution != "fresh"
+                    and (resilience != "off" or self._elastic is not None)
+                    and self._repair_relevant(key, tenant)):
                 # no plan for this exact scenario — maybe a healthy-topology
-                # (or full-worker-set) relative exists that repair can adapt
-                # (within this tenant's namespace only)
+                # (or full-worker-set, or stale-epoch) relative exists that
+                # repair can adapt (within this tenant's namespace only)
                 plan = try_repair(self.plan_cache, key, self.topology,
                                   part_fn=part_fn, tenant=tenant,
                                   tracer=tracer)
@@ -827,6 +1019,11 @@ class TeShuCluster:
             self._note(args.shuffle_id, tenant=tenant, template=template_id,
                        execution=execution, requested_executor=executor,
                        cache=cache_info)
+            if self._epoch() > 0:
+                self._note(args.shuffle_id, elastic={
+                    "epoch": self._elastic.epoch,
+                    "workers": self.topology.num_workers,
+                    "burst": list(self._elastic.burst_workers())})
             args.plan = plan
             # a cached plan replays the chunking policy it froze; a fresh
             # streamed run uses the resolved knobs (frozen at compile time)
@@ -853,7 +1050,7 @@ class TeShuCluster:
                 try:
                     if resilience == "off":
                         res = self._run_plain(args, bufs, key, execution,
-                                              executor)
+                                              executor, repaired)
                     else:
                         res = self._run_resilient(
                             args, bufs, key, execution, resilience, repaired,
@@ -980,13 +1177,14 @@ class TeShuCluster:
                          tenant=args.tenant, **drift)
 
     def _run_plain(self, args: ShuffleArgs, bufs: dict[int, Msgs], key: tuple,
-                   execution: str, executor: str = "vectorized"
-                   ) -> ShuffleResult:
+                   execution: str, executor: str = "vectorized",
+                   repaired: bool = False) -> ShuffleResult:
         if args.plan is None:
             res = run_shuffle(self.cluster, args, bufs, manager=self.manager)
             self._compile(args, key, res)
             return res
         res = self._execute(args, bufs, execution, executor)
+        res.repaired = repaired
         # Drift check: measured reductions from this cached run vs the plan's
         # baseline; a drifted entry is dropped so the next call re-instantiates.
         self._observe(args, key, res)

@@ -361,6 +361,28 @@ class ShuffleStore:
                 self._cv.wait()
         return len(batch)
 
+    def drain_workers(self, wids) -> tuple[int, int]:
+        """Synchronously flush every staged block whose *source* is one of
+        ``wids``; returns ``(blocks, bytes)`` written.
+
+        The elastic scale-in handoff: a drained worker's staged PART outputs
+        must reach the backend before the worker leaves the topology, so
+        durable recovery can still serve them.  Blocks the background flusher
+        already picked up are waited out — when this returns, nothing of the
+        victims' data remains in volatile staging.
+        """
+        victims = set(wids)
+        with self._lock:
+            batch = self._drain_locked(
+                [k for k in self._staged if k.src in victims])
+        nbytes = sum(len(b) for _, b in batch)
+        if batch:
+            self._write_out(batch)
+        with self._lock:
+            while any(k.src in victims for k in self._writing):
+                self._cv.wait()
+        return len(batch), nbytes
+
     # -- read path ----------------------------------------------------------
 
     def get_block(self, tenant: str, shuffle_id: int, stage: str, src: int,

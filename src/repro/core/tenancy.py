@@ -68,6 +68,26 @@ class TenantRegistry:
     def __init__(self):
         self._lock = threading.Lock()
         self._tenants: dict[str, TenantSpec] = {}
+        # tenant -> cumulative burst worker-seconds (modelled): the elastic
+        # coordinator charges each scale-in victim's lifetime to the tenants
+        # whose backlog sponsored the scale-out
+        self._burst_seconds: dict[str, float] = {}
+
+    def charge_burst(self, tenant_id: str, seconds: float) -> None:
+        """Attribute ``seconds`` of burst-worker lifetime to ``tenant_id``."""
+        if seconds < 0:
+            raise ValueError(f"burst seconds must be >= 0: {seconds}")
+        with self._lock:
+            self._burst_seconds[tenant_id] = \
+                self._burst_seconds.get(tenant_id, 0.0) + float(seconds)
+
+    def burst_usage(self, tenant_id: str | None = None):
+        """Cumulative burst worker-seconds: one tenant's total, or the whole
+        table when ``tenant_id`` is None."""
+        with self._lock:
+            if tenant_id is not None:
+                return self._burst_seconds.get(tenant_id, 0.0)
+            return dict(self._burst_seconds)
 
     def register(self, tenant_id: str, *, quota: int | None = None,
                  priority: float | None = None,

@@ -119,6 +119,46 @@ class NetworkTopology:
         """Hashable identity for plan caching (template instantiation key)."""
         return tuple(dataclasses.astuple(lv) for lv in self.levels)
 
+    # ---- elastic resizing ----------------------------------------------------
+    def with_workers(self, n: int) -> "NetworkTopology":
+        """A copy of this topology whose global worker set has ``n`` workers.
+
+        Only the outermost level's ``group_size`` changes: worker ids are
+        dense, coordinates are floor divisions, so inner-level group
+        membership of every existing worker is untouched and the new workers
+        slot into the (possibly partial) trailing groups.  The fingerprint
+        differs only in its last tuple — exactly what plan repair's
+        changed-level analysis expects from a grown or shrunk cluster.
+        """
+        if n < 1:
+            raise ValueError(f"worker count must be >= 1: {n}")
+        last = dataclasses.replace(self.levels[-1], group_size=n)
+        return NetworkTopology(levels=self.levels[:-1] + (last,))
+
+    def grow(self, groups: int = 1, level: str | None = None
+             ) -> "NetworkTopology":
+        """Add ``groups`` whole groups of burst workers at ``level``.
+
+        ``level`` names the boundary whose group granularity the new workers
+        arrive in (a whole server, a whole rack); default is the innermost
+        level.  The outermost level cannot be the grow granularity — its one
+        group *is* the cluster.
+        """
+        if groups < 1:
+            raise ValueError(f"groups must be >= 1: {groups}")
+        lv = self.levels[0] if level is None else self.level(level)
+        if lv.name == self.levels[-1].name:
+            raise ValueError(
+                f"cannot grow at the outermost level {lv.name!r}")
+        return self.with_workers(self.num_workers + groups * lv.group_size)
+
+    def shrink(self, workers: int) -> "NetworkTopology":
+        """Remove the ``workers`` highest-numbered workers (drain-in)."""
+        if workers < 1 or workers >= self.num_workers:
+            raise ValueError(
+                f"can remove 1..{self.num_workers - 1} workers: {workers}")
+        return self.with_workers(self.num_workers - workers)
+
 
 # ---------------------------------------------------------------------------
 # Constructors

@@ -71,16 +71,61 @@ def diagnose_shuffle(mgr: ShuffleManager, sid: int,
     }
 
 
+_SCALE_KINDS = ("scale_out", "scale_in", "drain_handoff")
+
+
+def diagnose_cluster(recs) -> dict | None:
+    """The cluster-scope elastic timeline: scale events, drain handoffs, and
+    each burst worker's lifetime (schema v3 records carry ``shuffle_id`` -1 —
+    they belong to the cluster, not to any one shuffle).  None when the
+    journal holds no scale records."""
+    scale = sorted((r for r in recs if r.kind in _SCALE_KINDS),
+                   key=lambda r: r.ts)
+    if not scale:
+        return None
+    events, handoffs = [], []
+    born: dict[int, float] = {}
+    lifetimes: dict[int, float | None] = {}
+    for r in scale:
+        info = r.info or {}
+        ts = info.get("ts", r.ts)       # modelled ts when the event carries it
+        if r.kind == "drain_handoff":
+            handoffs.append(dict(info))
+            continue
+        events.append(dict(info, kind=r.kind))
+        for w in info.get("workers", []):
+            if r.kind == "scale_out":
+                born[w] = ts
+                lifetimes[w] = None     # still alive unless a scale_in follows
+            elif w in born:
+                lifetimes[w] = round(ts - born.pop(w), 6)
+    return {
+        "shuffle_id": None,
+        "kind": "cluster",
+        "scale_events": events,
+        "drain_handoffs": handoffs,
+        "burst_worker_lifetimes": {str(w): s
+                                   for w, s in sorted(lifetimes.items())},
+    }
+
+
 def diagnose(journal_path: str, *, shuffle_id: int | None = None,
              tenant: str | None = None,
              straggler_factor: float = 3.0) -> list[dict]:
     mgr = ShuffleManager.recover(journal_path)
     try:
         recs = mgr.records(tenant=tenant)
-        sids = sorted({r.shuffle_id for r in recs})
+        # -1 is the cluster-scope pseudo-id (scale/drain records); it gets
+        # its own timeline entry, never a per-shuffle verdict
+        sids = sorted({r.shuffle_id for r in recs if r.shuffle_id >= 0})
         if shuffle_id is not None:
             sids = [s for s in sids if s == shuffle_id]
-        return [diagnose_shuffle(mgr, s, straggler_factor) for s in sids]
+        out = [diagnose_shuffle(mgr, s, straggler_factor) for s in sids]
+        if shuffle_id is None:
+            cluster = diagnose_cluster(recs)
+            if cluster is not None:
+                out.append(cluster)
+        return out
     finally:
         mgr.close()
 
@@ -90,6 +135,22 @@ def render(reports: list[dict]) -> str:
         return "no matching shuffle records in the journal"
     out = []
     for r in reports:
+        if r.get("kind") == "cluster":
+            out.append("cluster elastic timeline:")
+            for e in r["scale_events"]:
+                out.append(
+                    f"  {e['kind']} [{e.get('reason', '?')}] workers "
+                    f"{e.get('workers', [])} -> size {e.get('size', '?')} "
+                    f"(epoch {e.get('epoch', '?')}, t={e.get('ts', 0):.4f}s)")
+            for h in r["drain_handoffs"]:
+                out.append(
+                    f"  drain handoff: workers {h.get('workers', [])} flushed "
+                    f"{h.get('blocks', 0)} block(s) / {h.get('bytes', 0)} "
+                    "bytes before removal")
+            for w, s in r["burst_worker_lifetimes"].items():
+                life = "still attached" if s is None else f"{s:.4f}s"
+                out.append(f"  burst worker {w}: {life}")
+            continue
         hdr = (f"shuffle {r['shuffle_id']} [{r['template'] or '?'}] "
                f"tenant={r['tenant'] or '?'}: {r['status'].upper()} "
                f"({r['attempts']} attempt(s))")

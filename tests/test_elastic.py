@@ -1,0 +1,525 @@
+"""Elastic topology: burst workers, mid-batch scale-out, graceful drain-in.
+
+Pins the PR-10 acceptance criteria:
+
+* a mid-batch scale-out (manual policy, ``after_coflows=1``) produces
+  byte-identical outputs to the same trace on a fixed cluster born at the
+  grown size, on both replay executors, with unchanged per-tenant ledger
+  byte lanes;
+* graceful scale-in loses zero staged store blocks (journal-asserted
+  ``drain_handoff``), charges burst worker-seconds to the sponsoring
+  tenants, and clears the victims' fault state;
+* scaling is O(1) for the plan cache: the epoch in the topology tag makes
+  stale plans unreachable without a namespace scan, and plan repair re-keys
+  them back (``epoch_rekey``) when the topology returns to a known shape;
+* a cold miss on a healthy, never-scaled cluster never triggers a repair
+  scan (the regression the ``has_repair_relatives`` gate exists for);
+* the failure detector and speculation work unchanged on a grown topology —
+  burst workers are first-class: they can straggle, die, and host backups;
+* journal schema v3 (``scale_out`` / ``scale_in`` / ``drain_handoff``)
+  round-trips, pre-elastic v2 journals still replay, and the doctor renders
+  the cluster elastic timeline.
+"""
+import json
+import os
+
+import pytest
+
+from conformance import (assert_identical, assert_msgs_identical, copy_bufs,
+                         make_bufs, make_topology)
+from repro.core import (DEFAULT_TENANT, ShuffleManager, TeShuCluster,
+                        TeShuService, datacenter, key_diff, plan_key,
+                        stats_signature)
+from repro.core.elastic import (HOLD, BacklogPolicy, LoadMonitor, ManualPolicy,
+                                SCALE_DENIED_COOLDOWN, SCALE_IN_IDLE,
+                                SCALE_IN_TTL, SCALE_OUT_BACKLOG,
+                                SCALE_REASON_MANUAL, ScaleDecision)
+from repro.core.manager import JOURNAL_VERSION
+from repro.core.plancache import split_topology_tag, topology_tag
+from repro.launch import doctor
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+W8 = tuple(range(8))
+W12 = tuple(range(12))
+
+
+def _bufs(workers, n=300, keys=64, seed=0):
+    return make_bufs(workers, "uniform", n=n, key_space=keys, seed=seed)
+
+
+def _grown_topo():
+    """The 8-worker conformance fabric grown by one rack = born-12 fabric."""
+    return datacenter(2, 2, 3, oversubscription=4.0)
+
+
+# ---------------------------------------------------------------------------
+# topology resizing
+# ---------------------------------------------------------------------------
+
+def test_topology_grow_shrink_roundtrip():
+    base = make_topology()
+    assert base.num_workers == 8
+    grown = base.grow(1, "rack")
+    assert grown.num_workers == 12
+    # a grown fabric is indistinguishable from one born at that size
+    assert grown.fingerprint() == _grown_topo().fingerprint()
+    # inner-level membership of existing workers is untouched
+    for w in W8:
+        assert grown.coords(w)[:2] == base.coords(w)[:2]
+    assert grown.shrink(4).fingerprint() == base.fingerprint()
+    assert base.with_workers(10).num_workers == 10
+    with pytest.raises(ValueError):
+        base.grow(0)
+    with pytest.raises(ValueError):
+        base.grow(1, "global")          # the outermost group IS the cluster
+    with pytest.raises(ValueError):
+        base.shrink(8)                  # can't remove the whole cluster
+    with pytest.raises(ValueError):
+        base.with_workers(0)
+
+
+def test_epoch_tagged_plan_keys():
+    topo = make_topology()
+    fp = topo.fingerprint()
+    assert topology_tag(topo, 0) == fp              # epoch 0 = legacy bare tag
+    tagged = topology_tag(topo, 2)
+    assert split_topology_tag(tagged) == (fp, 2)
+    assert split_topology_tag(fp) == (fp, 0)
+    k0 = plan_key("vanilla_pull", topo, W8, W8, ("sig",), epoch=0)
+    k2 = plan_key("vanilla_pull", topo, W8, W8, ("sig",), epoch=2)
+    assert k0 != k2
+    assert key_diff(k0, k2) == ["topology.epoch"]
+
+
+# ---------------------------------------------------------------------------
+# policies / signals (unit)
+# ---------------------------------------------------------------------------
+
+def test_load_monitor_signals():
+    mon = LoadMonitor(window=4)
+    with pytest.raises(ValueError):
+        LoadMonitor(window=1)
+    assert mon.latest() is None and mon.backlog_seconds() == 0.0
+    mon.record(ts=0.0, queue_depth=3, pending_coflows=3,
+               tenant_bytes={"ml": 0})
+    assert mon.backlog_seconds() == 0.0             # no realized CCT yet
+    mon.record(ts=2.0, queue_depth=0, pending_coflows=4,
+               tenant_bytes={"ml": 1000}, ccts=(0.5, 1.5))
+    assert mon.mean_cct() == 1.0
+    assert mon.backlog_seconds() == 4.0             # 4 pending x mean CCT 1.0
+    assert mon.byte_rates() == {"ml": 500.0}
+    for i in range(10):                             # bounded window
+        mon.record(ts=3.0 + i, queue_depth=0, pending_coflows=0)
+    assert len(mon.samples()) == 4
+
+
+def test_backlog_policy_grow_deny_hysteresis():
+    pol = BacklogPolicy(backlog_coflows=3, cooldown_s=10.0, hysteresis=2)
+    mon = LoadMonitor()
+    kw = dict(executed_coflows=0, at_capacity=False, has_burst=False)
+    assert pol.evaluate(mon, pending_coflows=2, now=0.0, **kw) is HOLD
+    d = pol.evaluate(mon, pending_coflows=3, now=0.0, **kw)
+    assert d.action == "grow" and d.reason == SCALE_OUT_BACKLOG
+    pol.note_scaled(0.0)
+    # cooldown: the backlog is still there but scaling is suppressed loudly
+    d = pol.evaluate(mon, pending_coflows=5, now=1.0, **kw)
+    assert d.action == "deny" and d.reason == SCALE_DENIED_COOLDOWN
+    # at capacity we hold quietly (there is nothing to deny)
+    assert pol.evaluate(mon, pending_coflows=5, now=100.0,
+                        executed_coflows=0, at_capacity=True,
+                        has_burst=True) is HOLD
+    # hysteresis: one idle poll never drains; two consecutive ones do
+    assert pol.idle(mon, has_burst=True, now=100.0) is HOLD
+    d = pol.idle(mon, has_burst=True, now=101.0)
+    assert d.action == "shrink" and d.reason == SCALE_IN_IDLE
+    # a boundary evaluation resets the idle streak
+    pol.evaluate(mon, pending_coflows=0, now=102.0, **kw)
+    assert pol.idle(mon, has_burst=True, now=103.0) is HOLD
+    # no burst workers -> nothing to shrink, streak stays flat
+    assert pol.idle(mon, has_burst=False, now=104.0) is HOLD
+
+
+def test_manual_policy_queue():
+    pol = ManualPolicy()
+    with pytest.raises(ValueError):
+        pol.request(ScaleDecision(action="hold"))
+    pol.request(ScaleDecision(action="grow", reason=SCALE_REASON_MANUAL,
+                              groups=1), after_coflows=1)
+    mon = LoadMonitor()
+    kw = dict(pending_coflows=3, at_capacity=False, has_burst=False, now=0.0)
+    assert pol.evaluate(mon, executed_coflows=0, **kw) is HOLD
+    d = pol.evaluate(mon, executed_coflows=1, **kw)
+    assert d.action == "grow"
+    assert pol.evaluate(mon, executed_coflows=2, **kw) is HOLD  # one-shot
+    # idle pops an armed decision regardless of its threshold
+    pol.request(ScaleDecision(action="shrink", reason=SCALE_REASON_MANUAL),
+                after_coflows=99)
+    assert pol.idle(mon, has_burst=True, now=0.0).action == "shrink"
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: mid-batch scale-out, byte-identical to a fixed cluster
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["vectorized", "jax"])
+def test_mid_batch_scale_out_byte_identical(executor):
+    base = [_bufs(W8, seed=10 + i) for i in range(3)]
+
+    el = TeShuCluster(make_topology(), execution="auto", executor=executor,
+                      elastic="manual", elastic_level="rack")
+    t_el = el.tenant("ml")
+    el_tickets = [t_el.submit("vanilla_pull", copy_bufs(base[i]), W8, W8,
+                              stage=f"s{i}") for i in range(3)]
+    el.request_scale_out(after_coflows=1)     # fires between coflow 0 and 1
+    el_res = el.run_pending(policy="fifo")
+
+    # the fixed reference: born at 12 workers, same trace with the widening
+    # the elastic run performed (coflow 0 narrow, 1 and 2 on everyone)
+    fx = TeShuCluster(_grown_topo(), execution="auto", executor=executor)
+    t_fx = fx.tenant("ml")
+    fx_tickets = [t_fx.submit("vanilla_pull", copy_bufs(base[i]), W8,
+                              W8 if i == 0 else W12, stage=f"s{i}")
+                  for i in range(3)]
+    fx_res = fx.run_pending(policy="fifo")
+
+    for i in range(3):
+        r_el, r_fx = el_res[el_tickets[i]], fx_res[fx_tickets[i]]
+        assert not isinstance(r_el, Exception)
+        assert sorted(r_el.bufs) == sorted(r_fx.bufs)
+        assert_identical(r_el.bufs, r_fx.bufs)
+    # coflows after the boundary really landed on the burst workers
+    assert sorted(el_res[el_tickets[0]].bufs) == list(W8)
+    assert sorted(el_res[el_tickets[1]].bufs) == list(W12)
+    # per-tenant ledger byte lanes are unchanged by elasticity
+    assert (el.cluster.ledger.tenant_bytes()
+            == fx.cluster.ledger.tenant_bytes())
+    # the realized schedule carries the scale event
+    events = el.last_schedule()["scale_events"]
+    assert [e["kind"] for e in events] == ["scale_out"]
+    assert events[0]["workers"] == [8, 9, 10, 11]
+    assert events[0]["size"] == 12 and events[0]["epoch"] == 1
+    assert el.elastic_epoch == 1
+    assert el.scale_events() == events
+
+    # warm pass B: the same narrow trace re-targets onto the full grown set
+    # and the widened coflows replay their pass-A plans on the requested
+    # engine -- cache keys (epoch included) survived the scale event
+    el_tickets_b = [t_el.submit("vanilla_pull", copy_bufs(base[i]), W8, W8,
+                                stage=f"s{i}") for i in range(3)]
+    el_res_b = el.run_pending(policy="fifo")
+    fx_tickets_b = [t_fx.submit("vanilla_pull", copy_bufs(base[i]), W8, W12,
+                                stage=f"s{i}") for i in range(3)]
+    fx_res_b = fx.run_pending(policy="fifo")
+    for i in range(3):
+        r_el, r_fx = el_res_b[el_tickets_b[i]], fx_res_b[fx_tickets_b[i]]
+        assert not isinstance(r_el, Exception)
+        assert_identical(r_el.bufs, r_fx.bufs)
+        assert sorted(r_el.bufs) == list(W12)
+    for i in (1, 2):                          # pass-A plans, requested engine
+        r = el_res_b[el_tickets_b[i]]
+        assert r.cached and r.engine == executor
+    assert el.last_schedule()["scale_events"] == []   # pass B never scaled
+
+
+def test_scale_requests_demand_manual_mode():
+    cl = TeShuCluster(make_topology())
+    with pytest.raises(RuntimeError):
+        cl.scale_out()
+    with pytest.raises(RuntimeError):
+        cl.request_scale_out()
+    assert cl.scale_events() == [] and cl.elastic_epoch == 0
+    auto = TeShuCluster(make_topology(), elastic="auto")
+    with pytest.raises(RuntimeError):
+        auto.request_scale_out()        # armed requests are manual-mode only
+    assert auto.scale_out() != ()       # the immediate ops hook always works
+
+
+# ---------------------------------------------------------------------------
+# O(1) invalidation + repair re-keying across epochs
+# ---------------------------------------------------------------------------
+
+def test_epoch_rekey_repairs_returning_topology():
+    cl = TeShuCluster(make_topology(), execution="auto",
+                      elastic="manual", elastic_level="rack")
+    t = cl.tenant("ml")
+    bufs = _bufs(W8)
+    first = t.shuffle("vanilla_pull", copy_bufs(bufs), W8, W8)
+    assert not first.cached
+    added = cl.scale_out(tenants=("ml",))
+    assert added == (8, 9, 10, 11)
+    assert cl.scale_in() == (8, 9, 10, 11)
+    # same fingerprint as at epoch 0, but the key's epoch makes the cached
+    # plan unreachable -- repair re-keys it instead of recompiling
+    assert cl.elastic_epoch == 2
+    again = t.shuffle("vanilla_pull", copy_bufs(bufs), W8, W8)
+    assert again.repaired and again.cached
+    assert_identical(first.bufs, again.bufs)
+    # and the re-keyed plan is a plain hit from now on
+    third = t.shuffle("vanilla_pull", copy_bufs(bufs), W8, W8)
+    assert third.cached and not third.repaired
+
+
+def test_cold_healthy_miss_never_scans_for_repair():
+    cl = TeShuCluster(make_topology(), execution="auto",
+                      resilience="recover")
+    t = cl.tenant("ml")
+    t.shuffle("vanilla_pull", _bufs(W8, seed=1), W8, W8)
+    t.shuffle("vanilla_pull", _bufs(W8, n=900, keys=16, seed=2), W8, W8)
+    # two cold misses on a healthy, never-scaled cluster: no candidate can
+    # exist by construction, so the repair path must not scan the namespace
+    assert cl.plan_cache.scans == 0
+    # sanity: a genuine repair scenario (survivor-subset resubmit) does scan
+    survivors = tuple(w for w in W8 if w != 3)
+    res = t.shuffle("vanilla_pull", _bufs(survivors, seed=1), survivors, W8)
+    assert cl.plan_cache.scans > 0
+    assert res.repaired
+
+
+# ---------------------------------------------------------------------------
+# graceful drain-in: zero lost blocks, burst accounting, clean fault state
+# ---------------------------------------------------------------------------
+
+def test_scale_in_drains_staged_blocks_and_charges_sponsors(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    cl = TeShuCluster(make_topology(), execution="auto",
+                      elastic="manual", elastic_level="rack",
+                      journal_path=path)
+    t = cl.tenant("ml")
+    cl.scale_out(tenants=("ml",))
+    bufs = _bufs(W12, seed=5)
+    t.shuffle("vanilla_pull", copy_bufs(bufs), W12, W12)   # modelled time > 0
+    # stage blocks whose *source* is a burst worker: the scale-in handoff
+    # must flush them to the backend before the worker leaves
+    parts9 = {0: bufs[9], 3: bufs[10]}
+    assert cl.store.put_parts("ml", 77, "late", 9, parts9)
+    assert cl.store.put_parts("ml", 77, "late", 1, {0: bufs[1]})
+    cl.delay_worker(10, 5.0)
+    cl.fail_worker(11)
+
+    removed = cl.scale_in()
+    assert removed == (8, 9, 10, 11)
+    assert cl.topology.num_workers == 8 and cl.elastic_epoch == 2
+    # zero staged blocks lost: the drained worker's data is still served
+    for d, m in parts9.items():
+        got = cl.store.get_block("ml", 77, "late", 9, d)
+        assert got is not None
+        assert_msgs_identical(got, m)
+    # journal-asserted handoff (cluster-scope pseudo shuffle id -1)
+    handoffs = cl.manager.records(-1, kind="drain_handoff")
+    assert len(handoffs) == 1
+    info = handoffs[0].info
+    assert info["workers"] == [8, 9, 10, 11]
+    assert info["blocks"] == 2 and info["bytes"] > 0
+    assert cl.manager.records(-1, kind="scale_in")
+    # burst worker-seconds are charged to the sponsoring tenant
+    assert cl.registry.burst_usage("ml") > 0.0
+    assert t.stats()["burst_worker_s"] == cl.registry.burst_usage("ml")
+    # removed ids leave no ghost fault state behind
+    assert 10 not in cl.cluster.worker_delays
+    assert 11 not in cl.cluster.failed_workers
+    # the journal replays the scale records (schema v3 round-trip)
+    cl.manager.close()
+    mgr = ShuffleManager.recover(path)
+    assert mgr.records(-1, kind="scale_out")
+    assert mgr.records(-1, kind="scale_in")
+    assert mgr.records(-1, kind="drain_handoff")
+    mgr.close()
+
+
+def test_scale_in_never_removes_base_workers():
+    cl = TeShuCluster(make_topology(), elastic="manual")
+    assert cl.scale_in() == ()                     # nothing bursting
+    cl.scale_out()
+    assert cl.scale_in(workers=(3, 4)) == ()       # base workers refused
+    assert cl.topology.num_workers > 8
+    assert cl.scale_in() != ()
+    assert cl.topology.num_workers == 8
+
+
+# ---------------------------------------------------------------------------
+# auto policy end-to-end: backlog grow, idle drain, cooldown deny, TTL
+# ---------------------------------------------------------------------------
+
+def test_auto_policy_grows_on_backlog_and_drains_idle():
+    cl = TeShuCluster(make_topology(), execution="auto", elastic="auto",
+                      elastic_level="server", elastic_backlog=2,
+                      elastic_hysteresis=1)
+    t = cl.tenant("ml")
+    tickets = [t.submit("vanilla_pull", _bufs(W8, seed=i), W8, W8,
+                        stage=f"s{i}") for i in range(3)]
+    res = cl.run_pending(policy="fifo")
+    assert all(not isinstance(res[tk], Exception) for tk in tickets)
+    events = cl.last_schedule()["scale_events"]
+    kinds = [e["kind"] for e in events]
+    assert kinds[0] == "scale_out"
+    assert events[0]["reason"] == SCALE_OUT_BACKLOG
+    assert kinds[-1] == "scale_in"
+    assert events[-1]["reason"] == SCALE_IN_IDLE
+    # every burst worker drained at the pass-end idle point
+    assert cl.topology.num_workers == 8
+    assert cl._elastic.burst == {}
+    # coflows admitted after the grow really ran wide
+    assert len(res[tickets[2]].bufs) > 8
+
+
+def test_auto_policy_denies_during_cooldown():
+    cl = TeShuCluster(make_topology(), execution="auto", elastic="auto",
+                      elastic_level="server", elastic_backlog=2,
+                      elastic_cooldown_s=1e9)
+    t = cl.tenant("ml")
+    for i in range(3):
+        t.submit("vanilla_pull", _bufs(W8, seed=i), W8, W8, stage=f"s{i}")
+    cl.run_pending(policy="fifo")
+    events = cl.last_schedule()["scale_events"]
+    kinds = [e["kind"] for e in events]
+    assert kinds[0] == "scale_out"                 # first grow is free
+    assert "deny" in kinds                         # later backlog suppressed
+    deny = next(e for e in events if e["kind"] == "deny")
+    assert deny["reason"] == SCALE_DENIED_COOLDOWN
+    assert kinds.count("scale_out") == 1
+
+
+def test_ttl_expiry_drains_at_idle_poll():
+    cl = TeShuCluster(make_topology(), elastic="manual",
+                      elastic_level="server", elastic_ttl_s=0.0)
+    cl.scale_out()
+    assert cl.topology.num_workers == 10
+    assert cl.run_pending() == {}                  # quiescent poll
+    assert cl.topology.num_workers == 8
+    assert [e["reason"] for e in cl.scale_events()
+            if e["kind"] == "scale_in"] == [SCALE_IN_TTL]
+
+
+def test_max_workers_caps_growth():
+    cl = TeShuCluster(make_topology(), elastic="manual",
+                      elastic_level="rack", elastic_max_workers=12)
+    assert cl.scale_out() == (8, 9, 10, 11)
+    assert cl.scale_out() == ()                    # at capacity: deny, no-op
+    assert cl.topology.num_workers == 12
+    assert cl.scale_events()[-1]["kind"] == "deny"
+
+
+# ---------------------------------------------------------------------------
+# detector / speculation on a grown topology (satellite 4)
+# ---------------------------------------------------------------------------
+
+def test_burst_worker_straggler_speculated():
+    cl = TeShuCluster(make_topology(), execution="threaded",
+                      resilience="recover", elastic="manual",
+                      elastic_level="rack")
+    t = cl.tenant("ml")
+    cl.scale_out(tenants=("ml",))
+    bufs = _bufs(W12, seed=9, n=800)
+    clean = t.shuffle("vanilla_pull", copy_bufs(bufs), W12, W12)
+    cl.delay_worker(10, 0.6)                       # a burst worker straggles
+    spec = t.shuffle("vanilla_pull", copy_bufs(bufs), W12, W12)
+    assert spec.attempts == 1
+    assert spec.recovery["speculated"] == [10]
+    assert cl.manager.records(kind="speculation")
+    assert_identical(clean.bufs, spec.bufs)
+
+
+def test_burst_worker_death_recovers():
+    cl = TeShuCluster(make_topology(), execution="threaded",
+                      resilience="recover", elastic="manual",
+                      elastic_level="rack")
+    t = cl.tenant("ml")
+    cl.scale_out(tenants=("ml",))
+    bufs = _bufs(W12, seed=11, n=800)
+    clean = t.shuffle("vanilla_pull", copy_bufs(bufs), W12, W12)
+    cl.fail_worker(9)                              # dead, not slow
+    rec = t.shuffle("vanilla_pull", copy_bufs(bufs), W12, W12)
+    assert rec.attempts == 2
+    assert rec.recovery["restarted"] == [9]
+    assert not cl.cluster.failed_workers
+    assert_identical(clean.bufs, rec.bufs)
+
+
+# ---------------------------------------------------------------------------
+# journal schema v3 + doctor timeline (satellites 1 & 2)
+# ---------------------------------------------------------------------------
+
+def test_journal_v3_and_pre_elastic_migration():
+    assert JOURNAL_VERSION == 3
+    fixture = os.path.join(FIXTURES, "pre_elastic_journal.jsonl")
+    mgr = ShuffleManager.recover(fixture)
+    recs = mgr.records()
+    assert len(recs) == 9
+    assert {r.version for r in recs} == {2}        # v2 lines replay verbatim
+    assert mgr.records(2, kind="restore")
+    assert mgr.progress(1)["pending"] == []
+    assert not mgr.records(kind="scale_out")       # and carry no v3 kinds
+    mgr.close()
+
+
+def test_doctor_renders_cluster_elastic_timeline(tmp_path, capsys):
+    path = str(tmp_path / "journal.jsonl")
+    cl = TeShuCluster(make_topology(), execution="auto", elastic="manual",
+                      elastic_level="rack", journal_path=path)
+    t = cl.tenant("ml")
+    cl.scale_out(tenants=("ml",))
+    t.shuffle("vanilla_pull", _bufs(W12, seed=3), W12, W12)
+    assert cl.store.put_parts("ml", 55, "late", 9, {0: _bufs(W8)[0]})
+    cl.scale_in()
+    cl.manager.close()
+
+    reports = doctor.diagnose(path)
+    cluster = [r for r in reports if r.get("kind") == "cluster"]
+    assert len(cluster) == 1
+    c = cluster[0]
+    assert c["shuffle_id"] is None
+    assert [e["kind"] for e in c["scale_events"]] == ["scale_out", "scale_in"]
+    assert len(c["drain_handoffs"]) == 1
+    assert c["drain_handoffs"][0]["blocks"] == 1
+    # every burst worker's lifetime is closed out by the scale-in
+    lifetimes = c["burst_worker_lifetimes"]
+    assert sorted(lifetimes) == ["10", "11", "8", "9"]
+    assert all(s is not None and s >= 0 for s in lifetimes.values())
+    # per-shuffle verdicts never absorb the cluster-scope pseudo id -1
+    assert all(r["shuffle_id"] >= 0 for r in reports
+               if r.get("kind") != "cluster")
+    # restricting to one shuffle drops the cluster entry
+    sid = next(r["shuffle_id"] for r in reports if r.get("kind") != "cluster")
+    only = doctor.diagnose(path, shuffle_id=sid)
+    assert all(r.get("kind") != "cluster" for r in only)
+
+    text = doctor.render(reports)
+    assert "cluster elastic timeline:" in text
+    assert "scale_out [manual]" in text
+    assert "drain handoff" in text
+    assert "burst worker 8" in text
+
+    assert doctor.main([path]) == 0
+    capsys.readouterr()
+    assert doctor.main([path, "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert any(r.get("kind") == "cluster" for r in payload)
+
+
+def test_explain_reports_elastic_epoch():
+    cl = TeShuCluster(make_topology(), execution="auto", elastic="manual",
+                      elastic_level="rack")
+    t = cl.tenant("ml")
+    cl.scale_out(tenants=("ml",))
+    t.shuffle("vanilla_pull", _bufs(W12, seed=7), W12, W12)
+    sid = max(r.shuffle_id for r in cl.manager.records() if r.shuffle_id >= 0)
+    rep = cl.explain(sid)
+    assert rep.elastic == {"epoch": 1, "workers": 12,
+                           "burst": [8, 9, 10, 11]}
+    assert any("elastically scaled topology" in line for line in rep.why())
+
+
+def test_scale_metrics_and_gauges():
+    cl = TeShuCluster(make_topology(), elastic="manual", elastic_level="rack")
+    cl.scale_out(tenants=("ml",))
+    m = cl.obs.metrics
+    assert m.get("teshu_scale_events_total",
+                 kind="scale_out", reason="manual") == 1.0
+    assert m.get("teshu_cluster_workers") == 12.0
+    assert m.get("teshu_burst_workers") == 4.0
+    cl.scale_in()
+    assert m.get("teshu_scale_events_total",
+                 kind="scale_in", reason="manual") == 1.0
+    assert m.get("teshu_cluster_workers") == 8.0
+    assert m.get("teshu_burst_workers") == 0.0
+    assert m.get("teshu_burst_worker_seconds", tenant="ml") >= 0.0
